@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On CPU these validate structure, not speed — the derived column carries the
+work size so §Roofline can relate them to TPU peak numbers.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def kernel_rows():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    from repro.kernels.pq_lut.ops import pq_lut, pq_lut_ref
+
+    q = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(32, 256, 4)).astype(np.float32))
+    t_k = _time(pq_lut, q, c)
+    t_r = _time(jax.jit(pq_lut_ref), q, c)
+    flops = 2 * 128 * 32 * 256 * 4
+    rows.append(("kernel_pq_lut", t_k * 1e6,
+                 f"ref_us={t_r*1e6:.0f};flops={flops}"))
+
+    from repro.kernels.pq_adc.ops import pq_adc, pq_adc_ref
+
+    lut = jnp.asarray(rng.normal(size=(128, 32, 256)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, size=(4096, 32)).astype(np.uint8))
+    t_k = _time(pq_adc, lut, codes)
+    t_r = _time(jax.jit(pq_adc_ref), lut, codes)
+    mxu_flops = 2 * 4096 * 128 * 256 * 32
+    rows.append(("kernel_pq_adc", t_k * 1e6,
+                 f"ref_us={t_r*1e6:.0f};mxu_flops={mxu_flops}"))
+
+    from repro.kernels.topk.ops import bitonic_topk, topk_ref
+
+    vals = jnp.asarray(rng.normal(size=(64, 1024)).astype(np.float32))
+    idxs = jnp.asarray(np.tile(np.arange(1024, dtype=np.int32), (64, 1)))
+    t_k = _time(lambda v, i: bitonic_topk(v, i, 128), vals, idxs)
+    t_r = _time(jax.jit(lambda v, i: topk_ref(v, i, 128)), vals, idxs)
+    rows.append(("kernel_topk", t_k * 1e6, f"ref_us={t_r*1e6:.0f};c=1024"))
+    return rows

@@ -1,0 +1,169 @@
+"""Shared benchmark substrate: cached index builds + modeled QPS/latency.
+
+Scale knobs via env: BENCH_N (points), BENCH_Q (queries), BENCH_P (servers).
+Indices are cached under artifacts/bench_cache keyed by their parameters;
+the global graph + PQ are shared between BatANN and ScatterGather (the
+paper builds both over the same partitioning method [12]).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import baton, partition as part_mod, pq, ref, scatter_gather, vamana
+from repro.core.state import envelope_bytes
+from repro.data import synth
+from repro.io_sim.disk import DEFAULT as COST
+
+BENCH_N = int(os.environ.get("BENCH_N", 20000))
+BENCH_Q = int(os.environ.get("BENCH_Q", 256))
+BENCH_P = int(os.environ.get("BENCH_P", 8))
+DATASET = os.environ.get("BENCH_DATASET", "deep")
+R = int(os.environ.get("BENCH_R", 32))
+CACHE = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                     "bench_cache")
+
+
+def _cache_path(tag: str) -> str:
+    os.makedirs(CACHE, exist_ok=True)
+    return os.path.join(CACHE, f"{tag}_{DATASET}_{BENCH_N}.npz")
+
+
+def dataset() -> synth.Dataset:
+    return synth.make_dataset(DATASET, n=BENCH_N, n_queries=BENCH_Q, seed=0)
+
+
+def global_graph(ds) -> vamana.VamanaGraph:
+    path = _cache_path(f"graph_r{R}")
+    if os.path.exists(path):
+        z = np.load(path)
+        return vamana.VamanaGraph(neighbors=z["neighbors"],
+                                  medoid=int(z["medoid"]), R=R, L_build=0,
+                                  alpha=1.2)
+    knn = ref.brute_force_knn(ds.vectors, ds.vectors, 17)[:, 1:]
+    g = vamana.build_from_knn(ds.vectors, knn, r=R, alpha=1.2)
+    np.savez(path, neighbors=g.neighbors, medoid=g.medoid)
+    return g
+
+
+def assignment(g, p: int) -> np.ndarray:
+    path = _cache_path(f"assign_p{p}")
+    if os.path.exists(path):
+        return np.load(path)["assign"]
+    a = part_mod.ldg_partition(g.neighbors, p, passes=3, seed=0)
+    np.savez(path, assign=a)
+    return a
+
+
+_INDEX_CACHE: dict = {}
+
+
+def baton_index(p: int | None = None) -> baton.BatonIndex:
+    p = p or BENCH_P
+    key = ("baton", p)
+    if key not in _INDEX_CACHE:
+        ds = dataset()
+        g = global_graph(ds)
+        a = assignment(g, p)
+        idx = baton.build_index(
+            ds.vectors, p=p, pq_m=24, pq_k=256, head_fraction=0.01,
+            seed=0, graph=g, assign=a,
+        )
+        _INDEX_CACHE[key] = (ds, idx)
+    return _INDEX_CACHE[key]
+
+
+def sg_index(p: int | None = None) -> scatter_gather.ScatterGatherIndex:
+    p = p or BENCH_P
+    key = ("sg", p)
+    if key not in _INDEX_CACHE:
+        ds = dataset()
+        g = global_graph(ds)
+        a = assignment(g, p)
+        # per-partition graphs with the same fast builder (same quality)
+        node2part, node2local, local2global, _ = part_mod.build_maps(a, p)
+        npmax = local2global.shape[1]
+        d = ds.vectors.shape[1]
+        pv = np.zeros((p, npmax, d), np.float32)
+        pn = np.full((p, npmax, R), -1, np.int32)
+        pm = np.zeros((p,), np.int32)
+        cb = pq.train(ds.vectors, m=24, k=256, seed=0)
+        codes = pq.encode(cb, ds.vectors)
+        pc = np.zeros((p, npmax, 24), np.uint8)
+        for pi in range(p):
+            ids = local2global[pi]
+            ok = ids >= 0
+            sub = ds.vectors[ids[ok]]
+            knn = ref.brute_force_knn(sub, sub, 17)[:, 1:]
+            gi = vamana.build_from_knn(sub, knn, r=R, alpha=1.2)
+            pv[pi, ok] = sub
+            pn[pi, ok] = gi.neighbors
+            pm[pi] = gi.medoid
+            pc[pi, ok] = codes[ids[ok]]
+        idx = scatter_gather.ScatterGatherIndex(
+            n=ds.n, p=p, dim=d, part_vectors=pv, part_neighbors=pn,
+            part_codes=pc, part_medoid=pm, local2global=local2global,
+            codebook=np.asarray(cb.centroids), assign=a,
+        )
+        _INDEX_CACHE[key] = (ds, idx)
+    return _INDEX_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# modeled throughput / latency (io_sim cost model; counters are exact)
+# ---------------------------------------------------------------------------
+
+
+def batann_model(stats: dict, p: int, L: int, pool: int, d: int):
+    env = envelope_bytes(d, L, pool)
+    qps = COST.cluster_qps(
+        n_servers=p,
+        reads_per_query=float(np.mean(stats["reads"])),
+        dist_comps_per_query=float(np.mean(stats["dist_comps"])),
+        inter_hops_per_query=float(np.mean(stats["inter_hops"])),
+        envelope_bytes=env,
+    )
+    lat = COST.query_latency_s(
+        hops=float(np.mean(stats["hops"])),
+        inter_hops=float(np.mean(stats["inter_hops"])),
+        reads=float(np.mean(stats["reads"])),
+        dist_comps=float(np.mean(stats["dist_comps"])),
+        envelope_bytes=env,
+    )
+    return qps, lat
+
+
+def sg_model(stats: dict, p: int):
+    qps = COST.cluster_qps(
+        n_servers=p,
+        reads_per_query=float(np.mean(stats["reads"])),
+        dist_comps_per_query=float(np.mean(stats["dist_comps"])),
+        inter_hops_per_query=2.0,          # scatter + gather messages
+        envelope_bytes=512,
+    )
+    # latency driven by the slowest partition (paper §6.5)
+    lat = COST.query_latency_s(
+        hops=float(np.mean(stats["max_part_hops"])),
+        inter_hops=2.0,
+        reads=float(np.mean(stats["reads"])),
+        dist_comps=float(np.mean(stats["dist_comps"])) /
+        max(COST.threads_per_server, 1),
+        envelope_bytes=512,
+    )
+    return qps, lat
+
+
+def recall_at_095(l_values, recalls, values):
+    """Interpolate `values` at recall 0.95 along the L sweep."""
+    recalls = np.asarray(recalls, float)
+    values = np.asarray(values, float)
+    if recalls.max() < 0.95:
+        return float(values[-1])
+    if recalls.min() >= 0.95:
+        return float(values[0])
+    i = int(np.searchsorted(recalls, 0.95))
+    r0, r1 = recalls[i - 1], recalls[i]
+    w = (0.95 - r0) / max(r1 - r0, 1e-9)
+    return float(values[i - 1] * (1 - w) + values[i] * w)

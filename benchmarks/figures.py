@@ -1,0 +1,265 @@
+"""One benchmark per paper table/figure (DESIGN.md §6 experiment index).
+
+Every function returns rows: (name, us_per_call, derived) where
+``us_per_call`` is the modeled per-query latency in microseconds (from
+exactly-counted events through the calibrated io_sim cost model) and
+``derived`` is the figure's headline quantity.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baton, ref, scatter_gather
+
+L_SWEEP = [24, 32, 48, 64, 96, 128]
+L_DEFAULT = 64
+
+_MEMO: dict = {}
+
+
+def _memo(fn):
+    def wrapped(*args, **kw):
+        key = (fn.__name__,) + args + tuple(sorted(kw.items()))
+        if key not in _MEMO:
+            _MEMO[key] = fn(*args, **kw)
+        return _MEMO[key]
+    return wrapped
+
+
+@_memo
+def _run_batann(p: int, L: int, w: int, slots: int = 32):
+    ds, idx = common.baton_index(p)
+    cfg = baton.BatonParams(L=L, W=w, k=10, pool=256, slots=slots,
+                            pair_cap=4, n_starts=4)
+    t0 = time.time()
+    ids, dists, stats = baton.run_simulated(idx, ds.queries, cfg)
+    wall = time.time() - t0
+    rec = ref.recall_at_k(ids, ds.gt, 10)
+    qps, lat = common.batann_model(stats, p, L, 256, ds.dim)
+    return {
+        "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
+        "wall_s": wall, "ds": ds,
+    }
+
+
+@_memo
+def _run_sg(p: int, L: int, w: int):
+    ds, idx = common.sg_index(p)
+    t0 = time.time()
+    ids, dists, stats = scatter_gather.run_simulated(idx, ds.queries, L=L,
+                                                     W=w, k=10)
+    wall = time.time() - t0
+    rec = ref.recall_at_k(ids, ds.gt, 10)
+    qps, lat = common.sg_model(stats, p)
+    return {
+        "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
+        "wall_s": wall,
+    }
+
+
+def fig3_inter_partition_hops():
+    """Fig. 3: hops vs inter-partition hops across server counts, W=1."""
+    rows = []
+    for p in (2, 4, common.BENCH_P):
+        r = _run_batann(p, L_DEFAULT, w=1)
+        hops = float(np.mean(r["stats"]["hops"]))
+        inter = float(np.mean(r["stats"]["inter_hops"]))
+        rows.append((
+            f"fig3_hops_p{p}", r["lat_s"] * 1e6,
+            f"hops={hops:.1f};inter={inter:.2f};frac={inter/hops:.3f}",
+        ))
+    return rows
+
+
+def fig4_w_ablation_hops():
+    """Fig. 4: W=8 cuts total AND inter-partition hops ~4x vs W=1."""
+    rows = []
+    base = None
+    for w in (1, 8):
+        r = _run_batann(common.BENCH_P, L_DEFAULT, w=w)
+        hops = float(np.mean(r["stats"]["hops"]))
+        inter = float(np.mean(r["stats"]["inter_hops"]))
+        if w == 1:
+            base = (hops, inter)
+        rows.append((
+            f"fig4_w{w}", r["lat_s"] * 1e6,
+            f"hops={hops:.1f};inter={inter:.2f}",
+        ))
+    rows.append((
+        "fig4_hop_reduction", 0.0,
+        f"hops_ratio={base[0]/max(float(np.mean(_run_batann(common.BENCH_P, L_DEFAULT, w=8)['stats']['hops'])),1e-9):.2f}",
+    ))
+    return rows
+
+
+def fig5_w_efficiency():
+    """Fig. 5: dist comps + disk I/O nearly identical for W=1 vs W=8."""
+    rows = []
+    vals = {}
+    for w in (1, 8):
+        r = _run_batann(common.BENCH_P, L_DEFAULT, w=w)
+        dcs = float(np.mean(r["stats"]["dist_comps"]))
+        reads = float(np.mean(r["stats"]["reads"]))
+        vals[w] = (dcs, reads)
+        rows.append((
+            f"fig5_w{w}", r["lat_s"] * 1e6,
+            f"dist_comps={dcs:.0f};reads={reads:.1f};recall={r['recall']:.3f}",
+        ))
+    rows.append((
+        "fig5_w8_vs_w1", 0.0,
+        f"dcs_ratio={vals[8][0]/vals[1][0]:.3f};reads_ratio={vals[8][1]/vals[1][1]:.3f}",
+    ))
+    return rows
+
+
+def fig7_single_server():
+    """Fig. 7: fixed-count inter-query balancing > 1-query-at-a-time.
+
+    Wall-clock on CPU for the vectorized state batch (our analogue of 8
+    states/thread) vs batch=1, same total queries.
+    """
+    ds, idx = common.baton_index(1)
+    rows = []
+    for slots, tag in ((1, "seq"), (32, "balanced")):
+        cfg = baton.BatonParams(L=L_DEFAULT, W=8, k=10, pool=256,
+                                slots=slots, n_starts=4)
+        t0 = time.time()
+        ids, _, stats = baton.run_simulated(idx, ds.queries[:64], cfg)
+        wall = time.time() - t0
+        rec = ref.recall_at_k(ids, ds.gt[:64], 10)
+        rows.append((
+            f"fig7_{tag}", wall / 64 * 1e6,
+            f"recall={rec:.3f};wall_qps={64/wall:.0f}",
+        ))
+    return rows
+
+
+def fig9_throughput_qps_recall():
+    """Fig. 8/9: QPS-recall curves; BatANN vs ScatterGather ratio @0.95."""
+    rows = []
+    for p in (max(2, common.BENCH_P // 2), common.BENCH_P):
+        b_rec, b_qps, s_rec, s_qps = [], [], [], []
+        for L in L_SWEEP:
+            rb = _run_batann(p, L, w=8)
+            rs = _run_sg(p, L, w=8)
+            b_rec.append(rb["recall"])
+            b_qps.append(rb["qps"])
+            s_rec.append(rs["recall"])
+            s_qps.append(rs["qps"])
+            rows.append((
+                f"fig9_p{p}_L{L}", rb["lat_s"] * 1e6,
+                f"batann_recall={rb['recall']:.3f};batann_qps={rb['qps']:.0f};"
+                f"sg_recall={rs['recall']:.3f};sg_qps={rs['qps']:.0f}",
+            ))
+        q_b = common.recall_at_095(L_SWEEP, b_rec, b_qps)
+        q_s = common.recall_at_095(L_SWEEP, s_rec, s_qps)
+        rows.append((
+            f"fig9_p{p}_ratio@0.95", 0.0,
+            f"batann_qps={q_b:.0f};sg_qps={q_s:.0f};ratio={q_b/max(q_s,1e-9):.2f}",
+        ))
+    return rows
+
+
+def fig10_efficiency():
+    """Fig. 10: BatANN work ~= single server; ScatterGather work ~= P x."""
+    rows = []
+    r1 = _run_batann(1, L_DEFAULT, w=8)
+    d1 = float(np.mean(r1["stats"]["dist_comps"]))
+    i1 = float(np.mean(r1["stats"]["reads"]))
+    for p in (max(2, common.BENCH_P // 2), common.BENCH_P):
+        rb = _run_batann(p, L_DEFAULT, w=8)
+        rs = _run_sg(p, L_DEFAULT, w=8)
+        db = float(np.mean(rb["stats"]["dist_comps"]))
+        ds_ = float(np.mean(rs["stats"]["dist_comps"]))
+        ib = float(np.mean(rb["stats"]["reads"]))
+        is_ = float(np.mean(rs["stats"]["reads"]))
+        rows.append((
+            f"fig10_p{p}", rb["lat_s"] * 1e6,
+            f"batann_dcs={db:.0f}({db/d1:.2f}x1srv);sg_dcs={ds_:.0f}"
+            f"({ds_/d1:.2f}x1srv);batann_reads={ib:.0f};sg_reads={is_:.0f}",
+        ))
+    return rows
+
+
+def fig11_scalability():
+    """Fig. 11: near-linear QPS scaling for BatANN at 0.95 recall."""
+    rows = []
+    qps1 = None
+    for p in (1, 2, 4, common.BENCH_P):
+        recs, qpss = [], []
+        for L in L_SWEEP:
+            r = _run_batann(p, L, w=8)
+            recs.append(r["recall"])
+            qpss.append(r["qps"])
+        q = common.recall_at_095(L_SWEEP, recs, qpss)
+        if p == 1:
+            qps1 = q
+        eff = q / (p * qps1)
+        rows.append((
+            f"fig11_p{p}", 0.0, f"qps@0.95={q:.0f};scaling_eff={eff:.2f}",
+        ))
+    return rows
+
+
+def fig12_latency_recall():
+    """Fig. 12: latency-recall at low send rate (no queueing)."""
+    rows = []
+    for L in L_SWEEP:
+        rb = _run_batann(common.BENCH_P, L, w=8)
+        rs = _run_sg(common.BENCH_P, L, w=8)
+        rows.append((
+            f"fig12_L{L}", rb["lat_s"] * 1e6,
+            f"batann_lat_ms={rb['lat_s']*1e3:.2f}@r{rb['recall']:.3f};"
+            f"sg_lat_ms={rs['lat_s']*1e3:.2f}@r{rs['recall']:.3f}",
+        ))
+    return rows
+
+
+def fig13_latency_vs_send_rate():
+    """Fig. 13: latency vs send rate (first-order M/M/1 queueing on the
+    bottleneck resource).  BatANN stays flat to ~its max QPS; ScatterGather
+    collapses early."""
+    rb = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
+    rs = _run_sg(common.BENCH_P, L_DEFAULT, w=8)
+    rows = []
+    for frac in (0.1, 0.5, 0.8, 0.95):
+        for tag, r in (("batann", rb), ("sg", rs)):
+            rate = frac * r["qps"]
+            rho = rate / r["qps"]
+            mean = r["lat_s"] / max(1 - rho, 1e-3)
+            p99 = r["lat_s"] * (1 + 3 * rho) / max(1 - rho, 1e-3)
+            rows.append((
+                f"fig13_{tag}_rate{frac:.2f}", mean * 1e6,
+                f"rate_qps={rate:.0f};mean_ms={mean*1e3:.2f};"
+                f"p99_ms={p99*1e3:.2f}",
+            ))
+    return rows
+
+
+def fig14_w_throughput():
+    """Fig. 14: W=8 beats W=1 on modeled QPS and latency."""
+    rows = []
+    vals = {}
+    for w in (1, 8):
+        recs, qpss, lats = [], [], []
+        for L in L_SWEEP:
+            r = _run_batann(common.BENCH_P, L, w=w)
+            recs.append(r["recall"])
+            qpss.append(r["qps"])
+            lats.append(r["lat_s"])
+        q = common.recall_at_095(L_SWEEP, recs, qpss)
+        lat = common.recall_at_095(L_SWEEP, recs, lats)
+        vals[w] = (q, lat)
+        rows.append((
+            f"fig14_w{w}", lat * 1e6, f"qps@0.95={q:.0f};lat_ms={lat*1e3:.2f}",
+        ))
+    rows.append((
+        "fig14_w8_gain", 0.0,
+        f"qps_ratio={vals[8][0]/max(vals[1][0],1e-9):.2f};"
+        f"lat_ratio={vals[1][1]/max(vals[8][1],1e-9):.2f}",
+    ))
+    return rows

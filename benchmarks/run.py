@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (and writes artifacts/bench.csv).
+Scale via env: BENCH_N / BENCH_Q / BENCH_P (defaults 20000/256/8).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import figures
+    from benchmarks.bench_kernels import kernel_rows
+
+    suites = [
+        ("fig3", figures.fig3_inter_partition_hops),
+        ("fig4", figures.fig4_w_ablation_hops),
+        ("fig5", figures.fig5_w_efficiency),
+        ("fig7", figures.fig7_single_server),
+        ("fig9", figures.fig9_throughput_qps_recall),
+        ("fig10", figures.fig10_efficiency),
+        ("fig11", figures.fig11_scalability),
+        ("fig12", figures.fig12_latency_recall),
+        ("fig13", figures.fig13_latency_vs_send_rate),
+        ("fig14", figures.fig14_w_throughput),
+        ("kernels", kernel_rows),
+    ]
+    all_rows = []
+    print("name,us_per_call,derived")
+    for tag, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            rows = [(f"{tag}_FAILED", -1.0, "error")]
+        for name, us, derived in rows:
+            line = f"{name},{us:.1f},{derived}"
+            print(line, flush=True)
+            all_rows.append(line)
+        print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
+
+    out = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "bench.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(all_rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

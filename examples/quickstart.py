@@ -1,0 +1,58 @@
+"""Quickstart: build a BatANN index and search it.
+
+    PYTHONPATH=src python examples/quickstart.py [n_points]
+
+Builds a global Vamana graph over synthetic DEEP-like vectors, partitions it
+across 4 simulated servers, runs the distributed baton search, and reports
+recall@10 + the paper's efficiency counters.
+"""
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import baton, ref
+from repro.data import synth
+from repro.io_sim.disk import DEFAULT as COST
+from repro.core.state import envelope_bytes
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 4000
+    print(f"== BatANN quickstart: {n} points, 4 servers ==")
+    ds = synth.make_dataset("deep", n=n, n_queries=64, seed=0)
+
+    t0 = time.time()
+    index = baton.build_index(ds.vectors, p=4, r=24, l_build=48, pq_m=24,
+                              pq_k=256, head_fraction=0.02)
+    print(f"index built in {time.time()-t0:.0f}s "
+          f"(global Vamana R=24, LDG partitioning, PQ-24, 1% head index)")
+
+    cfg = baton.BatonParams(L=48, W=8, k=10, pool=256, slots=32)
+    t0 = time.time()
+    ids, dists, stats = baton.run_simulated(index, ds.queries, cfg)
+    print(f"searched {len(ds.queries)} queries in {time.time()-t0:.1f}s "
+          f"(single-host simulation of 4 servers)")
+
+    rec = ref.recall_at_k(ids, ds.gt, 10)
+    print(f"\nrecall@10          : {rec:.3f}")
+    print(f"hops/query         : {stats['hops'].mean():.1f}")
+    print(f"inter-partition    : {stats['inter_hops'].mean():.2f} "
+          f"({stats['inter_hops'].sum()/stats['hops'].sum():.1%} of hops)")
+    print(f"disk reads/query   : {stats['reads'].mean():.1f}")
+    print(f"dist comps/query   : {stats['dist_comps'].mean():.0f}")
+    env = envelope_bytes(ds.dim, cfg.L, cfg.pool)
+    qps = COST.cluster_qps(4, stats['reads'].mean(),
+                           stats['dist_comps'].mean(),
+                           stats['inter_hops'].mean(), env)
+    lat = COST.query_latency_s(stats['hops'].mean(),
+                               stats['inter_hops'].mean(),
+                               stats['reads'].mean(),
+                               stats['dist_comps'].mean(), env)
+    print(f"modeled cluster QPS: {qps:.0f} (paper's c6620 cost model)")
+    print(f"modeled latency    : {lat*1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

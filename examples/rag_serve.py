@@ -1,0 +1,49 @@
+"""End-to-end serving driver (the paper's kind: serve batched requests).
+
+A RAG pipeline: BatANN retrieves document chunks from the distributed
+disk-based index; a small LM tenant generates continuations conditioned on
+the retrieved context — the deployment that motivates the paper (§1).
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.serving import rag
+
+
+def main():
+    print("== building RAG system: 2000 docs, 4-server BatANN index, "
+          "smoke-scale qwen2 generator ==")
+    t0 = time.time()
+    system = rag.build_demo(n_docs=2000, d=64, p=4, seed=0)
+    print(f"built in {time.time()-t0:.0f}s")
+
+    rng = np.random.default_rng(7)
+    # batched requests: queries near known documents
+    n2p, n2l = system.index.node2part, system.index.node2local
+    doc_vecs = np.stack([
+        system.index.part_vectors[n2p[i], n2l[i]] for i in range(2000)
+    ])
+    targets = rng.integers(0, 2000, size=8)
+    queries = doc_vecs[targets] + 0.05 * rng.normal(size=(8, 64)).astype(
+        np.float32)
+    prompts = rng.integers(0, system.lm_cfg.vocab_size, size=(8, 4)).astype(
+        np.int32)
+
+    t0 = time.time()
+    tokens, retrieved, stats = system.answer(queries, prompts, max_new=8)
+    dt = time.time() - t0
+    hit = (retrieved[:, 0] == targets).mean()
+    print(f"\nserved 8 requests in {dt:.1f}s")
+    print(f"retrieval rank-1 hit rate : {hit:.0%}")
+    print(f"retrieval hops/query      : {stats['hops'].mean():.1f} "
+          f"(inter-partition {stats['inter_hops'].mean():.2f})")
+    print(f"generated tokens shape    : {tokens.shape}")
+    print(f"sample continuation ids   : {tokens[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

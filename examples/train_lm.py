@@ -1,0 +1,30 @@
+"""Train a small LM tenant with the full substrate: AdamW, grad accumulation,
+checkpoint/restart (kill it mid-run and re-run: it resumes bit-exactly).
+
+    PYTHONPATH=src python examples/train_lm.py [steps]
+"""
+
+import sys
+
+from repro.configs.registry import get_smoke_config
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 60
+    cfg = get_smoke_config("qwen2-0.5b")
+    tcfg = TrainConfig(
+        batch=8, seq_len=64, steps=steps, microbatches=2,
+        ckpt_every=20, ckpt_dir="artifacts/train_lm_ckpt", log_every=10,
+        opt=opt_mod.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps),
+    )
+    print(f"== training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) "
+          f"for {steps} steps, grad-accum x{tcfg.microbatches}, "
+          f"checkpoints -> {tcfg.ckpt_dir} ==")
+    _, _, losses = train(cfg, tcfg)
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen2-0.5b",
+    "qwen3-14b",
+    "qwen1.5-0.5b",
+    "gemma3-27b",
+    "mamba2-130m",
+    "kimi-k2-1t-a32b",
+    "grok-1-314b",
+    "hymba-1.5b",
+    "musicgen-large",
+    "internvl2-2b",
+    "batann-serve",          # the paper's own workload as a config
+]
+
+_MODULES = {i: "repro.configs." + i.replace("-", "_").replace(".", "_")
+            for i in ARCH_IDS}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str):
+    """Reduced same-family config for CPU smoke tests."""
+    return importlib.import_module(_MODULES[arch_id]).smoke_config()

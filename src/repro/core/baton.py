@@ -1,0 +1,642 @@
+"""BatANN distributed state-passing search (§4) — the paper's contribution.
+
+Execution model (TPU adaptation of the paper's asynchronous TCP relay):
+
+* Every device owns one graph partition (its "server"/"SSD shard").
+* Each device holds a fixed number S of query-state *slots* — the paper's
+  fixed-count inter-query balancing (§5): finished slots are refilled from a
+  local query queue immediately.
+* The search runs in **super-steps**:
+    1. refill   — start queued queries in free slots (head-index entry points
+                  precomputed per §4.2; beam seeded with PQ distances),
+    2. advance  — inner ``while_loop``: every resident state explores all
+                  *local* nodes among its top-W frontier (Alg. 2) until every
+                  state is done or blocked on remote data,
+    3. route    — blocked states are handed off to the owner of their top
+                  frontier node over a capacity-bounded ``all_to_all`` (the
+                  paper's opportunistic message batching).  A deterministic
+                  credit protocol (want/free all_gather -> waterfill grant)
+                  guarantees receivers always have free slots: ungranted
+                  states simply retry next super-step (backpressure).
+                  Done states return to the query's home device over a
+                  *separate result channel* carrying only (qid, top-k,
+                  counters) — the paper's client-return arrow ③ and also its
+                  §8 "Reducing Message Size" optimization.  Results need no
+                  slots, so the done channel always drains (liveness).
+    4. deliver  — arrived results are written to the output arrays.
+* Global termination: psum of (resident states + queued queries) == 0.
+
+The same per-device functions are driven two ways: ``run_simulated`` (vmap
+over the partition axis — single-host benchmarks; bit-identical math) and
+``make_spmd_fn`` (shard_map over a real mesh axis — multi-device tests and
+the 512-chip dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import beam_search, head_index, partition as part_mod, pq, vamana
+from repro.core.beam_search import Shard, select_frontier, step_disk
+from repro.core.state import INF, NO_ID, Counters, QueryState, empty_state
+
+
+# ---------------------------------------------------------------------------
+# configuration & index
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatonParams:
+    L: int = 64              # beam width (candidate pool length)
+    W: int = 8               # I/O pipeline width (§4.4)
+    k: int = 10              # results per query
+    pool: int = 256          # rerank pool (full-precision result list)
+    slots: int = 16          # S — resident states per device (§5: 8/thread)
+    pair_cap: int = 4        # C — states per (src,dst) pair per super-step
+    result_cap: int = 8      # result-channel capacity per (src,dst) pair
+    n_starts: int = 4        # head-index entry points
+    max_local_steps: int = 128
+    max_supersteps: int = 512
+
+    @property
+    def refill_headroom(self) -> int:
+        # keep a few slots free for in-transit states (liveness, §DESIGN-7)
+        return max(1, self.pair_cap)
+
+
+@dataclasses.dataclass
+class BatonIndex:
+    """Host-side index bundle (numpy); per-partition leaves stacked on axis 0."""
+
+    n: int
+    p: int                     # number of partitions / devices
+    dim: int
+    part_vectors: np.ndarray   # (P, Npmax, d) float32
+    part_neighbors: np.ndarray  # (P, Npmax, R) int32 global ids
+    codes: np.ndarray          # (N, M) uint8 — replicated
+    codebook: np.ndarray       # (M, K, dsub) float32 — replicated
+    node2part: np.ndarray      # (N,) int32 — replicated
+    node2local: np.ndarray     # (N,) int32 — replicated
+    head_vectors: np.ndarray   # replicated head index (§4.2)
+    head_neighbors: np.ndarray
+    head_sample_ids: np.ndarray
+    head_medoid: int
+    assign: np.ndarray         # (N,) partition assignment
+    graph: "vamana.VamanaGraph"
+    part_nbr_codes: "np.ndarray | None" = None  # (P, Npmax, R, M) sector mode
+
+    def stacked_shards(self, sector_codes: bool = False) -> Shard:
+        """Shard pytree: (P,)-leading per-partition leaves + replicated maps.
+
+        ``sector_codes=True`` uses the AiSAQ layout: neighbor codes ride in
+        the sectors and the replicated code array shrinks to a placeholder.
+        """
+        if sector_codes:
+            assert self.part_nbr_codes is not None, "build with codes_mode='sector'"
+            return Shard(
+                vectors=jnp.asarray(self.part_vectors),
+                neighbors=jnp.asarray(self.part_neighbors),
+                codes=jnp.zeros((1, self.codes.shape[1]), jnp.uint8),
+                node2part=jnp.asarray(self.node2part),
+                node2local=jnp.asarray(self.node2local),
+                nbr_codes=jnp.asarray(self.part_nbr_codes),
+            )
+        return Shard(
+            vectors=jnp.asarray(self.part_vectors),
+            neighbors=jnp.asarray(self.part_neighbors),
+            codes=jnp.asarray(self.codes),
+            node2part=jnp.asarray(self.node2part),
+            node2local=jnp.asarray(self.node2local),
+        )
+
+    def head_starts(self, queries: np.ndarray, n_starts: int):
+        ids, dists = head_index.search(
+            jnp.asarray(self.head_vectors), jnp.asarray(self.head_neighbors),
+            jnp.asarray(self.head_sample_ids), jnp.asarray(self.head_medoid),
+            jnp.asarray(queries, dtype=jnp.float32), n_starts=n_starts,
+        )
+        return np.asarray(ids), np.asarray(dists)
+
+
+def build_index(
+    vectors: np.ndarray,
+    p: int,
+    r: int = 32,
+    l_build: int = 64,
+    alpha: float = 1.2,
+    pq_m: int = 16,
+    pq_k: int = 256,
+    head_fraction: float = 0.01,
+    partitioner: str = "ldg",
+    seed: int = 0,
+    graph: "vamana.VamanaGraph | None" = None,
+    codes_mode: str = "replicated",    # or "sector" (AiSAQ layout, §Perf)
+    assign: "np.ndarray | None" = None,  # pre-computed partition assignment
+) -> BatonIndex:
+    """Build the global graph, partition it, lay out per-partition sectors."""
+    vectors = np.ascontiguousarray(vectors, np.float32)
+    n, d = vectors.shape
+    if graph is None:
+        graph = vamana.build(vectors, r=r, l_build=l_build, alpha=alpha, seed=seed)
+
+    if assign is not None:
+        assign = np.asarray(assign, np.int32)
+    elif partitioner == "ldg":
+        assign = part_mod.ldg_partition(graph.neighbors, p, seed=seed)
+    elif partitioner == "kmeans":
+        assign = part_mod.balanced_kmeans(vectors, p, seed=seed)
+    else:
+        assign = part_mod.random_partition(n, p, seed=seed)
+
+    node2part, node2local, local2global, _ = part_mod.build_maps(assign, p)
+    npmax = local2global.shape[1]
+    part_vectors = np.zeros((p, npmax, d), np.float32)
+    part_neighbors = np.full((p, npmax, graph.neighbors.shape[1]), NO_ID, np.int32)
+    for pi in range(p):
+        ids = local2global[pi]
+        ok = ids >= 0
+        part_vectors[pi, ok] = vectors[ids[ok]]
+        part_neighbors[pi, ok] = graph.neighbors[ids[ok]]
+
+    cb = pq.train(vectors, m=pq_m, k=pq_k, seed=seed)
+    codes = pq.encode(cb, vectors)
+    head = head_index.build(vectors, fraction=head_fraction, seed=seed)
+
+    part_nbr_codes = None
+    if codes_mode == "sector":
+        part_nbr_codes = np.zeros(
+            part_neighbors.shape + (pq_m,), np.uint8
+        )
+        safe = np.clip(part_neighbors, 0, n - 1)
+        part_nbr_codes[:] = codes[safe]
+
+    return BatonIndex(
+        n=n, p=p, dim=d,
+        part_vectors=part_vectors, part_neighbors=part_neighbors,
+        codes=codes, codebook=np.asarray(cb.centroids),
+        node2part=node2part, node2local=node2local,
+        head_vectors=head.vectors, head_neighbors=head.neighbors,
+        head_sample_ids=head.sample_ids, head_medoid=head.medoid,
+        assign=assign, graph=graph, part_nbr_codes=part_nbr_codes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-device state & messages
+# ---------------------------------------------------------------------------
+
+
+class DeviceState(NamedTuple):
+    states: QueryState         # every leaf has leading (S,) axis
+    queue_emb: jnp.ndarray     # (Q, d)
+    queue_qid: jnp.ndarray     # (Q,)  -1 = padding
+    queue_starts: jnp.ndarray  # (Q, n_starts) global entry ids
+    queue_start_d: jnp.ndarray  # (Q, n_starts) head-index exact distances
+    queue_head: jnp.ndarray    # () — next queue row to start
+    out_ids: jnp.ndarray       # (Q, k)
+    out_dists: jnp.ndarray     # (Q, k)
+    out_stats: jnp.ndarray     # (Q, 4): hops, inter_hops, dist_comps, reads
+    delivered: jnp.ndarray     # (Q,) bool
+
+
+class ResultMsg(NamedTuple):
+    """Client-return message ③ — tiny, slot-free (always deliverable)."""
+
+    qid: jnp.ndarray           # () int32, -1 = empty
+    ids: jnp.ndarray           # (k,)
+    dists: jnp.ndarray         # (k,)
+    stats: jnp.ndarray         # (4,)
+
+
+def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
+    return ResultMsg(
+        qid=jnp.full(shape, -1, jnp.int32),
+        ids=jnp.full(shape + (cfg.k,), NO_ID, jnp.int32),
+        dists=jnp.full(shape + (cfg.k,), INF, jnp.float32),
+        stats=jnp.zeros(shape + (4,), jnp.int32),
+    )
+
+
+def _batched_empty_states(d: int, cfg: BatonParams, shape) -> QueryState:
+    one = empty_state(d, cfg.L, cfg.pool)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, shape + x.shape), one)
+
+
+def init_device_state(queries, qids, starts, start_d,
+                      cfg: BatonParams) -> DeviceState:
+    q, d = queries.shape
+    return DeviceState(
+        states=_batched_empty_states(d, cfg, (cfg.slots,)),
+        queue_emb=jnp.asarray(queries, jnp.float32),
+        queue_qid=jnp.asarray(qids, jnp.int32),
+        queue_starts=jnp.asarray(starts, jnp.int32),
+        queue_start_d=jnp.asarray(start_d, jnp.float32),
+        queue_head=jnp.int32(0),
+        out_ids=jnp.full((q, cfg.k), NO_ID, jnp.int32),
+        out_dists=jnp.full((q, cfg.k), INF, jnp.float32),
+        out_stats=jnp.zeros((q, 4), jnp.int32),
+        delivered=jnp.zeros((q,), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# super-step phases (pure, per-device; vmap/shard_map applied by drivers)
+# ---------------------------------------------------------------------------
+
+
+def refill(dev: DeviceState, shard: Shard, codebook, cfg: BatonParams, my_part):
+    """Start queued queries in free slots (paper §5 fixed-count balancing)."""
+    q_total = dev.queue_qid.shape[0]
+    free = ~dev.states.active                                   # (S,)
+    n_active = jnp.sum(dev.states.active.astype(jnp.int32))
+    # keep headroom for in-transit states, but never starve: at least one
+    # slot is always refillable (covers the slots=1 sequential baseline)
+    usable = max(cfg.slots - cfg.refill_headroom, 1)
+    budget = jnp.maximum(usable - n_active, 0)
+    n_left = jnp.maximum(q_total - dev.queue_head, 0)
+    n_start = jnp.minimum(budget, n_left)
+
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1          # (S,)
+    take = free & (free_rank < n_start)
+    row = jnp.clip(dev.queue_head + free_rank, 0, q_total - 1)
+
+    emb = dev.queue_emb[row]                                    # (S, d)
+    qid = dev.queue_qid[row]
+    starts = dev.queue_starts[row]                              # (S, n_starts)
+    take = take & (qid >= 0)
+    # entry-point distances come from the (full-precision, in-memory) head
+    # index — no global PQ lookup needed, which keeps the sector-codes mode
+    # free of any replicated code array.
+    sd = jnp.where(starts == NO_ID, INF, dev.queue_start_d[row])
+
+    def seed_one(st, e, s_ids, s_d, q, t):
+        L, P = cfg.L, cfg.pool
+        bi, bd, be = beam_search.merge_into_beam(
+            jnp.full((L,), NO_ID, jnp.int32), jnp.full((L,), INF, jnp.float32),
+            jnp.zeros((L,), bool), s_ids, s_d,
+        )
+        new = QueryState(
+            query=e, beam_ids=bi, beam_dists=bd, beam_expl=be,
+            pool_ids=jnp.full((P,), NO_ID, jnp.int32),
+            pool_dists=jnp.full((P,), INF, jnp.float32),
+            counters=Counters.zeros(),
+            active=jnp.asarray(True), done=jnp.asarray(False),
+            home=jnp.int32(my_part), qid=q,
+        )
+        return jax.tree.map(lambda a, b: jnp.where(t, a, b), new, st)
+
+    states = jax.vmap(seed_one)(dev.states, emb, starts, sd, qid, take)
+    return dev._replace(states=states, queue_head=dev.queue_head + n_start)
+
+
+def _frontier_ownership(state: QueryState, shard: Shard, cfg: BatonParams, my_part):
+    """Alg. 2: which top-W frontier nodes are local; where to hand off."""
+    fpos, fids, fvalid = select_frontier(state.beam_ids, state.beam_expl, cfg.W)
+    owner = shard.node2part[jnp.clip(fids, 0, shard.node2part.shape[0] - 1)]
+    local = fvalid & (owner == my_part)
+    dest = jnp.where(fvalid[0], owner[0], my_part)  # owner of top node (line 5)
+    return fpos, local, jnp.any(local), jnp.any(fvalid), dest
+
+
+def local_advance(dev: DeviceState, shard: Shard, luts, cfg: BatonParams, my_part):
+    """Inner loop: explore local frontier nodes until every resident state is
+    blocked on remote data or done (Alg. 2 lines 2-3, SIMD over slots)."""
+
+    def one(st, lut):
+        fpos, local, any_local, any_frontier, _ = _frontier_ownership(
+            st, shard, cfg, my_part
+        )
+        runnable = st.active & ~st.done & any_frontier & any_local
+        mask = local & runnable
+        new = step_disk(st, shard, lut, mask, fpos)
+        _, _, v = select_frontier(new.beam_ids, new.beam_expl, 1)
+        new = new._replace(done=new.done | ~jnp.any(v))
+        # scalar `runnable` broadcasts against every leaf shape
+        return jax.tree.map(lambda a, b: jnp.where(runnable, a, b), new, st), runnable
+
+    def cond(carry):
+        _, it, progressed = carry
+        return progressed & (it < cfg.max_local_steps)
+
+    def body(carry):
+        states, it, _ = carry
+        states, ran = jax.vmap(one)(states, luts)
+        return states, it + 1, jnp.any(ran)
+
+    states, _, _ = jax.lax.while_loop(
+        cond, body, (dev.states, jnp.int32(0), jnp.asarray(True))
+    )
+
+    def finalize(st):
+        _, _, v = select_frontier(st.beam_ids, st.beam_expl, 1)
+        return st._replace(done=st.done | (st.active & ~jnp.any(v)))
+
+    return dev._replace(states=jax.vmap(finalize)(states))
+
+
+def deliver_local(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
+    """Write out results of done states homed here; free their slots."""
+    st = dev.states
+    ready = st.active & st.done & (st.home == my_part)
+    row = jnp.where(ready, st.qid // jnp.int32(n_parts), dev.out_ids.shape[0])
+    k = cfg.k
+    out_ids = dev.out_ids.at[row].set(st.pool_ids[:, :k], mode="drop")
+    out_dists = dev.out_dists.at[row].set(st.pool_dists[:, :k], mode="drop")
+    stats = jnp.stack(
+        [st.counters.hops, st.counters.inter_hops,
+         st.counters.dist_comps, st.counters.reads], axis=1,
+    )
+    out_stats = dev.out_stats.at[row].set(stats, mode="drop")
+    delivered = dev.delivered.at[row].set(True, mode="drop")
+    states = st._replace(active=st.active & ~ready)
+    return dev._replace(
+        states=states, out_ids=out_ids, out_dists=out_dists,
+        out_stats=out_stats, delivered=delivered,
+    )
+
+
+def pack_results(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
+    """Done states homed elsewhere -> (P, Cr) result messages; free slots."""
+    S, Cr = cfg.slots, cfg.result_cap
+    st = dev.states
+    ready = st.active & st.done & (st.home != my_part)
+    d_idx = jnp.where(ready, st.home, n_parts)
+    onehot = jax.nn.one_hot(d_idx, n_parts + 1, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    my_rank = jnp.sum(rank * onehot, axis=1)
+    granted = ready & (my_rank < Cr)
+    c_idx = jnp.where(granted, my_rank, Cr)
+
+    buf = _empty_results(cfg, (n_parts, Cr))
+    stats = jnp.stack(
+        [st.counters.hops, st.counters.inter_hops,
+         st.counters.dist_comps, st.counters.reads], axis=1,
+    )
+    msg = ResultMsg(
+        qid=jnp.where(granted, st.qid, -1),
+        ids=st.pool_ids[:, : cfg.k],
+        dists=st.pool_dists[:, : cfg.k],
+        stats=stats,
+    )
+    buf = jax.tree.map(
+        lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, msg
+    )
+    states = st._replace(active=st.active & ~granted)
+    return buf, dev._replace(states=states)
+
+
+def merge_results(dev: DeviceState, inc: ResultMsg, cfg: BatonParams, n_parts: int):
+    """Write received result messages into the output arrays."""
+    ok = inc.qid >= 0
+    row = jnp.where(ok, inc.qid // jnp.int32(n_parts), dev.out_ids.shape[0])
+    return dev._replace(
+        out_ids=dev.out_ids.at[row].set(inc.ids, mode="drop"),
+        out_dists=dev.out_dists.at[row].set(inc.dists, mode="drop"),
+        out_stats=dev.out_stats.at[row].set(inc.stats, mode="drop"),
+        delivered=dev.delivered.at[row].set(True, mode="drop"),
+    )
+
+
+def plan_routes(dev: DeviceState, shard: Shard, cfg: BatonParams, my_part):
+    """Hand-off destination per slot (-1 = stays resident)."""
+
+    def one(st):
+        _, _, _, _, dest = _frontier_ownership(st, shard, cfg, my_part)
+        want_move = st.active & ~st.done & (dest != my_part)
+        return jnp.where(want_move, dest, jnp.int32(-1))
+
+    return jax.vmap(one)(dev.states)                            # (S,)
+
+
+def grant_matrix(want: jnp.ndarray, free: jnp.ndarray, pair_cap: int):
+    """Deterministic waterfill: want (P,P) [src,dst], free (P,) -> grant (P,P).
+
+    Every device computes the identical matrix, so senders and receivers
+    agree without extra communication (credit-based flow control)."""
+    w = jnp.minimum(want, pair_cap)
+    cum = jnp.cumsum(w, axis=0) - w                              # senders before me
+    return jnp.clip(jnp.minimum(w, free[None, :] - cum), 0, pair_cap)
+
+
+def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
+               cfg: BatonParams, n_parts: int):
+    """Move granted states into a (P, C, ...) send buffer; free their slots."""
+    C = cfg.pair_cap
+    movable = dest >= 0
+    d_idx = jnp.where(movable, dest, n_parts)                    # n_parts = drop
+    onehot = jax.nn.one_hot(d_idx, n_parts + 1, dtype=jnp.int32)  # (S, P+1)
+    rank = jnp.cumsum(onehot, axis=0) - onehot                   # per-dest rank
+    my_rank = jnp.sum(rank * onehot, axis=1)                     # (S,)
+    granted = movable & (my_rank < grant_row[jnp.clip(d_idx, 0, n_parts - 1)])
+    c_idx = jnp.where(granted, my_rank, C)                       # C = drop
+
+    # count the hand-off on the state being sent (Fig. 3/4 metric)
+    states = dev.states
+    inter = states.counters.inter_hops + granted.astype(jnp.int32)
+    states = states._replace(counters=states.counters._replace(inter_hops=inter))
+    # only shipped copies are active on arrival
+    shipped = states._replace(active=states.active & granted)
+
+    buf = _batched_empty_states(dev.queue_emb.shape[1], cfg, (n_parts, C))
+    buf = jax.tree.map(
+        lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, shipped
+    )
+    states = states._replace(active=states.active & ~granted)
+    return buf, dev._replace(states=states)
+
+
+def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams):
+    """Place incoming states (flat (P*C,) batch) into free slots."""
+    S = cfg.slots
+    inc_active = incoming.active                                 # (P*C,)
+    inc_rank = jnp.cumsum(inc_active.astype(jnp.int32)) - 1      # among active
+    free = ~dev.states.active                                    # (S,)
+    free_pos = jnp.sort(jnp.where(free, jnp.arange(S), S))       # first n_free ok
+    tgt = jnp.where(inc_active, free_pos[jnp.clip(inc_rank, 0, S - 1)], S)
+
+    states = jax.tree.map(
+        lambda slot_leaf, inc_leaf: slot_leaf.at[tgt].set(inc_leaf, mode="drop"),
+        dev.states, incoming,
+    )
+    return dev._replace(states=states)
+
+
+def _superstep_local(dev, shard, codebook, cfg, my_part, n_parts):
+    """Phases 1-2 + route planning (everything before communication)."""
+    dev = refill(dev, shard, codebook, cfg, my_part)
+    luts = pq.build_lut(codebook, dev.states.query)              # (S, M, K)
+    dev = local_advance(dev, shard, luts, cfg, my_part)
+    dev = deliver_local(dev, cfg, my_part, n_parts)
+    res_buf, dev = pack_results(dev, cfg, my_part, n_parts)
+    dest = plan_routes(dev, shard, cfg, my_part)                 # (S,)
+    want = jnp.zeros((n_parts,), jnp.int32).at[
+        jnp.where(dest >= 0, dest, 0)
+    ].add((dest >= 0).astype(jnp.int32))
+    # conservative: a state counts as occupying its slot until actually sent
+    free = cfg.slots - jnp.sum(dev.states.active.astype(jnp.int32))
+    n_active = jnp.sum(dev.states.active.astype(jnp.int32))
+    n_queue = jnp.maximum(dev.queue_qid.shape[0] - dev.queue_head, 0)
+    return dev, res_buf, dest, want, free, n_active + n_queue
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def _split_round_robin(index, queries, cfg):
+    P = index.p
+    B = queries.shape[0]
+    pad = (-B) % P
+    if pad:
+        queries = np.concatenate([queries, queries[:pad]], 0)
+    Bp = queries.shape[0]
+    qids = np.arange(Bp, dtype=np.int32)
+    starts, start_dists = index.head_starts(queries, cfg.n_starts)
+    per = Bp // P
+    q_dev = np.zeros((P, per, queries.shape[1]), np.float32)
+    qid_dev = np.full((P, per), -1, np.int32)
+    st_dev = np.full((P, per, cfg.n_starts), NO_ID, np.int32)
+    sd_dev = np.full((P, per, cfg.n_starts), np.inf, np.float32)
+    for d in range(P):
+        sel = qids[qids % P == d]
+        q_dev[d, : len(sel)] = queries[sel]
+        qid_dev[d, : len(sel)] = sel
+        st_dev[d, : len(sel)] = starts[sel]
+        sd_dev[d, : len(sel)] = start_dists[sel]
+    return q_dev, qid_dev, st_dev, sd_dev, B, Bp, per
+
+
+def _collect(devs, qid_dev, cfg, B, Bp, P, per, n_supersteps):
+    out_ids = np.asarray(devs.out_ids).reshape(P * per, -1)
+    out_dists = np.asarray(devs.out_dists).reshape(P * per, -1)
+    out_stats = np.asarray(devs.out_stats).reshape(P * per, 4)
+    qid_flat = np.asarray(qid_dev).reshape(-1)
+    ids = np.full((Bp, cfg.k), -1, np.int32)
+    dists = np.full((Bp, cfg.k), np.inf, np.float32)
+    stats = np.zeros((Bp, 4), np.int64)
+    ok = qid_flat >= 0
+    ids[qid_flat[ok]] = out_ids[ok]
+    dists[qid_flat[ok]] = out_dists[ok]
+    stats[qid_flat[ok]] = out_stats[ok]
+    ids, dists, stats = ids[:B], dists[:B], stats[:B]
+    return ids, dists, {
+        "hops": stats[:, 0], "inter_hops": stats[:, 1],
+        "dist_comps": stats[:, 2], "reads": stats[:, 3],
+        "n_supersteps": int(n_supersteps),
+        "delivered": float(np.asarray(devs.delivered).mean()),
+    }
+
+
+def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
+                  sector_codes: bool = False):
+    """Single-host driver: partition axis vmapped; routing via transpose.
+
+    Bit-identical math to the SPMD path; the measurement substrate for every
+    paper figure (counters are exact; time comes from io_sim's cost model).
+    """
+    P = index.p
+    q_dev, qid_dev, st_dev, sd_dev, B, Bp, per = _split_round_robin(
+        index, queries, cfg)
+    shard = index.stacked_shards(sector_codes=sector_codes)
+    codebook = jnp.asarray(index.codebook)
+    devs = jax.vmap(lambda q, i, s, sd: init_device_state(q, i, s, sd, cfg))(
+        jnp.asarray(q_dev), jnp.asarray(qid_dev), jnp.asarray(st_dev),
+        jnp.asarray(sd_dev)
+    )
+    my_parts = jnp.arange(P, dtype=jnp.int32)
+    shard_axes = Shard(vectors=0, neighbors=0, codes=None, node2part=None,
+                       node2local=None,
+                       nbr_codes=0 if sector_codes else None)
+
+    def superstep(devs):
+        devs, res_buf, dest, want, free, remaining = jax.vmap(
+            lambda dv, sh, mp: _superstep_local(dv, sh, codebook, cfg, mp, P),
+            in_axes=(0, shard_axes, 0),
+        )(devs, shard, my_parts)
+        grant = grant_matrix(want, free, cfg.pair_cap)           # (P, P)
+        bufs, devs = jax.vmap(
+            lambda dv, de, gr: pack_sends(dv, de, gr, cfg, P)
+        )(devs, dest, grant)
+        # all_to_all == transpose of the (src, dst) axes in simulation
+        inc_states = jax.tree.map(
+            lambda x: jnp.swapaxes(x, 0, 1).reshape(
+                (P, P * cfg.pair_cap) + x.shape[3:]
+            ),
+            bufs,
+        )
+        inc_res = jax.tree.map(
+            lambda x: jnp.swapaxes(x, 0, 1).reshape(
+                (P, P * cfg.result_cap) + x.shape[3:]
+            ),
+            res_buf,
+        )
+        devs = jax.vmap(lambda dv, inc: merge_recv(dv, inc, cfg))(devs, inc_states)
+        devs = jax.vmap(lambda dv, inc: merge_results(dv, inc, cfg, P))(devs, inc_res)
+        return devs, jnp.sum(remaining)
+
+    def cond(c):
+        _, it, rem = c
+        return (rem > 0) & (it < cfg.max_supersteps)
+
+    def body(c):
+        devs, it, _ = c
+        devs, rem = superstep(devs)
+        return devs, it + 1, rem
+
+    devs, n_supersteps, _ = jax.jit(
+        lambda d: jax.lax.while_loop(cond, body, (d, jnp.int32(0), jnp.int32(1)))
+    )(devs)
+    return _collect(devs, qid_dev, cfg, B, Bp, P, per, n_supersteps)
+
+
+def make_spmd_fn(cfg: BatonParams, n_parts: int, axis_name: str = "part"):
+    """shard_map body for a mesh axis of size n_parts.
+
+    dev: per-device state (sharded on axis 0 outside), shard: per-partition
+    leaves sharded, maps/codes replicated.  Returns final DeviceState.
+    """
+
+    def fn(dev: DeviceState, shard: Shard, codebook) -> DeviceState:
+        my_part = jax.lax.axis_index(axis_name).astype(jnp.int32)
+
+        def cond(c):
+            _, it, rem = c
+            return (rem > 0) & (it < cfg.max_supersteps)
+
+        def body(c):
+            dev, it, _ = c
+            dev, res_buf, dest, want, free, remaining = _superstep_local(
+                dev, shard, codebook, cfg, my_part, n_parts
+            )
+            want_all = jax.lax.all_gather(want, axis_name)       # (P, P)
+            free_all = jax.lax.all_gather(free, axis_name)       # (P,)
+            grant = grant_matrix(want_all, free_all, cfg.pair_cap)
+            buf, dev = pack_sends(dev, dest, grant[my_part], cfg, n_parts)
+            inc = jax.tree.map(
+                lambda x: jax.lax.all_to_all(
+                    x, axis_name, split_axis=0, concat_axis=0, tiled=True
+                ).reshape((n_parts * cfg.pair_cap,) + x.shape[2:]),
+                buf,
+            )
+            inc_res = jax.tree.map(
+                lambda x: jax.lax.all_to_all(
+                    x, axis_name, split_axis=0, concat_axis=0, tiled=True
+                ).reshape((n_parts * cfg.result_cap,) + x.shape[2:]),
+                res_buf,
+            )
+            dev = merge_recv(dev, inc, cfg)
+            dev = merge_results(dev, inc_res, cfg, n_parts)
+            rem = jax.lax.psum(remaining, axis_name)
+            return dev, it + 1, rem
+
+        dev, _, _ = jax.lax.while_loop(cond, body, (dev, jnp.int32(0), jnp.int32(1)))
+        return dev
+
+    return fn

@@ -1,0 +1,307 @@
+"""Fixed-shape beam search (Algorithm 1) + the W-wide I/O pipeline.
+
+Two flavours:
+
+* ``search_inmem`` — full-precision in-memory search used for graph
+  construction and for the replicated head index (§4.2).  W=1, returns the
+  visited set needed by robust-prune.
+* ``step_disk`` / ``search_disk`` — the DiskANN-style disk search: PQ-guided
+  beam, W parallel "sector reads" (Alg. 1 line 6), exact distances of read
+  nodes accumulated into the rerank pool.  This single function is reused by
+  the single-server baseline, the scatter-gather baseline, and (via the
+  partition-aware frontier mask of Alg. 2) the distributed baton search.
+
+Everything is shape-static and ``vmap``/``shard_map``-compatible.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq
+from repro.core.state import INF, NO_ID, Counters, QueryState
+
+# ---------------------------------------------------------------------------
+# shared fixed-shape primitives
+# ---------------------------------------------------------------------------
+
+
+def merge_into_beam(beam_ids, beam_dists, beam_expl, cand_ids, cand_dists):
+    """Insert candidates into the beam; dedup by id; keep best L by distance.
+
+    Candidate padding must be (NO_ID, INF).  Returns (ids, dists, expl)
+    sorted ascending by distance — so the beam is always distance-ordered.
+    """
+    L = beam_ids.shape[0]
+    ids = jnp.concatenate([beam_ids, cand_ids])
+    dists = jnp.concatenate([beam_dists, cand_dists])
+    expl = jnp.concatenate([beam_expl, jnp.zeros(cand_ids.shape, bool)])
+
+    # pass 1: group duplicates (same id adjacent; explored copy first).
+    order = jnp.lexsort((dists, ~expl, ids))
+    ids, dists, expl = ids[order], dists[order], expl[order]
+    dup = jnp.concatenate([jnp.array([False]), ids[1:] == ids[:-1]])
+    dists = jnp.where(dup, INF, dists)
+    ids = jnp.where(dup, NO_ID, ids)
+    expl = jnp.where(dup, False, expl)
+
+    # pass 2: order by distance, truncate to L.
+    order = jnp.lexsort((ids, dists))[:L]
+    return ids[order], dists[order], expl[order]
+
+
+def select_frontier(beam_ids, beam_expl, w: int):
+    """Top-W nearest unexplored beam entries (beam is distance-sorted).
+
+    Returns (positions (W,), ids (W,), valid (W,) bool).
+    """
+    L = beam_ids.shape[0]
+    cand = (~beam_expl) & (beam_ids != NO_ID)
+    pos = jnp.where(cand, jnp.arange(L), L)
+    pos = jnp.sort(pos)[:w]
+    valid = pos < L
+    safe = jnp.clip(pos, 0, L - 1)
+    return safe, jnp.where(valid, beam_ids[safe], NO_ID), valid
+
+
+def merge_pool(pool_ids, pool_dists, new_ids, new_dists):
+    """Insert exact-distance results into the fixed-size rerank pool."""
+    P = pool_ids.shape[0]
+    ids = jnp.concatenate([pool_ids, new_ids])
+    dists = jnp.concatenate([pool_dists, new_dists])
+    order = jnp.lexsort((dists, ids))
+    ids, dists = ids[order], dists[order]
+    dup = jnp.concatenate([jnp.array([False]), ids[1:] == ids[:-1]])
+    dists = jnp.where(dup, INF, dists)
+    ids = jnp.where(dup, NO_ID, ids)
+    order = jnp.lexsort((ids, dists))[:P]
+    return ids[order], dists[order]
+
+
+def _contains(haystack_ids, needle_ids):
+    """For each needle, is it present in haystack?  (H,) x (C,) -> (C,) bool."""
+    eq = haystack_ids[None, :] == needle_ids[:, None]
+    return jnp.any(eq & (needle_ids[:, None] != NO_ID), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# in-memory full-precision search (graph build + head index)
+# ---------------------------------------------------------------------------
+
+
+class InMemResult(NamedTuple):
+    beam_ids: jnp.ndarray     # (L,) distance-sorted
+    beam_dists: jnp.ndarray   # (L,)
+    visited_ids: jnp.ndarray  # (V,) expanded nodes in expansion order
+    visited_dists: jnp.ndarray
+    hops: jnp.ndarray
+    dist_comps: jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("L", "max_hops"))
+def search_inmem(
+    vectors: jnp.ndarray,     # (N, d) float32
+    neighbors: jnp.ndarray,   # (N, R) int32, NO_ID padding
+    query: jnp.ndarray,       # (d,)
+    start_ids: jnp.ndarray,   # (S,) int32
+    L: int = 64,
+    max_hops: int = 256,
+) -> InMemResult:
+    """Full-precision greedy beam search (W=1).  Oracle-checked in tests."""
+    R = neighbors.shape[1]
+
+    def dist_to(ids):
+        v = vectors[jnp.clip(ids, 0, vectors.shape[0] - 1)]
+        d = jnp.sum((v - query[None, :]) ** 2, -1)
+        return jnp.where(ids == NO_ID, INF, d)
+
+    s = start_ids.shape[0]
+    beam_ids = jnp.full((L,), NO_ID, jnp.int32).at[:s].set(start_ids)
+    beam_dists = dist_to(beam_ids)
+    # dedup starting ids
+    beam_ids, beam_dists, beam_expl = merge_into_beam(
+        jnp.full((L,), NO_ID, jnp.int32), jnp.full((L,), INF), jnp.zeros((L,), bool),
+        beam_ids, beam_dists,
+    )
+
+    visited_ids = jnp.full((max_hops,), NO_ID, jnp.int32)
+    visited_dists = jnp.full((max_hops,), INF)
+
+    def cond(c):
+        beam_ids, beam_expl, *_, hops, _ = c
+        _, _, valid = select_frontier(beam_ids, beam_expl, 1)
+        return jnp.any(valid) & (hops < max_hops)
+
+    def body(c):
+        beam_ids, beam_expl, beam_dists, vis_i, vis_d, hops, dcs = c
+        fpos, fids, fvalid = select_frontier(beam_ids, beam_expl, 1)
+        u = fids[0]
+        beam_expl = beam_expl.at[fpos[0]].set(True)
+        vis_i = vis_i.at[hops].set(u)
+        vis_d = vis_d.at[hops].set(beam_dists[fpos[0]])
+        nbrs = neighbors[jnp.clip(u, 0, neighbors.shape[0] - 1)]
+        nbrs = jnp.where(u == NO_ID, NO_ID, nbrs)
+        # skip nodes already in beam or already expanded
+        known = _contains(beam_ids, nbrs) | _contains(vis_i, nbrs)
+        nbrs = jnp.where(known, NO_ID, nbrs)
+        nd = dist_to(nbrs)
+        dcs = dcs + jnp.sum(nbrs != NO_ID)
+        beam_ids, beam_dists, beam_expl = merge_into_beam(
+            beam_ids, beam_dists, beam_expl, nbrs, nd
+        )
+        return beam_ids, beam_expl, beam_dists, vis_i, vis_d, hops + 1, dcs
+
+    beam_ids, beam_expl, beam_dists, visited_ids, visited_dists, hops, dcs = (
+        jax.lax.while_loop(
+            cond,
+            body,
+            (
+                beam_ids, beam_expl, beam_dists, visited_ids, visited_dists,
+                jnp.int32(0), jnp.int32(s),
+            ),
+        )
+    )
+    return InMemResult(beam_ids, beam_dists, visited_ids, visited_dists, hops, dcs)
+
+
+# ---------------------------------------------------------------------------
+# disk-style PQ-guided search (Alg. 1 with the W-wide I/O pipeline)
+# ---------------------------------------------------------------------------
+
+
+class Shard(NamedTuple):
+    """One partition's 'SSD': sector-resident data, local-id indexed.
+
+    For the single-server baseline there is one shard covering everything and
+    node2local is the identity.  ``codes``/``node2part``/``node2local`` are
+    global + replicated (paper §5 'Memory footprint').
+
+    ``nbr_codes`` enables the AiSAQ-style sector layout (paper §5/§8 future
+    work, our §Perf memory optimization): each sector also stores its
+    neighbors' PQ codes (R x M bytes, still within the 4 KB sector budget),
+    so the 32 GB replicated code array is not needed — ``codes`` may then be
+    a (1, M) placeholder.
+    """
+
+    vectors: jnp.ndarray      # (Np, d) float32 — full-precision, on "disk"
+    neighbors: jnp.ndarray    # (Np, R) int32 global ids — on "disk"
+    codes: jnp.ndarray        # (N, M) uint8 — replicated PQ codes (in memory)
+    node2part: jnp.ndarray    # (N,) int32 — replicated routing map
+    node2local: jnp.ndarray   # (N,) int32 — global -> local slot on owner
+    nbr_codes: jnp.ndarray | None = None  # (Np, R, M) uint8 — sector mode
+
+
+def read_sectors(shard: Shard, gids: jnp.ndarray):
+    """Simulated sector read: full vector + adjacency (+ neighbor codes in
+    sector mode) for owned global ids."""
+    loc = shard.node2local[jnp.clip(gids, 0, shard.node2local.shape[0] - 1)]
+    loc = jnp.clip(loc, 0, shard.vectors.shape[0] - 1)
+    # sectors may store vectors in the dataset's native dtype (uint8 for
+    # BIGANN-class data) — distance math is always f32
+    vecs = shard.vectors[loc].astype(jnp.float32)
+    nbrs = shard.neighbors[loc]
+    ok = gids != NO_ID
+    ncodes = shard.nbr_codes[loc] if shard.nbr_codes is not None else None
+    return (
+        jnp.where(ok[:, None], vecs, 0.0),
+        jnp.where(ok[:, None], nbrs, NO_ID),
+        ncodes,
+    )
+
+
+def step_disk(
+    state: QueryState,
+    shard: Shard,
+    lut: jnp.ndarray,          # (M, K) PQ lookup table for state.query
+    frontier_mask: jnp.ndarray,  # (W,) bool — which frontier slots to expand
+    frontier_pos: jnp.ndarray,   # (W,) beam positions of the frontier
+) -> QueryState:
+    """Expand the masked frontier nodes: read sectors, rerank, grow beam.
+
+    The caller (single-node / baton / scatter-gather driver) picks the
+    frontier and the mask — Alg. 2's locality heuristic lives there.
+    """
+    W = frontier_mask.shape[0]
+    gids = jnp.where(frontier_mask, state.beam_ids[frontier_pos], NO_ID)
+
+    vecs, nbrs, ncodes = read_sectors(shard, gids)               # (W,d),(W,R)
+    # exact distances of the expanded nodes -> rerank pool
+    ed = jnp.sum((vecs - state.query[None, :]) ** 2, -1)
+    ed = jnp.where(gids == NO_ID, INF, ed)
+    pool_ids, pool_dists = merge_pool(state.pool_ids, state.pool_dists, gids, ed)
+
+    # mark frontier explored.  NOTE: frontier_pos contains duplicate (clipped)
+    # indices for invalid lanes — the scatter must be order-independent, so
+    # accumulate with add and OR the result (a plain .set() lets a padding
+    # lane's no-op write erase a real mark at the same position).
+    mark = jnp.zeros_like(state.beam_expl, dtype=jnp.int32).at[frontier_pos].add(
+        frontier_mask.astype(jnp.int32)
+    )
+    beam_expl = state.beam_expl | (mark > 0)
+
+    # candidate neighbors: PQ distances, dedup against beam and pool
+    cand = nbrs.reshape(-1)                                      # (W*R,)
+    known = _contains(state.beam_ids, cand) | _contains(pool_ids, cand)
+    cand = jnp.where(known, NO_ID, cand)
+    # PQ distances: sector-resident neighbor codes (AiSAQ mode) or the
+    # replicated global code array (paper baseline)
+    if ncodes is not None:
+        cand_codes = ncodes.reshape(-1, ncodes.shape[-1])        # (W*R, M)
+    else:
+        cand_codes = shard.codes[jnp.clip(cand, 0, shard.codes.shape[0] - 1)]
+    cd_flat = pq.adc(lut[None], cand_codes)[0]
+    # dedup within candidates (same neighbor from two expanded nodes)
+    order = jnp.lexsort((cand,))
+    cs = cand[order]
+    dupm = jnp.concatenate([jnp.array([False]), cs[1:] == cs[:-1]])
+    cand = jnp.where(dupm, NO_ID, cs)
+    cd = jnp.where(cand == NO_ID, INF, cd_flat[order])
+
+    beam_ids, beam_dists, beam_expl = merge_into_beam(
+        state.beam_ids, state.beam_dists, beam_expl, cand, cd
+    )
+
+    n_read = jnp.sum(gids != NO_ID)
+    c = state.counters
+    counters = Counters(
+        hops=c.hops + (n_read > 0).astype(jnp.int32),
+        inter_hops=c.inter_hops,
+        dist_comps=c.dist_comps + jnp.sum(cand != NO_ID) + n_read,
+        reads=c.reads + n_read,
+    )
+    return state._replace(
+        beam_ids=beam_ids, beam_dists=beam_dists, beam_expl=beam_expl,
+        pool_ids=pool_ids, pool_dists=pool_dists, counters=counters,
+    )
+
+
+@partial(jax.jit, static_argnames=("w", "max_hops"))
+def search_disk(
+    state: QueryState,
+    shard: Shard,
+    codebook: jnp.ndarray,     # (M, K, dsub)
+    w: int = 8,
+    max_hops: int = 512,
+) -> QueryState:
+    """Single-server disk search: run Alg. 1 until the beam is fully explored."""
+    lut = pq.build_lut(codebook, state.query[None])[0]
+
+    def cond(s):
+        _, _, valid = select_frontier(s.beam_ids, s.beam_expl, 1)
+        return jnp.any(valid) & (s.counters.hops < max_hops) & ~s.done
+
+    def body(s):
+        fpos, _, fvalid = select_frontier(s.beam_ids, s.beam_expl, w)
+        return step_disk(s, shard, lut, fvalid, fpos)
+
+    out = jax.lax.while_loop(cond, body, state)
+    return out._replace(done=jnp.asarray(True))
+
+
+def topk_results(state: QueryState, k: int):
+    """Final rerank (Alg. 1 line 11): k best exact-distance pool entries."""
+    return state.pool_ids[:k], state.pool_dists[:k]

@@ -1,0 +1,75 @@
+"""In-memory head index (§4.2): a Vamana graph over a ~1% sample,
+replicated on every server, used to pick beam-search entry points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import beam_search, vamana
+
+
+@dataclasses.dataclass
+class HeadIndex:
+    sample_ids: np.ndarray    # (S,) global ids of sampled points
+    vectors: np.ndarray       # (S, d) full-precision sample (in DRAM)
+    neighbors: np.ndarray     # (S, R) local-id adjacency
+    medoid: int               # local id
+
+    @property
+    def n(self) -> int:
+        return len(self.sample_ids)
+
+
+def build(
+    vectors: np.ndarray,
+    fraction: float = 0.01,
+    r: int = 32,
+    l_build: int = 64,
+    alpha: float = 1.2,
+    seed: int = 0,
+    min_size: int = 64,
+) -> HeadIndex:
+    n = vectors.shape[0]
+    s = max(min_size, int(round(n * fraction)))
+    s = min(s, n)
+    rng = np.random.default_rng(seed)
+    sample = np.sort(rng.choice(n, s, replace=False)).astype(np.int32)
+    sub = np.ascontiguousarray(vectors[sample], dtype=np.float32)
+    g = vamana.build(sub, r=r, l_build=l_build, alpha=alpha, seed=seed)
+    return HeadIndex(sample_ids=sample, vectors=sub, neighbors=g.neighbors,
+                     medoid=g.medoid)
+
+
+@partial(jax.jit, static_argnames=("n_starts", "l_search"))
+def search(
+    head_vectors: jnp.ndarray,
+    head_neighbors: jnp.ndarray,
+    sample_ids: jnp.ndarray,
+    medoid: jnp.ndarray,
+    queries: jnp.ndarray,       # (B, d)
+    n_starts: int = 8,
+    l_search: int = 16,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, n_starts) **global** entry-point ids + exact distances."""
+
+    def one(q):
+        res = beam_search.search_inmem(
+            head_vectors, head_neighbors, q,
+            medoid[None].astype(jnp.int32), L=l_search, max_hops=64,
+        )
+        local = res.beam_ids[:n_starts]
+        ok = local >= 0
+        gids = sample_ids[jnp.clip(local, 0, sample_ids.shape[0] - 1)]
+        dists = res.beam_dists[:n_starts]
+        return (
+            jnp.where(ok, gids, -1).astype(jnp.int32),
+            jnp.where(ok, dists, jnp.inf).astype(jnp.float32),
+        )
+
+    return jax.vmap(one)(queries)

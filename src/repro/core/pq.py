@@ -1,0 +1,151 @@
+"""Product quantization (Jégou et al.) — codebook training, encoding, ADC.
+
+The paper keeps a 32-byte PQ representation of every vector in memory on each
+node and performs almost all distance comparisons with it (§2, §5 "Memory
+footprint").  This module is the pure-JAX substrate; the MXU-optimized ADC
+lives in ``repro.kernels.pq_adc`` and is validated against this code.
+
+Conventions: squared-L2 everywhere (paper §2).  codes are uint8 with K<=256.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PQCodebook:
+    centroids: jnp.ndarray  # (M, K, dsub) float32
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.centroids.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+    def tree_flatten(self):
+        return (self.centroids,), None
+
+
+def _split(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(N, d) -> (N, M, dsub)."""
+    n, d = x.shape
+    assert d % m == 0, f"dim {d} not divisible by M={m}"
+    return x.reshape(n, m, d // m)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _kmeans_all_subspaces(x, m, k, iters):
+    """Vectorized k-means over all M subspaces at once.
+
+    x: (N, d).  Returns centroids (M, K, dsub).
+    """
+    xs = _split(x, m)                       # (N, M, dsub)
+    n = xs.shape[0]
+    # k-means++-lite init: deterministic strided sample (data is pre-shuffled
+    # by the synthetic generator; real pipelines shuffle on ingest).
+    idx = (jnp.arange(k) * max(n // k, 1)) % n
+    cent = xs[idx]                          # (K, M, dsub)
+    cent = jnp.transpose(cent, (1, 0, 2))   # (M, K, dsub)
+
+    def step(cent, _):
+        # dists: (N, M, K)
+        d = (
+            jnp.sum(xs * xs, -1)[:, :, None]
+            - 2.0 * jnp.einsum("nmd,mkd->nmk", xs, cent)
+            + jnp.sum(cent * cent, -1)[None]
+        )
+        assign = jnp.argmin(d, axis=-1)     # (N, M)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype, axis=-1)  # (N, M, K)
+        sums = jnp.einsum("nmk,nmd->mkd", onehot, xs)
+        cnts = jnp.sum(onehot, axis=0)[..., None]    # (M, K, 1)
+        new = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent
+
+
+def train(
+    x: np.ndarray, m: int = 32, k: int = 256, iters: int = 8, sample: int = 65536,
+    seed: int = 0,
+) -> PQCodebook:
+    x = np.asarray(x, dtype=np.float32)
+    if x.shape[0] > sample:
+        rng = np.random.default_rng(seed)
+        x = x[rng.choice(x.shape[0], sample, replace=False)]
+    cent = _kmeans_all_subspaces(jnp.asarray(x), m, k, iters)
+    return PQCodebook(centroids=cent)
+
+
+@partial(jax.jit, static_argnums=())
+def _encode(xs, cent):
+    d = (
+        jnp.sum(xs * xs, -1)[:, :, None]
+        - 2.0 * jnp.einsum("nmd,mkd->nmk", xs, cent)
+        + jnp.sum(cent * cent, -1)[None]
+    )
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def encode(cb: PQCodebook, x: np.ndarray, chunk: int = 131072) -> np.ndarray:
+    """(N, d) -> (N, M) uint8 codes, chunked to bound memory."""
+    x = np.asarray(x, dtype=np.float32)
+    out = np.empty((x.shape[0], cb.m), dtype=np.uint8)
+    for s in range(0, x.shape[0], chunk):
+        xs = _split(jnp.asarray(x[s : s + chunk]), cb.m)
+        out[s : s + chunk] = np.asarray(_encode(xs, cb.centroids))
+    return out
+
+
+def build_lut(cb_centroids: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """Query-to-centroid lookup tables (the 'codebook' of §2).
+
+    cb_centroids: (M, K, dsub); queries: (Q, d) -> (Q, M, K) float32 where
+    lut[q, m, c] = ||query_sub[q, m] - centroid[m, c]||^2.
+    """
+    q = queries.reshape(queries.shape[0], cb_centroids.shape[0], -1)  # (Q,M,dsub)
+    return (
+        jnp.sum(q * q, -1)[:, :, None]
+        - 2.0 * jnp.einsum("qmd,mkd->qmk", q, cb_centroids)
+        + jnp.sum(cb_centroids * cb_centroids, -1)[None]
+    )
+
+
+def adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric distance computation.
+
+    lut: (Q, M, K); codes: (N, M) uint8 -> (Q, N) approximate sq-L2.
+    Reference (gather) formulation; the MXU one-hot formulation is in
+    kernels/pq_adc and must match this to ~1e-4.
+    """
+    c = codes.astype(jnp.int32)  # (N, M)
+    # take_along_axis over K: (Q, M, N)
+    g = jnp.take_along_axis(
+        lut, c.T[None, :, :], axis=2
+    )  # (Q, M, N)
+    return jnp.sum(g, axis=1)
+
+
+def reconstruct(cb: PQCodebook, codes: jnp.ndarray) -> jnp.ndarray:
+    """Decode PQ codes back to vectors (for diagnostics)."""
+    c = codes.astype(jnp.int32)
+    gathered = jax.vmap(lambda cent, code: cent[code], in_axes=(0, 1))(
+        cb.centroids, c
+    )  # (M, N, dsub)
+    return jnp.transpose(gathered, (1, 0, 2)).reshape(codes.shape[0], -1)

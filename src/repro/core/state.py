@@ -1,0 +1,109 @@
+"""The query-state "envelope" (§4.1) as a fixed-shape pytree.
+
+This is exactly the state BatANN serializes onto the wire on every
+inter-partition hop: the beam (ids, approximate distances, explored flags),
+the full-precision result list used for final reranking, the query embedding,
+and the search parameters/counters.  Fixed shapes make it a legal operand of
+``lax.all_to_all`` — the TPU realization of the paper's TCP envelope.
+
+Sizes (paper §4.1): for L=128, pool=256, d=96 the envelope is ~4.3 KB —
+matching the paper's 4-8 KB estimate for L>=200-class configurations.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+NO_ID = jnp.int32(-1)
+
+
+class Counters(NamedTuple):
+    hops: jnp.ndarray            # total beam-search steps (Fig. 3/4)
+    inter_hops: jnp.ndarray      # inter-partition hand-offs (Fig. 3/4)
+    dist_comps: jnp.ndarray      # PQ + full-precision comparisons (Fig. 5/10)
+    reads: jnp.ndarray           # disk sectors read (Fig. 5/10)
+
+    @staticmethod
+    def zeros() -> "Counters":
+        z = jnp.int32(0)
+        return Counters(z, z, z, z)
+
+
+class QueryState(NamedTuple):
+    """One in-flight query.  All leaves have static shapes."""
+
+    query: jnp.ndarray           # (d,) float32 embedding
+    beam_ids: jnp.ndarray        # (L,) int32 global node ids, NO_ID padding
+    beam_dists: jnp.ndarray      # (L,) float32 PQ distances, INF padding
+    beam_expl: jnp.ndarray       # (L,) bool — explored flags
+    pool_ids: jnp.ndarray        # (P,) int32 — full-precision result list
+    pool_dists: jnp.ndarray      # (P,) float32 exact distances
+    counters: Counters
+    active: jnp.ndarray          # () bool — slot holds a live query
+    done: jnp.ndarray            # () bool — search converged
+    home: jnp.ndarray            # () int32 — partition the client sent it to
+    qid: jnp.ndarray             # () int32 — client-side query id
+
+    @property
+    def L(self) -> int:
+        return self.beam_ids.shape[-1]
+
+    @property
+    def P(self) -> int:
+        return self.pool_ids.shape[-1]
+
+
+def empty_state(d: int, L: int, P: int) -> QueryState:
+    return QueryState(
+        query=jnp.zeros((d,), jnp.float32),
+        beam_ids=jnp.full((L,), NO_ID, jnp.int32),
+        beam_dists=jnp.full((L,), INF, jnp.float32),
+        beam_expl=jnp.zeros((L,), bool),
+        pool_ids=jnp.full((P,), NO_ID, jnp.int32),
+        pool_dists=jnp.full((P,), INF, jnp.float32),
+        counters=Counters.zeros(),
+        active=jnp.asarray(False),
+        done=jnp.asarray(False),
+        home=jnp.int32(0),
+        qid=jnp.int32(-1),
+    )
+
+
+def init_state(
+    query: jnp.ndarray,
+    start_ids: jnp.ndarray,
+    start_dists: jnp.ndarray,
+    L: int,
+    P: int,
+    home: jnp.ndarray | int = 0,
+    qid: jnp.ndarray | int = 0,
+) -> QueryState:
+    """Seed a state from head-index results (start ids sorted by distance)."""
+    s = start_ids.shape[0]
+    assert s <= L
+    beam_ids = jnp.full((L,), NO_ID, jnp.int32).at[:s].set(start_ids.astype(jnp.int32))
+    beam_dists = jnp.full((L,), INF, jnp.float32).at[:s].set(start_dists)
+    beam_dists = jnp.where(beam_ids == NO_ID, INF, beam_dists)
+    return QueryState(
+        query=query.astype(jnp.float32),
+        beam_ids=beam_ids,
+        beam_dists=beam_dists,
+        beam_expl=jnp.zeros((L,), bool),
+        pool_ids=jnp.full((P,), NO_ID, jnp.int32),
+        pool_dists=jnp.full((P,), INF, jnp.float32),
+        counters=Counters.zeros(),
+        active=jnp.asarray(True),
+        done=jnp.asarray(False),
+        home=jnp.int32(home),
+        qid=jnp.int32(qid),
+    )
+
+
+def envelope_bytes(d: int, L: int, P: int) -> int:
+    """Wire size of one state (the paper's 4-8 KB envelope)."""
+    s = empty_state(d, L, P)
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))

@@ -1,0 +1,138 @@
+"""Fault tolerance & elasticity for the serving tier (designed for 1000+
+nodes; exercised at small scale in tests).
+
+Mechanisms (DESIGN.md §7):
+
+* **Replicated partition map** — every partition is owned by R devices
+  (primary + replicas).  The routing key ``node2part`` maps to a *logical*
+  partition; ``PartitionMap`` resolves logical -> physical device, skipping
+  devices marked failed.  Because PQ codes/head index are replicated anyway,
+  a replica can serve reads for its partition immediately on failover.
+* **Query re-issue** — the client driver tracks undelivered qids per send
+  batch and re-issues them (search is deterministic & idempotent, so
+  at-least-once delivery is safe).
+* **Straggler mitigation** — per-super-step occupancy stats + hedged
+  re-issue of queries stuck > T super-steps; the credit-based all_to_all
+  already bounds per-step skew (a hot device can only absorb pair_cap
+  states per peer per step).
+* **Elastic rescale** — rebuild the partition maps for a new device count
+  from the persisted assignment (cheap: LDG re-streams from the previous
+  assignment as warm start).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import partition as part_mod
+
+
+@dataclasses.dataclass
+class PartitionMap:
+    """logical partition -> physical replica devices."""
+
+    n_logical: int
+    replicas: np.ndarray          # (P, R) device ids
+    failed: set
+
+    @classmethod
+    def create(cls, n_logical: int, n_devices: int, r: int = 2, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        reps = np.zeros((n_logical, r), np.int32)
+        for p in range(n_logical):
+            # primary placement round-robin; replicas offset to distinct hosts
+            prim = p % n_devices
+            others = [(prim + 1 + i * (n_devices // r + 1)) % n_devices
+                      for i in range(r - 1)]
+            reps[p] = [prim] + others
+        return cls(n_logical=n_logical, replicas=reps, failed=set())
+
+    def fail_device(self, dev: int):
+        self.failed.add(int(dev))
+
+    def recover_device(self, dev: int):
+        self.failed.discard(int(dev))
+
+    def owner(self, p: int) -> int:
+        """Current serving device for logical partition p."""
+        for d in self.replicas[p]:
+            if int(d) not in self.failed:
+                return int(d)
+        raise RuntimeError(f"partition {p} lost: all replicas failed")
+
+    def routing_table(self) -> np.ndarray:
+        """(P,) logical -> physical map for the current failure set."""
+        return np.array([self.owner(p) for p in range(self.n_logical)],
+                        np.int32)
+
+    def coverage_ok(self) -> bool:
+        try:
+            self.routing_table()
+            return True
+        except RuntimeError:
+            return False
+
+
+@dataclasses.dataclass
+class ReissueTracker:
+    """Client-side at-least-once delivery: re-issue undelivered queries."""
+
+    max_attempts: int = 3
+
+    def missing(self, expected_qids, delivered_mask) -> np.ndarray:
+        expected_qids = np.asarray(expected_qids)
+        return expected_qids[~np.asarray(delivered_mask, bool)]
+
+    def run_with_retries(self, run_fn, queries: np.ndarray):
+        """run_fn(queries) -> (ids, dists, stats w/ per-query 'hops')."""
+        n = queries.shape[0]
+        ids = None
+        dists = None
+        pending = np.arange(n)
+        attempts = 0
+        agg_stats = None
+        while len(pending) and attempts < self.max_attempts:
+            r_ids, r_dists, r_stats = run_fn(queries[pending])
+            if ids is None:
+                ids = np.full((n, r_ids.shape[1]), -1, r_ids.dtype)
+                dists = np.full((n, r_dists.shape[1]), np.inf, r_dists.dtype)
+                agg_stats = {k: np.zeros(n, dtype=np.asarray(v).dtype)
+                             for k, v in r_stats.items()
+                             if isinstance(v, np.ndarray)}
+            ok = r_ids[:, 0] >= 0
+            ids[pending[ok]] = r_ids[ok]
+            dists[pending[ok]] = r_dists[ok]
+            for k in agg_stats:
+                agg_stats[k][pending[ok]] = r_stats[k][ok]
+            pending = pending[~ok]
+            attempts += 1
+        return ids, dists, agg_stats, pending
+
+
+def rescale_assignment(neighbors: np.ndarray, old_assign: np.ndarray,
+                       new_p: int, seed: int = 0) -> np.ndarray:
+    """Elastic rescale: re-partition for a new device count, warm-started
+    from the previous assignment (modular fold keeps most locality)."""
+    warm = old_assign % new_p
+    n = len(old_assign)
+    cap = part_mod.partition_capacity(n, new_p)
+    sizes = np.bincount(warm, minlength=new_p).astype(np.int64)
+    rng = np.random.default_rng(seed)
+    assign = warm.copy().astype(np.int32)
+    # one LDG refinement pass under the new capacity
+    for v in rng.permutation(n):
+        nbrs = neighbors[v]
+        nbrs = nbrs[nbrs >= 0]
+        if len(nbrs) == 0:
+            continue
+        counts = np.bincount(assign[nbrs], minlength=new_p).astype(np.float64)
+        old = assign[v]
+        sizes[old] -= 1
+        score = counts * (1.0 - sizes / cap)
+        score[sizes >= cap] = -np.inf
+        new = int(np.argmax(score))
+        assign[v] = new
+        sizes[new] += 1
+    return assign

@@ -1,0 +1,71 @@
+"""PQ ADC as an MXU kernel (TPU adaptation of the paper's SIMD LUT-sum).
+
+GPU/CPU ADC is a gather: dists[q,n] = Σ_m lut[q,m,codes[n,m]].  TPUs have no
+fast per-lane gather, but they have a 128x128 systolic MXU — so we re-express
+the per-subspace lookup as a one-hot matmul and *batch over the resident
+query states* (the same states the baton engine keeps per device, §5):
+
+    dists[q, n] = Σ_m onehot(codes[:, m]) @ lut[q, m, :]^T
+
+Per subspace this is a (TN, K) @ (K, TQ) matmul with K=256 contraction —
+MXU-aligned.  The one-hot expansion costs K× more FLOPs than the gather, but
+they run on the otherwise-idle MXU at ~197 TFLOP/s while the VPU handles the
+beam bookkeeping; the code tile is amortized across all TQ queries.
+
+Grid: (N tiles, Q tiles, M subspaces); M is the innermost (sequential) axis
+and the output block revisits across it (accumulation pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TN = 256   # code rows per tile
+DEFAULT_TQ = 128   # queries per tile
+
+
+def _adc_kernel(codes_ref, lut_ref, out_ref, *, k: int):
+    m = pl.program_id(2)
+    c = codes_ref[:, 0].astype(jnp.int32)                      # (TN,)
+    lutm = lut_ref[:, 0, :]                                    # (TQ, K)
+    onehot = (
+        c[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c.shape[0], k), 1)
+    ).astype(jnp.float32)                                      # (TN, K)
+    part = jnp.dot(onehot, lutm.T, preferred_element_type=jnp.float32)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += part
+
+
+def pq_adc_pallas(
+    lut: jnp.ndarray,        # (Q, M, K) float32
+    codes: jnp.ndarray,      # (N, M) int32 (uint8 at rest; widened by ops.py)
+    tn: int = DEFAULT_TN,
+    tq: int = DEFAULT_TQ,
+    interpret: bool = False,
+) -> jnp.ndarray:            # (Q, N) float32
+    q, m, k = lut.shape
+    n = codes.shape[0]
+    assert codes.shape[1] == m
+    assert n % tn == 0 and q % tq == 0, (n, q, tn, tq)
+
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, k=k),
+        grid=(n // tn, q // tq, m),
+        in_specs=[
+            pl.BlockSpec((tn, 1), lambda i, j, mm: (i, mm)),
+            pl.BlockSpec((tq, 1, k), lambda i, j, mm: (j, mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, tq), lambda i, j, mm: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+    return out.T

@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the PQ ADC kernel (padding + CPU interpret)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_adc.kernel import DEFAULT_TN, DEFAULT_TQ, pq_adc_pallas
+from repro.kernels.pq_adc.ref import pq_adc_ref
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("tn", "tq", "interpret"))
+def pq_adc(
+    lut: jnp.ndarray,
+    codes: jnp.ndarray,
+    tn: int | None = None,
+    tq: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(Q, M, K) x (N, M) -> (Q, N).  Drop-in for repro.core.pq.adc."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    q, m, k = lut.shape
+    n = codes.shape[0]
+    tn = tn or min(DEFAULT_TN, max(8, n))
+    tq = tq or min(DEFAULT_TQ, max(8, q))
+    lut_p = _pad_to(lut, 0, tq)
+    codes_p = _pad_to(codes.astype(jnp.int32), 0, tn)
+    out = pq_adc_pallas(lut_p, codes_p, tn=tn, tq=tq, interpret=interpret)
+    return out[:q, :n]
+
+
+__all__ = ["pq_adc", "pq_adc_ref"]

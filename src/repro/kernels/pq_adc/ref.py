@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for PQ asymmetric distance computation."""
+
+import jax.numpy as jnp
+
+
+def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """lut: (Q, M, K) float32; codes: (N, M) integer -> (Q, N) float32.
+
+    dists[q, n] = sum_m lut[q, m, codes[n, m]]  (gather formulation).
+    """
+    c = codes.astype(jnp.int32)                      # (N, M)
+    g = jnp.take_along_axis(lut, c.T[None, :, :], axis=2)  # (Q, M, N)
+    return jnp.sum(g, axis=1)

@@ -1,0 +1,47 @@
+"""PQ lookup-table (codebook) build kernel.
+
+lut[q, m, c] = ||query_sub[q, m] - centroid[m, c]||², expanded to
+q2 - 2·q·c + c2 so the cross term is a (TQ, dsub) @ (dsub, K) matmul.
+Grid: (Q tiles, M subspaces); each step keeps one subspace's centroid
+block (K, dsub) and a query-column block (TQ, dsub) in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 128
+
+
+def _lut_kernel(q_ref, c_ref, out_ref):
+    q = q_ref[...]                                   # (TQ, dsub)
+    c = c_ref[0]                                     # (K, dsub)
+    cross = jnp.dot(q, c.T, preferred_element_type=jnp.float32)   # (TQ, K)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)      # (TQ, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]            # (1, K)
+    out_ref[:, 0, :] = q2 - 2.0 * cross + c2
+
+
+def pq_lut_pallas(
+    queries: jnp.ndarray,     # (Q, d) float32
+    centroids: jnp.ndarray,   # (M, K, dsub) float32
+    tq: int = DEFAULT_TQ,
+    interpret: bool = False,
+) -> jnp.ndarray:             # (Q, M, K)
+    q, d = queries.shape
+    m, k, dsub = centroids.shape
+    assert d == m * dsub and q % tq == 0
+
+    return pl.pallas_call(
+        _lut_kernel,
+        grid=(q // tq, m),
+        in_specs=[
+            pl.BlockSpec((tq, dsub), lambda i, mm: (i, mm)),
+            pl.BlockSpec((1, k, dsub), lambda i, mm: (mm, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, 1, k), lambda i, mm: (i, mm, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, m, k), jnp.float32),
+        interpret=interpret,
+    )(queries, centroids)

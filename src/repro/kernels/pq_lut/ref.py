@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the PQ query lookup-table build."""
+
+import jax.numpy as jnp
+
+
+def pq_lut_ref(queries: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """queries: (Q, d); centroids: (M, K, dsub) -> (Q, M, K) sq-L2."""
+    m, k, dsub = centroids.shape
+    qs = queries.reshape(queries.shape[0], m, dsub)
+    return (
+        jnp.sum(qs * qs, -1)[:, :, None]
+        - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, centroids)
+        + jnp.sum(centroids * centroids, -1)[None]
+    )

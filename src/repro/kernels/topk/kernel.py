@@ -1,0 +1,89 @@
+"""Batched bitonic top-k kernel — the beam-merge hot path.
+
+Beam search merges (beam ∪ candidates) and keeps the best L by PQ distance on
+every hop (Alg. 1 line 10).  On TPU the natural in-VMEM formulation is a
+bitonic sorting network over the row of C = L + W·R entries: log²C
+compare-exchange stages, each a full-width vector op (no data-dependent
+control flow).  Indices ride along; ties break by index so the kernel is a
+permutation (required for the dedup logic upstream).
+
+The XOR-partner exchange is expressed as a reshape to (..., C/2j, 2, j) and a
+flip of the 2-axis — both Mosaic-supported layout ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TB = 8  # rows per tile
+
+
+def _bitonic_stage(vals, idxs, kk: int, jj: int):
+    b, c = vals.shape
+    v4 = vals.reshape(b, c // (2 * jj), 2, jj)
+    i4 = idxs.reshape(b, c // (2 * jj), 2, jj)
+    pv = jnp.flip(v4, axis=2).reshape(b, c)          # partner = index XOR jj
+    pi = jnp.flip(i4, axis=2).reshape(b, c)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    asc = (lane & kk) == 0                            # ascending block?
+    lower = (lane & jj) == 0                          # lower half of pair?
+    take_min = asc == lower
+
+    a_less = (vals < pv) | ((vals == pv) & (idxs < pi))
+    keep = jnp.where(take_min, a_less, ~a_less)
+    return (
+        jnp.where(keep, vals, pv),
+        jnp.where(keep, idxs, pi),
+    )
+
+
+def _sort_net(vals, idxs, c: int):
+    kk = 2
+    while kk <= c:
+        jj = kk // 2
+        while jj >= 1:
+            vals, idxs = _bitonic_stage(vals, idxs, kk, jj)
+            jj //= 2
+        kk *= 2
+    return vals, idxs
+
+
+def _topk_kernel(vals_ref, idxs_ref, ov_ref, oi_ref, *, c: int, k: int):
+    vals, idxs = _sort_net(vals_ref[...], idxs_ref[...], c)
+    ov_ref[...] = vals[:, :k]
+    oi_ref[...] = idxs[:, :k]
+
+
+def bitonic_topk_pallas(
+    vals: jnp.ndarray,    # (B, C) float32, C power of two
+    idxs: jnp.ndarray,    # (B, C) int32
+    k: int,
+    tb: int = DEFAULT_TB,
+    interpret: bool = False,
+):
+    b, c = vals.shape
+    assert c & (c - 1) == 0, f"C={c} must be a power of two"
+    assert b % tb == 0
+
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, c=c, k=k),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals, idxs)

@@ -1,0 +1,42 @@
+"""Jitted public wrapper for the bitonic top-k kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import DEFAULT_TB, bitonic_topk_pallas
+from repro.kernels.topk.ref import topk_ref
+
+_INF = jnp.float32(jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k", "tb", "interpret"))
+def bitonic_topk(
+    vals: jnp.ndarray,
+    idxs: jnp.ndarray,
+    k: int,
+    tb: int | None = None,
+    interpret: bool | None = None,
+):
+    """(B, C) -> (B, k) smallest values with their indices (ties by index).
+
+    Pads C to a power of two with +inf and B to the row tile.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, c = vals.shape
+    cpad = 1 << (c - 1).bit_length()
+    tb = tb or min(DEFAULT_TB, max(1, b))
+    bpad = (-b) % tb
+    vals_p = jnp.pad(vals.astype(jnp.float32), ((0, bpad), (0, cpad - c)),
+                     constant_values=jnp.inf)
+    idxs_p = jnp.pad(idxs.astype(jnp.int32), ((0, bpad), (0, cpad - c)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+    ov, oi = bitonic_topk_pallas(vals_p, idxs_p, k, tb=tb, interpret=interpret)
+    return ov[:b], oi[:b]
+
+
+__all__ = ["bitonic_topk", "topk_ref"]

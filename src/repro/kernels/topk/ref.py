@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for batched top-k selection with index tie-breaking."""
+
+import jax.numpy as jnp
+
+
+def topk_ref(vals: jnp.ndarray, idxs: jnp.ndarray, k: int):
+    """vals/idxs: (B, C) -> (B, k) smallest values (ties broken by idx)."""
+    order = jnp.lexsort((idxs, vals), axis=-1)[:, :k]
+    return (
+        jnp.take_along_axis(vals, order, axis=1),
+        jnp.take_along_axis(idxs, order, axis=1),
+    )

@@ -1,0 +1,66 @@
+"""Parse compiled/optimized HLO text for collective traffic (§Roofline).
+
+``cost_analysis`` does not expose collective bytes, so we sum the output
+shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction in the (SPMD-partitioned) module.  Shapes in
+post-partitioning HLO are per-device, so totals are per-device bytes moved.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[2,1024,128]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op_kind: {"count": n, "bytes": per-device bytes}} + totals."""
+    out = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind, started = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    total = {
+        "count": sum(v["count"] for v in out.values()),
+        "bytes": sum(v["bytes"] for v in out.values()),
+    }
+    result = {k: dict(v) for k, v in out.items()}
+    result["total"] = total
+    return result
+
+
+def loop_trip_counts(hlo_text: str) -> list[int]:
+    """Best-effort extraction of while-loop trip counts (scan lengths)."""
+    return [int(x) for x in re.findall(r'trip_count="?(\d+)"?', hlo_text)]

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model).
+"""
+
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    """Mesh axes that shard the batch/query dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def all_axes(multi_pod: bool):
+    """Every mesh axis (the flattened 'server' axis for BatANN serving)."""
+    return ("pod", "data", "model") if multi_pod else ("data", "model")

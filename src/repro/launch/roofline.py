@@ -1,0 +1,191 @@
+"""Roofline analysis over dry-run artifacts (§Roofline).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  The compiled module is the per-device SPMD program, so
+``cost_analysis`` FLOPs/bytes and HLO collective bytes are *per device*:
+
+  compute term    = flops_per_dev / 197e12            [s]
+  memory term     = bytes_per_dev / 819e9             [s]
+  collective term = coll_bytes_per_dev / 50e9         [s]
+
+MODEL_FLOPS uses 6·N_active·D for training (D = tokens processed),
+2·N_active·D for forward-only (prefill/decode).  The ratio
+MODEL_FLOPS / HLO_FLOPS_global exposes remat/redundancy/waste.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun] \
+      [--mesh 16-16] [--fmt md|csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (conservative single-link bound)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D (train) / 2·N·D (forward-only), N = active params."""
+    from repro.configs.registry import get_config
+    from repro.models.config import SHAPES
+
+    if rec["arch"] == "batann-serve":
+        return float("nan")
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = rec["n_devices"]
+    # grad-accumulation loop bodies are counted once by XLA cost analysis;
+    # scale flops/bytes/collectives by the microbatch count (EXPERIMENTS.md
+    # §Dry-run accounting notes)
+    mb = rec.get("microbatches", 1)
+    scale = mb
+    approx = False
+    if not rec.get("flops_from_unrolled", True) and rec["arch"] != "batann-serve":
+        # scan-pass record: the layer loop body was counted once -> scale by
+        # n_layers as well (approximation, flagged '~' in the table)
+        from repro.configs.registry import get_config
+
+        scale *= get_config(rec["arch"]).n_layers
+        approx = True
+    flops_dev = (rec["flops"] if rec["flops"] > 0 else 0.0) * scale
+    bytes_dev = max(rec.get("bytes_accessed", 0.0), 0.0) * scale
+    coll_dev = rec["collectives"]["total"]["bytes"] * scale
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = (bytes_dev if bytes_dev > 0 else 0.0) / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    mf = model_flops(rec)
+    hlo_global = flops_dev * n_dev
+    useful = mf / hlo_global if hlo_global and mf == mf else float("nan")
+    bound = max(terms.values())
+    frac = (mf / n_dev / PEAK_FLOPS) / bound if (bound > 0 and mf == mf) \
+        else float("nan")
+    hbm_need = rec.get("argument_size_in_bytes", 0) + \
+        rec.get("temp_size_in_bytes", 0)
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_gb": hbm_need / 1e9,
+        "fits_16g": hbm_need <= 16e9,
+        "approx": approx,
+    }
+
+
+def suggest(rec: dict, a: dict) -> str:
+    if a["dominant"] == "collective":
+        kinds = {k: v["bytes"] for k, v in rec["collectives"].items()
+                 if k != "total"}
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return f"cut {top} traffic (resharding/overlap or different TP axis)"
+    if a["dominant"] == "memory":
+        return "raise arithmetic intensity (fuse, larger per-device tile, " \
+               "bf16 stores)"
+    if a.get("useful_ratio", 1) == a.get("useful_ratio", 1) and \
+            a["useful_ratio"] < 0.5:
+        return "compute-bound but <50% useful: reduce remat/padding waste"
+    return "compute-bound: near roofline; micro-tune matmul layouts"
+
+
+def load(dir_: str, mesh: str | None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            continue
+        if r.get("variant", "baseline") != "baseline":
+            continue  # §Perf variants live in the §Perf log, not the table
+        if mesh and r["mesh"].replace("x", "-") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(rec, a):
+    mark = "~" if a.get("approx") else " "
+    us = lambda v: f"{mark}{v*1e6:10.1f}"
+    fit = f"{a['hbm_gb']:5.1f}{'✓' if a['fits_16g'] else '✗'}"
+    return (
+        f"| {rec['arch']:<17} | {rec['shape']:<12} | {rec['mesh']:<7} "
+        f"| {us(a['t_compute'])} | {us(a['t_memory'])} | {us(a['t_collective'])} "
+        f"| {a['dominant']:<10} "
+        f"| {a['useful_ratio']:5.2f} | {a['roofline_fraction']:5.2f} | {fit} |"
+    )
+
+
+HEADER = (
+    "| arch              | shape        | mesh    |  compute µs  |  memory µs  "
+    "|  collect µs | dominant   | useful | roofline | HBM GB |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def pick_hillclimb_cells(recs):
+    """worst roofline fraction / most collective-bound / paper-representative."""
+    scored = []
+    for r in recs:
+        if r["arch"] == "batann-serve":
+            continue
+        a = analyze(r)
+        scored.append((r, a))
+    worst = min(scored, key=lambda ra: ra[1]["roofline_fraction"]
+                if ra[1]["roofline_fraction"] == ra[1]["roofline_fraction"]
+                else 1e9)
+    coll = max(scored, key=lambda ra: ra[1]["t_collective"]
+               / max(max(ra[1]["t_compute"], ra[1]["t_memory"]), 1e-12))
+    return {
+        "worst_roofline": f"{worst[0]['arch']}/{worst[0]['shape']}",
+        "most_collective_bound": f"{coll[0]['arch']}/{coll[0]['shape']}",
+        "paper_representative": "batann-serve/serve",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.normpath(ARTIFACTS))
+    ap.add_argument("--mesh", default=None, help="e.g. 16-16 or 2-16-16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    recs = load(args.dir, args.mesh)
+    lines = [HEADER]
+    for rec in recs:
+        a = analyze(rec)
+        lines.append(fmt_row(rec, a))
+        lines.append(f"|   ↳ move: {suggest(rec, a)} |" + " |" * 8)
+    out = "\n".join(lines)
+    print(out)
+    print()
+    print("hillclimb picks:", pick_hillclimb_cells(recs))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

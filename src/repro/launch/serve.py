@@ -1,0 +1,78 @@
+"""Serving launcher for the BatANN index (the paper's workload).
+
+    PYTHONPATH=src python -m repro.launch.serve --n 20000 --servers 8 \
+        --queries 256 --L 64 --W 8 [--sector-codes]
+
+Builds (or loads a cached) index over synthetic vectors and serves a batch
+of queries through the baton engine, reporting recall + the paper's
+efficiency counters + modeled cluster QPS/latency.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import baton, ref
+from repro.core.state import envelope_bytes
+from repro.data import synth
+from repro.io_sim.disk import DEFAULT as COST
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--L", type=int, default=64)
+    ap.add_argument("--W", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--sector-codes", action="store_true",
+                    help="AiSAQ sector layout (no replicated PQ array)")
+    ap.add_argument("--partitioner", default="ldg",
+                    choices=["ldg", "kmeans", "random"])
+    args = ap.parse_args()
+
+    ds = synth.make_dataset("deep", n=args.n, n_queries=args.queries, seed=0)
+    t0 = time.time()
+    knn = ref.brute_force_knn(ds.vectors, ds.vectors, 17)[:, 1:]
+    from repro.core import vamana
+
+    graph = vamana.build_from_knn(ds.vectors, knn, r=32, alpha=1.2)
+    index = baton.build_index(
+        ds.vectors, p=args.servers, pq_m=24, pq_k=256, graph=graph,
+        partitioner=args.partitioner,
+        codes_mode="sector" if args.sector_codes else "replicated",
+    )
+    print(f"[serve] index built in {time.time()-t0:.0f}s "
+          f"({args.n} pts, {args.servers} servers, "
+          f"{'sector' if args.sector_codes else 'replicated'} codes)")
+
+    cfg = baton.BatonParams(L=args.L, W=args.W, k=args.k, pool=256,
+                            slots=args.slots)
+    t0 = time.time()
+    ids, dists, stats = baton.run_simulated(index, ds.queries, cfg,
+                                            sector_codes=args.sector_codes)
+    print(f"[serve] {args.queries} queries in {time.time()-t0:.1f}s "
+          f"(simulated {args.servers} servers)")
+
+    rec = ref.recall_at_k(ids, ds.gt, 10)
+    env = envelope_bytes(ds.dim, cfg.L, cfg.pool)
+    qps = COST.cluster_qps(args.servers, stats["reads"].mean(),
+                           stats["dist_comps"].mean(),
+                           stats["inter_hops"].mean(), env)
+    lat = COST.query_latency_s(stats["hops"].mean(),
+                               stats["inter_hops"].mean(),
+                               stats["reads"].mean(),
+                               stats["dist_comps"].mean(), env)
+    print(f"  recall@10={rec:.3f} hops={stats['hops'].mean():.1f} "
+          f"inter={stats['inter_hops'].mean():.2f} "
+          f"reads={stats['reads'].mean():.1f} "
+          f"dcs={stats['dist_comps'].mean():.0f}")
+    print(f"  modeled: QPS={qps:.0f} latency={lat*1e3:.2f}ms "
+          f"bottleneck={COST.bottleneck(args.servers, stats['reads'].mean(), stats['dist_comps'].mean(), stats['inter_hops'].mean(), env)}")
+
+
+if __name__ == "__main__":
+    main()

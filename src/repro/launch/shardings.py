@@ -1,0 +1,240 @@
+"""Sharding strategy per (architecture x input shape x mesh).
+
+Logical-axis rules (MaxText-style) + parameter PartitionSpec trees:
+
+* batch        -> (pod, data)           all kinds
+* heads        -> model                 when n_heads % |model| == 0
+  (otherwise attention activations fall back to sequence sharding)
+* ffn / vocab  -> model                 (Megatron column/row TP)
+* kv_seq       -> model (decode_32k), (data, model) (long_500k, batch=1)
+* MoE experts  -> data (EP) x model (TP inside expert FFN), shard_map'd
+* FSDP         -> weight dims over data for >=10B-param archs
+* SSM blocks   -> FSDP only (merged channel dims don't divide TP cleanly;
+  the SSM archs are <2B so replication over model is cheap — DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import InputShape, ModelConfig
+from repro.models.layers import AxisRules
+
+
+FSDP_THRESHOLD = 10_000_000_000  # params
+
+
+@dataclasses.dataclass
+class CellSharding:
+    rules: AxisRules
+    param_specs: T.Params            # pytree of PartitionSpec
+    batch_axes: tuple
+    fsdp: bool
+    multi_pod: bool
+
+
+def _tp_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def make_rules(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool
+               ) -> AxisRules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    tp = _tp_size(mesh)
+    mapping = {
+        "batch": batch if shape.global_batch > 1 else None,
+        "ffn": "model",
+        # vocab TP only when the table divides (mamba2/hymba/internvl have
+        # non-multiple-of-16 vocabs -> replicated embeddings, all <2.6B)
+        "vocab": "model" if cfg.vocab_size % tp == 0 else None,
+    }
+    if cfg.n_heads and cfg.n_heads % tp == 0:
+        mapping["heads"] = "model"
+        mapping["q_seq"] = None
+    else:
+        # heads don't divide TP: context-parallel attention (q/scores
+        # sequence-sharded over model; K/V gathered — small for GQA)
+        mapping["heads"] = None
+        mapping["q_seq"] = "model" if shape.kind != "decode" else None
+    if shape.kind == "decode":
+        mapping["kv_seq"] = ("data", "model") if shape.global_batch == 1 \
+            else "model"
+    return AxisRules(mapping, mesh)
+
+
+def _attn_specs(cfg, fsdp_ax) -> "T.L.AttnParams":
+    from repro.models import layers as L
+
+    return L.AttnParams(
+        wq=P(fsdp_ax, "model"), wk=P(fsdp_ax, None), wv=P(fsdp_ax, None),
+        wo=P("model", fsdp_ax),
+        bq=P(None) if cfg.qkv_bias else None,
+        bk=P(None) if cfg.qkv_bias else None,
+        bv=P(None) if cfg.qkv_bias else None,
+        q_norm=P(None) if cfg.qk_norm else None,
+        k_norm=P(None) if cfg.qk_norm else None,
+    )
+
+
+def _ssm_specs(cfg, fsdp_ax):
+    from repro.models import ssm as S
+
+    return S.SSMParams(
+        w_in=P(fsdp_ax, None), conv_w=P(None, None), conv_b=P(None),
+        a_log=P(None), d_skip=P(None), dt_bias=P(None), norm=P(None),
+        w_out=P(None, fsdp_ax),
+    )
+
+
+def _mlp_specs(fsdp_ax):
+    from repro.models import layers as L
+
+    return L.MLPParams(
+        w_gate=P(fsdp_ax, "model"), w_up=P(fsdp_ax, "model"),
+        w_down=P("model", fsdp_ax),
+    )
+
+
+def _moe_specs(fsdp_ax):
+    from repro.models import moe as M
+
+    return M.MoEParams(
+        w_router=P(None, None),
+        wg=P("data", None, "model"),
+        wu=P("data", None, "model"),
+        wd=P("data", "model", None),
+    )
+
+
+def _add_layer_axis(spec_tree):
+    """Stacked layer params have a leading (n_layers,) dim — prepend None."""
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_param_specs(cfg: ModelConfig, mesh, multi_pod: bool,
+                     zero2: bool = False) -> T.Params:
+    """zero2=True (§Perf): compute params replicated over data (TP only);
+    only optimizer moments stay data-sharded -> no per-layer FSDP
+    all-gathers in fwd/bwd, one grad reduce-scatter per step instead."""
+    fsdp = cfg.param_count() >= FSDP_THRESHOLD and not zero2
+    fsdp_ax = "data" if fsdp else None
+    vocab_ax = "model" if cfg.vocab_size % _tp_size(mesh) == 0 else None
+    from repro.models import layers as L  # noqa: F401
+
+    layer = T.LayerParams(
+        ln1=P(None),
+        ln2=P(None) if (cfg.moe or (cfg.family != "ssm" and cfg.d_ff > 0))
+        else None,
+        attn=_attn_specs(cfg, fsdp_ax) if cfg.family != "ssm" else None,
+        ssm=_ssm_specs(cfg, fsdp_ax) if cfg.family in ("ssm", "hybrid")
+        else None,
+        mlp=_mlp_specs(fsdp_ax)
+        if (cfg.moe is None and cfg.family != "ssm" and cfg.d_ff > 0)
+        else None,
+        moe=_moe_specs(fsdp_ax) if cfg.moe else None,
+        shared_mlp=_mlp_specs(fsdp_ax) if (cfg.moe and cfg.moe.n_shared)
+        else None,
+    )
+    return T.Params(
+        embed=P(vocab_ax, fsdp_ax),
+        layers=_add_layer_axis(layer),
+        ln_f=P(None),
+        head=None if cfg.tie_embeddings else P(fsdp_ax, vocab_ax),
+    )
+
+
+def make_cell_sharding(cfg: ModelConfig, shape: InputShape, mesh,
+                       multi_pod: bool) -> CellSharding:
+    return CellSharding(
+        rules=make_rules(cfg, shape, mesh, multi_pod),
+        param_specs=make_param_specs(cfg, mesh, multi_pod),
+        batch_axes=("pod", "data") if multi_pod else ("data",),
+        fsdp=cfg.param_count() >= FSDP_THRESHOLD,
+        multi_pod=multi_pod,
+    )
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool,
+                compute_dtype=jnp.bfloat16):
+    """Returns (batch pytree of ShapeDtypeStruct, matching sharding tree)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    batch_spec = P(("pod", "data") if multi_pod else ("data",)) \
+        if b > 1 else P(None)
+
+    def sds(shp, dt, spec):
+        return (
+            jax.ShapeDtypeStruct(shp, dt),
+            NamedSharding(mesh, spec),
+        )
+
+    batch, shardings = {}, {}
+    if shape.kind == "train":
+        if cfg.frontend:
+            batch["embeds"], shardings["embeds"] = sds(
+                (b, s, cfg.d_model), compute_dtype,
+                P(*batch_spec, None, None))
+        else:
+            batch["tokens"], shardings["tokens"] = sds(
+                (b, s), jnp.int32, P(*batch_spec, None))
+        batch["labels"], shardings["labels"] = sds(
+            (b, s), jnp.int32, P(*batch_spec, None))
+    elif shape.kind == "prefill":
+        if cfg.frontend:
+            batch["embeds"], shardings["embeds"] = sds(
+                (b, s, cfg.d_model), compute_dtype,
+                P(*batch_spec, None, None))
+        else:
+            batch["tokens"], shardings["tokens"] = sds(
+                (b, s), jnp.int32, P(*batch_spec, None))
+    else:  # decode: one new token + the cache (cache specs built separately)
+        if cfg.frontend:
+            batch["embeds"], shardings["embeds"] = sds(
+                (b, 1, cfg.d_model), compute_dtype,
+                P(*batch_spec, None, None))
+        else:
+            batch["tokens"], shardings["tokens"] = sds(
+                (b, 1), jnp.int32, P(*batch_spec, None))
+    return batch, shardings
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool,
+                compute_dtype=jnp.bfloat16):
+    """(Caches ShapeDtypeStruct tree, NamedSharding tree) for decode cells."""
+    b, s_max = shape.global_batch, shape.seq_len
+    ctx = T.RunCtx(compute_dtype=compute_dtype)
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, b, s_max, ctx))
+    batch_ax = (("pod", "data") if multi_pod else ("data",)) if b > 1 else None
+    kv_seq_ax = ("data", "model") if b == 1 else "model"
+    spec = T.Caches(
+        k=P(None, batch_ax, kv_seq_ax, None, None)
+        if caches.k is not None else None,
+        v=P(None, batch_ax, kv_seq_ax, None, None)
+        if caches.v is not None else None,
+        conv=P(None, batch_ax, None, None) if caches.conv is not None
+        else None,
+        ssm=P(None, batch_ax, None, None, None) if caches.ssm is not None
+        else None,
+    )
+    return caches, named(mesh, spec)

@@ -1,0 +1,53 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 50 --batch 8 --seq 64 --ckpt artifacts/ckpt_qwen2
+
+Full-size configs target the production mesh (run under a real TPU runtime
+or the dry-run); ``--smoke`` selects the reduced same-family config that
+runs on one CPU device.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--moment-dtype", default="float32")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n_dev = len(jax.devices())
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"devices={n_dev}")
+
+    ctx = T.RunCtx(remat=not args.smoke)
+    tcfg = TrainConfig(
+        batch=args.batch, seq_len=args.seq, steps=args.steps,
+        microbatches=args.microbatches, ckpt_dir=args.ckpt,
+        opt=opt_mod.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                moment_dtype=args.moment_dtype),
+    )
+    _, _, losses = train(cfg, tcfg, ctx)
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

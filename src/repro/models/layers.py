@@ -1,0 +1,289 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (bias / qk-norm /
+sliding-window / global), SwiGLU MLP — all shape-static, scan-friendly, and
+annotated with *logical* sharding constraints resolved by launch/shardings.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class AxisRules:
+    """Logical-axis -> mesh-axis mapping (MaxText-style).
+
+    ``mapping`` maps a logical axis name ("batch", "heads", "ffn", ...) to a
+    mesh axis name, a tuple of mesh axes, or None (replicated).  With no mesh
+    the rules are inert, so the same model code runs unmeshed in smoke tests.
+    """
+
+    def __init__(self, mapping: dict | None = None, mesh=None):
+        self.mapping = mapping or {}
+        self.mesh = mesh
+
+    def spec(self, *names):
+        from jax.sharding import PartitionSpec
+
+        return PartitionSpec(
+            *[self.mapping.get(n) if n is not None else None for n in names]
+        )
+
+    def constrain(self, x, *names):
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*names))
+        )
+
+
+NO_RULES = AxisRules()
+
+# query-chunk size for memory-bounded attention (scores capped at
+# (B, H, ATTN_CHUNK, S) — the 32k-prefill requirement)
+ATTN_CHUNK = 1024
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_angles(positions, d_head: int, theta: float):
+    """positions: (...,) int32 -> cos/sin (..., d_head//2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B?, S, dh/2) broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(
+        x.dtype
+    )
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray            # (D, H*dh)
+    wk: jnp.ndarray            # (D, KV*dh)
+    wv: jnp.ndarray            # (D, KV*dh)
+    wo: jnp.ndarray            # (H*dh, D)
+    bq: Optional[jnp.ndarray]  # (H*dh,) or None
+    bk: Optional[jnp.ndarray]
+    bv: Optional[jnp.ndarray]
+    q_norm: Optional[jnp.ndarray]  # (dh,) qk-norm scales
+    k_norm: Optional[jnp.ndarray]
+
+
+def init_attn(cfg: ModelConfig, key, dtype) -> AttnParams:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    sc = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    mk = lambda k, shape, fan: (jax.random.normal(k, shape, jnp.float32)
+                                * sc(fan)).astype(dtype)
+    return AttnParams(
+        wq=mk(ks[0], (d, h * dh), d),
+        wk=mk(ks[1], (d, kv * dh), d),
+        wv=mk(ks[2], (d, kv * dh), d),
+        wo=mk(ks[3], (h * dh, d), h * dh),
+        bq=jnp.zeros((h * dh,), dtype) if cfg.qkv_bias else None,
+        bk=jnp.zeros((kv * dh,), dtype) if cfg.qkv_bias else None,
+        bv=jnp.zeros((kv * dh,), dtype) if cfg.qkv_bias else None,
+        q_norm=jnp.zeros((dh,), dtype) if cfg.qk_norm else None,
+        k_norm=jnp.zeros((dh,), dtype) if cfg.qk_norm else None,
+    )
+
+
+def _project_qkv(cfg: ModelConfig, p: AttnParams, x, positions, theta):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x, p.wq)
+    k = jnp.einsum("bsd,de->bse", x, p.wk)
+    v = jnp.einsum("bsd,de->bse", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    cos, sin = rope_angles(positions, dh, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _expand_kv(x, n_heads: int):
+    """(B, S, KV, dh) -> (B, S, H, dh) by block repetition (GQA groups)."""
+    b, s, kv, dh = x.shape
+    rep = n_heads // kv
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, s, kv, rep, dh)
+    ).reshape(b, s, n_heads, dh)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: AttnParams,
+    x: jnp.ndarray,            # (B, S, D)
+    positions: jnp.ndarray,    # (B, S) int32 absolute positions
+    is_global: jnp.ndarray | bool,
+    ax: AxisRules = NO_RULES,
+    q_chunk: int = ATTN_CHUNK,
+) -> jnp.ndarray:
+    """Full (train/prefill) attention with causal + optional sliding window.
+
+    Sharding: heads over TP when divisible ("heads" rule); otherwise the
+    query/sequence dim shards over TP ("q_seq" rule — context parallelism:
+    K/V are gathered, scores stay (B, H, S/tp, S) per device).
+    """
+    b, s, _ = x.shape
+    theta = jnp.where(
+        jnp.asarray(is_global), cfg.rope_theta_global, cfg.rope_theta
+    ) if cfg.global_every else cfg.rope_theta
+    q, k, v = _project_qkv(cfg, p, x, positions, theta)
+    q = ax.constrain(q, "batch", "q_seq", "heads", None)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    k = ax.constrain(k, "batch", None, "heads", None)
+    v = ax.constrain(v, "batch", None, "heads", None)
+
+    def _attend(qc, q_pos):
+        """qc: (B, Sq, H, dh); q_pos: (B, Sq).  Full K/V in scope."""
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(cfg.d_head))
+        qp = q_pos[:, :, None]
+        kp = positions[:, None, :]
+        keep = kp <= qp
+        if cfg.sliding_window is not None:
+            local = (qp - kp) < cfg.sliding_window
+            if cfg.global_every:
+                keep = jnp.where(jnp.asarray(is_global), keep, keep & local)
+            else:
+                keep = keep & local
+        scores = jnp.where(keep[:, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if s > q_chunk and s % q_chunk == 0:
+        # memory-bounded attention: scan over query chunks so the score
+        # matrix never exceeds (B, H, chunk, S) — required at 32k prefill.
+        nc = s // q_chunk
+        qr = q.reshape(b, nc, q_chunk, cfg.n_heads, cfg.d_head)
+        pr = positions.reshape(b, nc, q_chunk)
+
+        def body(_, inp):
+            qc, pc = inp
+            return None, _attend(qc, pc)
+
+        _, out = jax.lax.scan(
+            body, None,
+            (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(pr, 1, 0)),
+        )
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads, cfg.d_head)
+    else:
+        out = _attend(q, positions)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return jnp.einsum("bse,ed->bsd", out, p.wo)
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: AttnParams,
+    x: jnp.ndarray,            # (B, 1, D)
+    t: jnp.ndarray,            # () int32 — current position
+    k_cache: jnp.ndarray,      # (B, S_max, KV, dh)
+    v_cache: jnp.ndarray,
+    is_global: jnp.ndarray | bool,
+    ax: AxisRules = NO_RULES,
+    grouped: bool = False,
+):
+    """One-token decode against a KV cache.
+
+    The cache keeps native KV heads (memory!) and may be *sequence-sharded*
+    (kv_seq -> "model"): softmax/summation over the sharded axis lowers to
+    partial reductions + all-reduce (context-parallel decode).
+
+    ``grouped=True`` (§Perf optimization) keeps K/V at native KV heads in the
+    einsums — no (H/KV)x expansion of the cache in HBM; the MXU contracts the
+    query-group dim instead.
+    """
+    b = x.shape[0]
+    s_max = k_cache.shape[1]
+    theta = jnp.where(
+        jnp.asarray(is_global), cfg.rope_theta_global, cfg.rope_theta
+    ) if cfg.global_every else cfg.rope_theta
+    pos = jnp.full((b, 1), t, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos, theta)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, t, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, t, 0, 0))
+    k_cache = ax.constrain(k_cache, "batch", "kv_seq", None, None)
+    v_cache = ax.constrain(v_cache, "batch", "kv_seq", None, None)
+
+    kp = jnp.arange(s_max, dtype=jnp.int32)
+    keep = kp <= t
+    if cfg.sliding_window is not None:
+        local = (t - kp) < cfg.sliding_window
+        if cfg.global_every:
+            keep = jnp.where(jnp.asarray(is_global), keep, keep & local)
+        else:
+            keep = keep & local
+
+    if grouped:
+        g = cfg.n_kv_heads
+        hg = cfg.n_heads // g
+        qg = q.reshape(b, 1, g, hg, cfg.d_head)
+        scores = jnp.einsum("bqghd,bkgd->bghqk", qg, k_cache)
+        scores = scores.astype(jnp.float32) / jnp.sqrt(jnp.float32(cfg.d_head))
+        scores = jnp.where(keep[None, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bghqk,bkgd->bqghd", probs, v_cache)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    else:
+        kk = _expand_kv(k_cache, cfg.n_heads)       # (B, S_max, H, dh)
+        vv = _expand_kv(v_cache, cfg.n_heads)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(cfg.d_head))
+        scores = jnp.where(keep[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    return jnp.einsum("bse,ed->bsd", out, p.wo), k_cache, v_cache
+
+
+class MLPParams(NamedTuple):
+    w_gate: jnp.ndarray   # (D, F)
+    w_up: jnp.ndarray     # (D, F)
+    w_down: jnp.ndarray   # (F, D)
+
+
+def init_mlp(d: int, f: int, key, dtype) -> MLPParams:
+    ks = jax.random.split(key, 3)
+    mk = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan)
+    ).astype(dtype)
+    return MLPParams(
+        w_gate=mk(ks[0], (d, f), d),
+        w_up=mk(ks[1], (d, f), d),
+        w_down=mk(ks[2], (f, d), f),
+    )
+
+
+def mlp(p: MLPParams, x, ax: AxisRules = NO_RULES):
+    g = jnp.einsum("bsd,df->bsf", x, p.w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, p.w_up)
+    h = jax.nn.silu(g) * u
+    h = ax.constrain(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p.w_down)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN.
+
+Two interchangeable implementations (same math, same params):
+
+* ``moe_dense``  — every expert computed densely, combined by routing weights.
+  Used for single-device smoke tests (few, small experts).
+* ``moe_ep``     — production path: experts sharded over the ``data`` mesh
+  axis (EP) and the expert-FFN hidden dim over ``model`` (TP).  Token copies
+  are dispatched to expert owners with one capacity-bounded ``all_to_all``
+  per direction (the same routing machinery the baton engine uses — the
+  design symmetry called out in DESIGN.md), computed with
+  ``lax.ragged_dot`` grouped GEMMs, reduced over TP with one psum.
+
+Top-k routing with renormalized gates and per-pair capacity drops
+(capacity_factor, standard for bounded-shape SPMD MoE).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class MoEParams(NamedTuple):
+    w_router: jnp.ndarray   # (D, E)
+    wg: jnp.ndarray         # (E, D, Fe)
+    wu: jnp.ndarray         # (E, D, Fe)
+    wd: jnp.ndarray         # (E, Fe, D)
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> MoEParams:
+    d = cfg.d_model
+    e, fe = cfg.moe.n_experts, cfg.moe.d_expert
+    e_slots = cfg.moe.n_slots          # padded for EP divisibility
+    ks = jax.random.split(key, 4)
+    mk = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan)
+    ).astype(dtype)
+    return MoEParams(
+        w_router=mk(ks[0], (d, e), d),   # router only sees real experts
+        wg=mk(ks[1], (e_slots, d, fe), d),
+        wu=mk(ks[2], (e_slots, d, fe), d),
+        wd=mk(ks[3], (e_slots, fe, d), fe),
+    )
+
+
+def _route(cfg: ModelConfig, w_router, x2):
+    """x2: (T, D) -> (gates (T,k), expert ids (T,k)) with renormalized gates."""
+    logits = jnp.einsum("td,de->te", x2, w_router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids.astype(jnp.int32)
+
+
+def moe_dense(cfg: ModelConfig, p: MoEParams, x):
+    """All experts densely (smoke scale).  x: (B, S, D)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    gates, ids = _route(cfg, p.w_router, x2)
+    e_real = cfg.moe.n_experts
+    g = jnp.einsum("td,edf->tef", x2, p.wg[:e_real])
+    u = jnp.einsum("td,edf->tef", x2, p.wu[:e_real])
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("tef,efd->ted", h, p.wd[:e_real])  # (T, E, D)
+    onehot = jax.nn.one_hot(ids, cfg.moe.n_experts, dtype=x2.dtype)  # (T,k,E)
+    w = jnp.einsum("tk,tke->te", gates.astype(x2.dtype), onehot)
+    out = jnp.einsum("te,ted->td", w, out_e)
+    return out.reshape(b, s, d)
+
+
+def moe_ep(cfg: ModelConfig, p: MoEParams, x, mesh, batch_axes, ep_axis="data",
+           tp_axis="model"):
+    """Expert-parallel MoE via shard_map (see module docstring).
+
+    x: (B, S, D) sharded P(batch_axes, None, None); experts over ep_axis,
+    expert hidden dim over tp_axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    ed = mesh.shape[ep_axis]
+    tp = mesh.shape[tp_axis]
+    e, fe = cfg.moe.n_slots, cfg.moe.d_expert
+    assert e % ed == 0 and fe % tp == 0, (e, ed, fe, tp)
+    e_loc = e // ed
+    k = cfg.moe.top_k
+
+    def inner(x_loc, wr, wg, wu, wd):
+        bl, s, d = x_loc.shape
+        t_loc = bl * s
+        x2 = x_loc.reshape(t_loc, d)
+        gates, ids = _route(cfg, wr, x2)                  # (T,k)
+        flat_ids = ids.reshape(-1)                        # (T*k,)
+        flat_gates = gates.reshape(-1)
+        owner = flat_ids // e_loc                         # (T*k,) in [0, ED)
+
+        cap = max(1, int(round(t_loc * k / ed * cfg.moe.capacity_factor)))
+        onehot = jax.nn.one_hot(owner, ed, dtype=jnp.int32)
+        rank = (jnp.cumsum(onehot, axis=0) - onehot)
+        my_rank = jnp.sum(rank * onehot, axis=1)          # rank within dest
+        keep = my_rank < cap
+        d_idx = jnp.where(keep, owner, ed)                # ed = drop row
+        c_idx = jnp.where(keep, my_rank, cap)
+
+        tok_rows = jnp.arange(t_loc * k) // k
+        send_x = jnp.zeros((ed, cap, d), x2.dtype).at[d_idx, c_idx].set(
+            x2[tok_rows], mode="drop")
+        send_le = jnp.full((ed, cap), -1, jnp.int32).at[d_idx, c_idx].set(
+            (flat_ids % e_loc).astype(jnp.int32), mode="drop")
+
+        recv_x = jax.lax.all_to_all(send_x, ep_axis, 0, 0, tiled=True)
+        recv_le = jax.lax.all_to_all(send_le, ep_axis, 0, 0, tiled=True)
+        rx = recv_x.reshape(ed * cap, d)
+        rl = recv_le.reshape(ed * cap)
+
+        # group by local expert (invalid -> e_loc bucket at the end)
+        key_ = jnp.where(rl >= 0, rl, e_loc)
+        order = jnp.argsort(key_, stable=True)
+        rx_s = rx[order]
+        gs = jnp.bincount(key_, length=e_loc + 1)[:e_loc].astype(jnp.int32)
+
+        g = jax.lax.ragged_dot(rx_s, wg, gs)
+        u = jax.lax.ragged_dot(rx_s, wu, gs)
+        h = jax.nn.silu(g) * u                            # (M, Fe/tp)
+        y = jax.lax.ragged_dot(h, wd, gs)                 # partial over Fe
+        y = jax.lax.psum(y, tp_axis)                      # TP reduce
+
+        # unsort, ship back, combine
+        inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+        y_unsorted = y[inv].reshape(ed, cap, d)
+        back = jax.lax.all_to_all(y_unsorted, ep_axis, 0, 0, tiled=True)
+        back = back.reshape(ed * cap, d)
+        contrib = jnp.zeros((t_loc * k, d), y.dtype)
+        src = (d_idx * cap + c_idx).clip(0, ed * cap - 1)
+        contrib = jnp.where(keep[:, None], back[src], 0.0)
+        out = jnp.zeros((t_loc, d), y.dtype).at[tok_rows].add(
+            contrib * flat_gates[:, None].astype(y.dtype))
+        return out.reshape(bl, s, d).astype(x_loc.dtype)
+
+    spec_x = P(batch_axes, None, None)
+    return jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            spec_x, P(None, None), P(ep_axis, None, tp_axis),
+            P(ep_axis, None, tp_axis), P(ep_axis, tp_axis, None),
+        ),
+        out_specs=spec_x,
+        check_vma=False,
+    )(x, p.w_router, p.wg, p.wu, p.wd)
+
+
+def moe_forward(cfg: ModelConfig, p: MoEParams, x, shared_mlp=None,
+                mesh=None, batch_axes=None):
+    """Dispatch to the dense or EP implementation; add shared experts."""
+    if mesh is None or mesh.size == 1:
+        out = moe_dense(cfg, p, x)
+    else:
+        out = moe_ep(cfg, p, x, mesh, batch_axes)
+    if shared_mlp is not None:
+        from repro.models import layers as L
+
+        out = out + L.mlp(shared_mlp, x)
+    return out

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD algorithm: intra-chunk quadratic (attention-like) term + linear
+inter-chunk state recurrence via ``lax.scan`` (wall-clock and HLO size are
+independent of depth/sequence thanks to scan).  Single-token recurrent step
+for decode (O(1) state: conv tail + (H, P, N) SSM state).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class SSMParams(NamedTuple):
+    w_in: jnp.ndarray       # (D, 2*Di + 2*N + H) -> z, x, B, C, dt
+    conv_w: jnp.ndarray     # (d_conv, Di + 2*N) depthwise causal conv
+    conv_b: jnp.ndarray     # (Di + 2*N,)
+    a_log: jnp.ndarray      # (H,)
+    d_skip: jnp.ndarray     # (H,)
+    dt_bias: jnp.ndarray    # (H,)
+    norm: jnp.ndarray       # (Di,) gated RMSNorm scale
+    w_out: jnp.ndarray      # (Di, D)
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray       # (B, d_conv-1, Di + 2*N) — conv tail
+    ssm: jnp.ndarray        # (B, H, P, N) — recurrent state
+
+
+def init_ssm(cfg: ModelConfig, key, dtype) -> SSMParams:
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    n = cfg.ssm.d_state
+    h = cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    mk = lambda k, shape, fan: (
+        jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan)
+    ).astype(dtype)
+    return SSMParams(
+        w_in=mk(ks[0], (d, 2 * di + 2 * n + h), d),
+        conv_w=mk(ks[1], (cfg.ssm.d_conv, di + 2 * n), cfg.ssm.d_conv),
+        conv_b=jnp.zeros((di + 2 * n,), dtype),
+        a_log=jnp.zeros((h,), jnp.float32),            # A = -exp(a_log) ~ -1
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.zeros((h,), jnp.float32),
+        norm=jnp.zeros((di,), dtype),
+        w_out=mk(ks[3], (di, d), di),
+    )
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    di, n, h = cfg.d_inner_ssm, cfg.ssm.d_state, cfg.n_ssm_heads
+    p = cfg.ssm.headdim
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm.d_conv - 1, di + 2 * n), dtype),
+        ssm=jnp.zeros((batch, h, p, n), jnp.float32),
+    )
+
+
+def _split_in(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner_ssm, cfg.ssm.d_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, tail=None):
+    """Depthwise causal conv along time.  xbc: (B, S, C)."""
+    k = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)         # (B, S+k-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(k)
+    )
+    new_tail = xp[:, -(k - 1) :, :] if k > 1 else pad
+    return jax.nn.silu(out + conv_b), new_tail
+
+
+def _ssd_chunked(cfg: ModelConfig, x, b, c, dt, a):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); b, c: (B, S, N); dt: (B, S, H) (softplus'd);
+    a: (H,) negative.  Returns y: (B, S, H, P).
+    """
+    B_, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(cfg.ssm.chunk, S) if S % cfg.ssm.chunk else cfg.ssm.chunk
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is state-neutral: zero input, unit decay
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+    S_p = S + pad
+    nc = S_p // Q
+
+    # per-step log decay
+    da = dt * a[None, None, :]                       # (B, S, H)
+    xd = x * dt[..., None]                           # input scaled by dt
+
+    def reshape_c(t, extra):
+        return t.reshape((B_, nc, Q) + extra)
+
+    xc = reshape_c(xd, (H, P))
+    bc = reshape_c(b, (N,))
+    cc = reshape_c(c, (N,))
+    dac = reshape_c(da, (H,))
+
+    cum = jnp.cumsum(dac, axis=2)                    # (B, nc, Q, H)
+    # intra-chunk (attention-like) term
+    # L[q, k] = exp(cum[q] - cum[k]) for k <= q
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    l = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)            # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, l, xc)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_to_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(h0, inp):
+        st, dec = inp                                     # (B,H,P,N),(B,H)
+        h1 = h0 * dec[:, :, None, None] + st
+        return h1, h0
+
+    h_init = jnp.zeros((B_, H, P, N), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (
+            jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32),
+        ),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                   # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    y_off = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(cum), h_prev.astype(cc.dtype)
+    )
+    y = (y_diag + y_off).reshape(B_, S_p, H, P)
+    return y[:, :S], h_last
+
+
+class _Out(NamedTuple):
+    y: jnp.ndarray
+    state: SSMState
+
+
+def ssm_forward(cfg: ModelConfig, p: SSMParams, x, state: SSMState | None = None):
+    """Full-sequence SSD mixer.  x: (B, S, D) -> ((B, S, D), final SSMState)."""
+    di, n, h = cfg.d_inner_ssm, cfg.ssm.d_state, cfg.n_ssm_heads
+    hp = cfg.ssm.headdim
+    proj = jnp.einsum("bsd,de->bse", x, p.w_in)
+    z, xbc, dt = _split_in(cfg, proj)
+    tail = state.conv if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, p.conv_w, p.conv_b, tail)
+    xs = xbc[..., :di].reshape(x.shape[0], x.shape[1], h, hp)
+    b = xbc[..., di : di + n]
+    c = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.a_log)
+    y, h_last = _ssd_chunked(cfg, xs.astype(jnp.float32), b.astype(jnp.float32),
+                             c.astype(jnp.float32), dt, a)
+    y = y + xs.astype(jnp.float32) * p.d_skip[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], di).astype(x.dtype)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out)
+    return out, SSMState(conv=new_tail, ssm=h_last)
+
+
+def ssm_decode(cfg: ModelConfig, p: SSMParams, x, state: SSMState):
+    """Single-token recurrent step.  x: (B, 1, D)."""
+    di, n, h = cfg.d_inner_ssm, cfg.ssm.d_state, cfg.n_ssm_heads
+    hp = cfg.ssm.headdim
+    proj = jnp.einsum("bsd,de->bse", x, p.w_in)
+    z, xbc, dt = _split_in(cfg, proj)
+    # conv over (tail ++ current)
+    window = jnp.concatenate([state.conv.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, p.conv_w) + p.conv_b
+    xbc1 = jax.nn.silu(out)[:, None, :]              # (B,1,C)
+    new_tail = window[:, 1:, :]
+
+    xs = xbc1[..., :di].reshape(x.shape[0], h, hp)
+    b = xbc1[:, 0, di : di + n]                      # (B,N)
+    c = xbc1[:, 0, di + n :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p.dt_bias)  # (B,H)
+    a = -jnp.exp(p.a_log)
+    dec = jnp.exp(dt1 * a[None, :])                  # (B,H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xs.astype(jnp.float32),
+                     b.astype(jnp.float32), dt1)
+    new_ssm = state.ssm * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p.d_skip[None, :, None]
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p.w_out)
+    return out, SSMState(conv=new_tail, ssm=new_ssm)

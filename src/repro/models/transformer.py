@@ -1,0 +1,371 @@
+"""Unified decoder LM over all assigned families (dense / MoE / SSM / hybrid
+/ stub-fronted audio & VLM).
+
+* ``lax.scan`` over stacked layer params — HLO size (and 512-device CPU
+  compile time) independent of depth.
+* Per-layer structural differences (gemma3's 5:1 local:global pattern) ride
+  along as scanned boolean xs.
+* ``RunCtx`` carries mesh + logical axis rules + dtypes + remat policy; with
+  mesh=None the same code runs unmeshed on one CPU device (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import AxisRules, NO_RULES
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    ax: AxisRules = NO_RULES
+    mesh: object = None
+    batch_axes: object = None          # mesh axes sharding the batch dim
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    remat: bool = False
+    attn_chunk: int = 1024             # q-chunked attention threshold/size
+    scan_unroll: bool = False          # unroll layer scan (dry-run accuracy:
+    #                                    XLA cost analysis counts loop bodies
+    #                                    once — see EXPERIMENTS.md §Dry-run)
+    grouped_gqa: bool = False          # §Perf: decode attention without
+    #                                    (H/KV)x KV-cache head expansion
+
+
+class LayerParams(NamedTuple):
+    ln1: jnp.ndarray
+    ln2: Optional[jnp.ndarray]
+    attn: Optional[L.AttnParams]
+    ssm: Optional[ssm_mod.SSMParams]
+    mlp: Optional[L.MLPParams]
+    moe: Optional[moe_mod.MoEParams]
+    shared_mlp: Optional[L.MLPParams]
+
+
+class Params(NamedTuple):
+    embed: jnp.ndarray                 # (V, D)
+    layers: LayerParams                # stacked leading (n_layers,)
+    ln_f: jnp.ndarray
+    head: Optional[jnp.ndarray]        # (D, V) when untied
+
+
+class Caches(NamedTuple):
+    k: Optional[jnp.ndarray]           # (L, B, S_max, KV, dh)
+    v: Optional[jnp.ndarray]
+    conv: Optional[jnp.ndarray]        # (L, B, d_conv-1, C)
+    ssm: Optional[jnp.ndarray]         # (L, B, H, P, N)
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _has_dense_mlp(cfg: ModelConfig) -> bool:
+    return cfg.moe is None and cfg.family != "ssm" and cfg.d_ff > 0
+
+
+def _is_global_flags(cfg: ModelConfig) -> jnp.ndarray:
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.global_every:
+        return (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.ones((cfg.n_layers,), bool)
+
+
+def init_layer(cfg: ModelConfig, key, dtype) -> LayerParams:
+    ks = jax.random.split(key, 5)
+    return LayerParams(
+        ln1=jnp.zeros((cfg.d_model,), dtype),
+        ln2=jnp.zeros((cfg.d_model,), dtype)
+        if (_has_dense_mlp(cfg) or cfg.moe) else None,
+        attn=L.init_attn(cfg, ks[0], dtype) if _has_attn(cfg) else None,
+        ssm=ssm_mod.init_ssm(cfg, ks[1], dtype) if _has_ssm(cfg) else None,
+        mlp=L.init_mlp(cfg.d_model, cfg.d_ff, ks[2], dtype)
+        if _has_dense_mlp(cfg) else None,
+        moe=moe_mod.init_moe(cfg, ks[3], dtype) if cfg.moe else None,
+        shared_mlp=L.init_mlp(
+            cfg.d_model, cfg.moe.d_expert * cfg.moe.n_shared, ks[4], dtype
+        ) if (cfg.moe and cfg.moe.n_shared) else None,
+    )
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k2, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    embed = (
+        jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    ).astype(dtype)
+    head = None
+    if not cfg.tie_embeddings:
+        head = (
+            jax.random.normal(k3, (cfg.d_model, cfg.vocab_size), jnp.float32)
+            / jnp.sqrt(cfg.d_model)
+        ).astype(dtype)
+    return Params(
+        embed=embed, layers=layers,
+        ln_f=jnp.zeros((cfg.d_model,), dtype), head=head,
+    )
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """ShapeDtypeStruct tree (no allocation) — dry-run currency."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _cast_tree(tree, dt):
+    """Cast floating leaves to the compute dtype (mixed-precision matmuls)."""
+    return jax.tree.map(
+        lambda w: w.astype(dt) if jnp.issubdtype(w.dtype, jnp.floating)
+        else w, tree,
+    )
+
+
+def _block(cfg: ModelConfig, lp: LayerParams, x, positions, is_global,
+           ctx: RunCtx):
+    lp = _cast_tree(lp, ctx.compute_dtype)
+    h = L.rms_norm(x, lp.ln1, cfg.norm_eps)
+    mix = None
+    if _has_attn(cfg):
+        mix = L.attention(cfg, lp.attn, h, positions, is_global, ctx.ax,
+                          q_chunk=ctx.attn_chunk)
+    if _has_ssm(cfg):
+        s_out, _ = ssm_mod.ssm_forward(cfg, lp.ssm, h)
+        mix = s_out if mix is None else 0.5 * (mix + s_out)
+    x = x + mix
+    if lp.ln2 is not None:
+        h2 = L.rms_norm(x, lp.ln2, cfg.norm_eps)
+        if cfg.moe is not None:
+            f = moe_mod.moe_forward(cfg, lp.moe, h2, shared_mlp=lp.shared_mlp,
+                                    mesh=ctx.mesh, batch_axes=ctx.batch_axes)
+        else:
+            f = L.mlp(lp.mlp, h2, ctx.ax)
+        x = x + f
+    x = ctx.ax.constrain(x, "batch", "seq", None)
+    return x
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: dict, ctx: RunCtx):
+    """tokens (B, S) int32 -> (B, S, D); or precomputed 'embeds' (stub
+    audio/vision frontends, DESIGN §Arch-applicability)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(ctx.compute_dtype)
+    else:
+        x = params.embed[batch["tokens"]].astype(ctx.compute_dtype)
+    return ctx.ax.constrain(x, "batch", "seq", None)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict,
+            ctx: RunCtx = RunCtx()) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, V)."""
+    x = embed_inputs(cfg, params, batch, ctx)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    flags = _is_global_flags(cfg)
+
+    def body(carry, layer):
+        lp, is_g = layer
+        return _block(cfg, lp, carry, positions, is_g, ctx), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params.layers, flags),
+                        unroll=cfg.n_layers if ctx.scan_unroll else 1)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    w = params.embed.T if params.head is None else params.head
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return ctx.ax.constrain(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            ctx: RunCtx = RunCtx()):
+    logits = forward(cfg, params, batch, ctx).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, ctx: RunCtx) -> Caches:
+    dt = ctx.compute_dtype
+    k = v = conv = ssm = None
+    if _has_attn(cfg):
+        shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.d_head)
+        k = jnp.zeros(shape, dt)
+        v = jnp.zeros(shape, dt)
+    if _has_ssm(cfg):
+        c = cfg.d_inner_ssm + 2 * cfg.ssm.d_state
+        conv = jnp.zeros((cfg.n_layers, batch, cfg.ssm.d_conv - 1, c), dt)
+        ssm = jnp.zeros(
+            (cfg.n_layers, batch, cfg.n_ssm_heads, cfg.ssm.headdim,
+             cfg.ssm.d_state), jnp.float32,
+        )
+    return Caches(k=k, v=v, conv=conv, ssm=ssm)
+
+
+def constrain_caches(caches: Caches, ctx: RunCtx) -> Caches:
+    ax = ctx.ax
+    return Caches(
+        k=ax.constrain(caches.k, None, "batch", "kv_seq", None, None)
+        if caches.k is not None else None,
+        v=ax.constrain(caches.v, None, "batch", "kv_seq", None, None)
+        if caches.v is not None else None,
+        conv=ax.constrain(caches.conv, None, "batch", None, None)
+        if caches.conv is not None else None,
+        ssm=ax.constrain(caches.ssm, None, "batch", None, None, None)
+        if caches.ssm is not None else None,
+    )
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, t, caches: Caches,
+                ctx: RunCtx = RunCtx()):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B, 1, D));
+    t: () int32 current position; caches hold 0..t-1.  Returns
+    (logits (B, V), new caches)."""
+    if isinstance(tokens, dict):
+        x = embed_inputs(cfg, params, tokens, ctx)
+    else:
+        x = params.embed[tokens].astype(ctx.compute_dtype)
+    flags = _is_global_flags(cfg)
+
+    def body(carry, layer):
+        x = carry
+        lp, is_g, kc, vc, convc, ssmc = layer
+        lp = _cast_tree(lp, ctx.compute_dtype)
+        h = L.rms_norm(x, lp.ln1, cfg.norm_eps)
+        mix = None
+        new_k = new_v = new_conv = new_ssm = jnp.zeros((0,))
+        if _has_attn(cfg):
+            a, new_k, new_v = L.attention_decode(
+                cfg, lp.attn, h, t, kc, vc, is_g, ctx.ax,
+                grouped=ctx.grouped_gqa,
+            )
+            mix = a
+        if _has_ssm(cfg):
+            s_out, st = ssm_mod.ssm_decode(
+                cfg, lp.ssm, h, ssm_mod.SSMState(conv=convc, ssm=ssmc)
+            )
+            new_conv, new_ssm = st.conv, st.ssm
+            mix = s_out if mix is None else 0.5 * (mix + s_out)
+        x = x + mix
+        if lp.ln2 is not None:
+            h2 = L.rms_norm(x, lp.ln2, cfg.norm_eps)
+            if cfg.moe is not None:
+                f = moe_mod.moe_forward(
+                    cfg, lp.moe, h2, shared_mlp=lp.shared_mlp,
+                    mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+                )
+            else:
+                f = L.mlp(lp.mlp, h2, ctx.ax)
+            x = x + f
+        return x, (new_k, new_v, new_conv, new_ssm)
+
+    dummy = jnp.zeros((cfg.n_layers, 0))
+    xs = (
+        params.layers, flags,
+        caches.k if caches.k is not None else dummy,
+        caches.v if caches.v is not None else dummy,
+        caches.conv if caches.conv is not None else dummy,
+        caches.ssm if caches.ssm is not None else dummy,
+    )
+    x, (nk, nv, nconv, nssm) = jax.lax.scan(
+        body, x, xs, unroll=cfg.n_layers if ctx.scan_unroll else 1
+    )
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    w = params.embed.T if params.head is None else params.head
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))[:, 0]
+    new_caches = Caches(
+        k=nk if caches.k is not None else None,
+        v=nv if caches.v is not None else None,
+        conv=nconv if caches.conv is not None else None,
+        ssm=nssm if caches.ssm is not None else None,
+    )
+    return ctx.ax.constrain(logits, "batch", "vocab"), constrain_caches(
+        new_caches, ctx
+    )
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, s_max: int,
+            ctx: RunCtx = RunCtx()):
+    """Process the prompt; return (last-token logits, filled caches)."""
+    x = embed_inputs(cfg, params, batch, ctx)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    flags = _is_global_flags(cfg)
+
+    def body(carry, layer):
+        x = carry
+        lp, is_g = layer
+        lp = _cast_tree(lp, ctx.compute_dtype)
+        h = L.rms_norm(x, lp.ln1, cfg.norm_eps)
+        mix = None
+        new_k = new_v = new_conv = new_ssm = jnp.zeros((0,))
+        if _has_attn(cfg):
+            # capture this layer's K/V for the cache while running full attn
+            theta = jnp.where(
+                jnp.asarray(is_g), cfg.rope_theta_global, cfg.rope_theta
+            ) if cfg.global_every else cfg.rope_theta
+            q, k, v = L._project_qkv(cfg, lp.attn, h, positions, theta)
+            new_k = jnp.zeros((b, s_max) + k.shape[2:], k.dtype)
+            new_k = jax.lax.dynamic_update_slice(new_k, k, (0, 0, 0, 0))
+            new_v = jnp.zeros((b, s_max) + v.shape[2:], v.dtype)
+            new_v = jax.lax.dynamic_update_slice(new_v, v, (0, 0, 0, 0))
+            mix = L.attention(cfg, lp.attn, h, positions, is_g, ctx.ax,
+                              q_chunk=ctx.attn_chunk)
+        if _has_ssm(cfg):
+            s_out, st = ssm_mod.ssm_forward(cfg, lp.ssm, h)
+            new_conv, new_ssm = st.conv, st.ssm
+            mix = s_out if mix is None else 0.5 * (mix + s_out)
+        x = x + mix
+        if lp.ln2 is not None:
+            h2 = L.rms_norm(x, lp.ln2, cfg.norm_eps)
+            if cfg.moe is not None:
+                f = moe_mod.moe_forward(
+                    cfg, lp.moe, h2, shared_mlp=lp.shared_mlp,
+                    mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+                )
+            else:
+                f = L.mlp(lp.mlp, h2, ctx.ax)
+            x = x + f
+        x = ctx.ax.constrain(x, "batch", "seq", None)
+        return x, (new_k, new_v, new_conv, new_ssm)
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, (nk, nv, nconv, nssm) = jax.lax.scan(
+        body, x, (params.layers, flags),
+        unroll=cfg.n_layers if ctx.scan_unroll else 1,
+    )
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    w = params.embed.T if params.head is None else params.head
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w.astype(x.dtype))
+    caches = Caches(
+        k=nk if _has_attn(cfg) else None,
+        v=nv if _has_attn(cfg) else None,
+        conv=nconv if _has_ssm(cfg) else None,
+        ssm=nssm if _has_ssm(cfg) else None,
+    )
+    return logits, constrain_caches(caches, ctx)

@@ -1,0 +1,47 @@
+"""Batched autoregressive serving: prefill + greedy/temperature decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def generate(
+    cfg: ModelConfig,
+    params: T.Params,
+    prompts: jnp.ndarray,          # (B, S_prompt) int32
+    max_new: int = 32,
+    temperature: float = 0.0,
+    seed: int = 0,
+    ctx: T.RunCtx = T.RunCtx(),
+):
+    """Greedy (or sampled) continuation.  Returns (B, max_new) tokens."""
+    b, s = prompts.shape
+    s_max = s + max_new
+    logits, caches = T.prefill(cfg, params, {"tokens": prompts}, s_max, ctx)
+
+    def sample(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def body(carry, i):
+        tok, caches, key = carry
+        key, sub = jax.random.split(key)
+        lg, caches = T.decode_step(
+            cfg, params, tok[:, None], s + i, caches, ctx
+        )
+        nxt = sample(lg, sub)
+        return (nxt, caches, key), nxt
+
+    first = sample(logits, jax.random.key(seed))
+    (_, _, _), toks = jax.lax.scan(
+        body, (first, caches, jax.random.key(seed + 1)),
+        jnp.arange(max_new - 1, dtype=jnp.int32),
+    )
+    return jnp.concatenate([first[:, None], toks.T], axis=1)

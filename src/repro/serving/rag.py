@@ -1,0 +1,69 @@
+"""RAG serving pipeline — the paper's motivating deployment (§1).
+
+Documents are embedded into the vector index (BatANN over the partitioned
+global graph); a query retrieves the top-k nearest documents and their token
+chunks are prepended to the prompt served by the LM tenant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baton
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import decode
+
+
+@dataclasses.dataclass
+class RAGSystem:
+    index: baton.BatonIndex
+    search_cfg: baton.BatonParams
+    doc_tokens: np.ndarray         # (N_docs, chunk_len) int32
+    lm_cfg: ModelConfig
+    lm_params: T.Params
+
+    def retrieve(self, query_embs: np.ndarray):
+        """(B, d) query embeddings -> (ids, dists, stats)."""
+        return baton.run_simulated(self.index, query_embs, self.search_cfg)
+
+    def answer(self, query_embs: np.ndarray, prompt_tokens: np.ndarray,
+               max_new: int = 16):
+        """Retrieve k doc chunks per query, prepend, generate."""
+        ids, _, stats = self.retrieve(query_embs)
+        b = query_embs.shape[0]
+        k = min(2, ids.shape[1])
+        ctx_tokens = self.doc_tokens[np.clip(ids[:, :k], 0, None)]
+        ctx_tokens = ctx_tokens.reshape(b, -1)
+        full = np.concatenate([ctx_tokens, prompt_tokens], axis=1)
+        full = np.mod(full, self.lm_cfg.vocab_size).astype(np.int32)
+        out = decode.generate(
+            self.lm_cfg, self.lm_params, jnp.asarray(full), max_new=max_new
+        )
+        return np.asarray(out), ids, stats
+
+
+def build_demo(n_docs: int = 2000, d: int = 64, p: int = 4, seed: int = 0,
+               lm_cfg: ModelConfig | None = None):
+    """Small end-to-end RAG system over synthetic docs (examples + tests)."""
+    from repro.configs.registry import get_smoke_config
+
+    rng = np.random.default_rng(seed)
+    doc_embs = rng.normal(size=(n_docs, d)).astype(np.float32)
+    index = baton.build_index(doc_embs, p=p, r=16, l_build=32, pq_m=16,
+                              pq_k=64, head_fraction=0.02, seed=seed)
+    lm_cfg = lm_cfg or get_smoke_config("qwen2-0.5b")
+    import jax
+
+    lm_params = T.init_params(lm_cfg, jax.random.key(seed))
+    doc_tokens = rng.integers(
+        0, lm_cfg.vocab_size, size=(n_docs, 8)
+    ).astype(np.int32)
+    return RAGSystem(
+        index=index,
+        search_cfg=baton.BatonParams(L=32, W=4, k=10, pool=128, slots=16),
+        doc_tokens=doc_tokens, lm_cfg=lm_cfg, lm_params=lm_params,
+    )

@@ -1,0 +1,118 @@
+"""Training loop: microbatched grad accumulation, remat, checkpoint/restart,
+deterministic resumable data pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.data import synth
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    batch: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    microbatches: int = 1          # grad accumulation
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    log_every: int = 10
+    seed: int = 0
+    opt: opt_mod.AdamWConfig = opt_mod.AdamWConfig()
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, ctx: T.RunCtx):
+    """Returns jit-able (params, opt_state, batch) -> (params, opt_state,
+    metrics).  Grad accumulation via lax.scan over microbatches."""
+
+    def train_step(params, opt_state, batch):
+        mb = tcfg.microbatches
+
+        if mb == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, p, batch, ctx)
+            )(params)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: T.loss_fn(cfg, p, mb_batch, ctx)
+                )(params)
+                return (
+                    loss_acc + l / mb,
+                    jax.tree.map(lambda a, b: a + b / mb, grads_acc, g),
+                ), None
+
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.float32(0.0), zero), micro
+            )
+        params, opt_state, metrics = opt_mod.apply(
+            tcfg.opt, opt_state, params, grads
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, ctx: T.RunCtx = T.RunCtx(),
+          params=None, verbose: bool = True):
+    """Run training; resumes from tcfg.ckpt_dir when a checkpoint exists."""
+    if params is None:
+        params = T.init_params(cfg, jax.random.key(tcfg.seed),
+                               ctx.param_dtype)
+    opt_state = opt_mod.init(tcfg.opt, params)
+    start_step = 0
+
+    if tcfg.ckpt_dir:
+        try:
+            (params, opt_state), start_step, _ = ckpt.restore(
+                tcfg.ckpt_dir, (params, opt_state)
+            )
+            if verbose:
+                print(f"[train] resumed from step {start_step}")
+        except FileNotFoundError:
+            pass
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg, ctx))
+    losses = []
+    t0 = time.time()
+    for step, batch in enumerate(
+        synth.token_batches(cfg.vocab_size, tcfg.batch, tcfg.seq_len,
+                            tcfg.steps, seed=tcfg.seed)
+    ):
+        if step < start_step:
+            continue  # deterministic pipeline: fast-forward on resume
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.frontend:
+            rng = np.random.default_rng((tcfg.seed << 20) ^ step)
+            jb["embeds"] = jnp.asarray(
+                rng.normal(size=(tcfg.batch, tcfg.seq_len, cfg.d_model))
+                .astype(np.float32)
+            )
+            del jb["tokens"]
+        params, opt_state, metrics = step_fn(params, opt_state, jb)
+        losses.append(float(metrics["loss"]))
+        if verbose and step % tcfg.log_every == 0:
+            dt = time.time() - t0
+            print(f"[train] step {step} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.1f}s)")
+        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, step + 1, (params, opt_state))
+    return params, opt_state, losses

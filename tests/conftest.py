@@ -1,0 +1,41 @@
+"""Shared fixtures: a small dataset + index built once per session.
+
+NOTE: no XLA_FLAGS here — tests must see the real single-device CPU backend
+(the 512-device override is exclusive to launch/dryrun.py).  Distributed
+multi-device behaviour is tested via subprocesses (test_spmd.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baton, pq, vamana
+from repro.data import synth
+
+
+@pytest.fixture(scope="session")
+def dataset():
+    return synth.make_dataset("deep", n=1500, n_queries=32, seed=0)
+
+
+@pytest.fixture(scope="session")
+def graph(dataset):
+    return vamana.build(dataset.vectors, r=20, l_build=40, alpha=1.2,
+                        max_batch=512, seed=0)
+
+
+@pytest.fixture(scope="session")
+def codebook(dataset):
+    return pq.train(dataset.vectors, m=16, k=128, iters=5, seed=0)
+
+
+@pytest.fixture(scope="session")
+def codes(dataset, codebook):
+    return pq.encode(codebook, dataset.vectors)
+
+
+@pytest.fixture(scope="session")
+def baton_index(dataset, graph):
+    return baton.build_index(
+        dataset.vectors, p=4, pq_m=16, pq_k=128, head_fraction=0.03,
+        seed=0, graph=graph,
+    )

@@ -1,0 +1,75 @@
+"""Fault tolerance: replica failover, query re-issue, elastic rescale."""
+
+import numpy as np
+import pytest
+
+from repro.ft import elastic
+
+
+def test_partition_map_failover():
+    pm = elastic.PartitionMap.create(n_logical=8, n_devices=8, r=2)
+    t0 = pm.routing_table()
+    assert (t0 == np.arange(8)).all()
+    pm.fail_device(3)
+    t1 = pm.routing_table()
+    assert t1[3] != 3 and pm.coverage_ok()
+    pm.recover_device(3)
+    assert (pm.routing_table() == t0).all()
+
+
+def test_partition_map_total_loss_detected():
+    pm = elastic.PartitionMap.create(n_logical=4, n_devices=4, r=1)
+    pm.fail_device(2)
+    assert not pm.coverage_ok()
+
+
+def test_reissue_tracker():
+    calls = {"n": 0}
+
+    def flaky_run(queries):
+        calls["n"] += 1
+        n = queries.shape[0]
+        ids = np.tile(np.arange(10, dtype=np.int32), (n, 1))
+        dists = np.zeros((n, 10), np.float32)
+        if calls["n"] == 1:  # first attempt: drop the last 3 queries
+            ids[-3:] = -1
+        return ids, dists, {"hops": np.full(n, 5)}
+
+    tr = elastic.ReissueTracker(max_attempts=3)
+    q = np.zeros((8, 4), np.float32)
+    ids, dists, stats, pending = tr.run_with_retries(flaky_run, q)
+    assert len(pending) == 0 and calls["n"] == 2
+    assert (ids[:, 0] >= 0).all()
+
+
+def test_elastic_rescale_preserves_balance_and_locality(graph):
+    from repro.core import partition
+
+    old = partition.ldg_partition(graph.neighbors, 4, passes=2)
+    new = elastic.rescale_assignment(graph.neighbors, old, 6)
+    sizes = np.bincount(new, minlength=6)
+    cap = partition.partition_capacity(len(old), 6)
+    assert (sizes <= cap).all() and sizes.min() > 0
+    rand = partition.random_partition(len(old), 6)
+    assert partition.edge_locality(graph.neighbors, new) > \
+        partition.edge_locality(graph.neighbors, rand) + 0.1
+
+
+def test_failover_search_still_correct(dataset, baton_index):
+    """Serving continues (correctly) when a device fails: queries re-routed
+    to replicas by rebuilding the index maps for the surviving devices."""
+    from repro.core import baton, ref  # noqa: F401
+    from repro.ft.elastic import rescale_assignment
+
+    # device 3 dies -> re-shard 4 -> 3 partitions from persisted assignment
+    new_assign = rescale_assignment(
+        baton_index.graph.neighbors, baton_index.assign, 3
+    )
+    idx3 = baton.build_index(
+        dataset.vectors, p=3, pq_m=16, pq_k=128, head_fraction=0.03,
+        seed=0, graph=baton_index.graph, assign=new_assign,
+    )
+    cfg = baton.BatonParams(L=40, W=8, k=10, pool=256, slots=24)
+    ids, _, stats = baton.run_simulated(idx3, dataset.queries, cfg)
+    rec = ref.recall_at_k(ids, dataset.gt, 10)
+    assert rec > 0.85 and stats["delivered"] == 1.0

@@ -1,0 +1,53 @@
+"""Cost model sanity: bottleneck identification + paper-consistent latencies."""
+
+import pytest
+
+from repro.io_sim.disk import CostModel
+
+
+def test_latency_components_additive():
+    cm = CostModel()
+    base = cm.query_latency_s(hops=30, inter_hops=0, reads=100,
+                              dist_comps=1500, envelope_bytes=4096)
+    withnet = cm.query_latency_s(hops=30, inter_hops=5, reads=100,
+                                 dist_comps=1500, envelope_bytes=4096)
+    assert withnet > base
+    # baton one-way hop must beat a request-reply round trip
+    rr = cm.query_latency_rr_s(hops=30, round_trips=5, reads=100,
+                               dist_comps=1500)
+    assert withnet < rr
+
+
+def test_paper_operating_point_latency():
+    """Paper §6.5: ~30 hops, ~10 inter-hops at 1B/0.95 recall -> < 6 ms."""
+    cm = CostModel()
+    lat = cm.query_latency_s(hops=33, inter_hops=6, reads=260,
+                             dist_comps=15000, envelope_bytes=6000)
+    assert lat < 6e-3, lat
+
+
+def test_bottleneck_shifts():
+    cm = CostModel()
+    assert cm.bottleneck(10, reads_per_query=5000,
+                         dist_comps_per_query=100) == "disk"
+    assert cm.bottleneck(10, reads_per_query=1,
+                         dist_comps_per_query=10_000_000) == "cpu"
+    assert cm.bottleneck(
+        10, reads_per_query=1, dist_comps_per_query=100,
+        inter_hops_per_query=10_000, envelope_bytes=100_000,
+    ) == "net"
+
+
+def test_cluster_qps_scales_with_servers():
+    cm = CostModel()
+    q1 = cm.cluster_qps(1, 100, 2000, 0)
+    q10 = cm.cluster_qps(10, 100, 2000, 5, 4096)
+    assert 5 * q1 < q10 <= 10 * q1
+
+
+def test_scatter_gather_qps_flat():
+    """If per-query work grows ~P x, cluster QPS stays ~flat in P."""
+    cm = CostModel()
+    q2 = cm.cluster_qps(2, 2 * 100, 2 * 2000, 2)
+    q8 = cm.cluster_qps(8, 8 * 100, 8 * 2000, 8)
+    assert abs(q8 / q2 - 1.0) < 0.1

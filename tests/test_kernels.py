@@ -1,0 +1,106 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis, vs ref.py oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in Python)
+— the same code path pl.pallas_call compiles for TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.pq_adc.ops import pq_adc, pq_adc_ref
+from repro.kernels.pq_lut.ops import pq_lut, pq_lut_ref
+from repro.kernels.topk.ops import bitonic_topk, topk_ref
+
+
+@pytest.mark.parametrize("q,m,k,dsub", [
+    (8, 8, 64, 4), (37, 16, 256, 6), (128, 32, 256, 4), (1, 4, 16, 8),
+])
+def test_pq_lut_shapes(q, m, k, dsub):
+    rng = np.random.default_rng(q * m)
+    queries = jnp.asarray(rng.normal(size=(q, m * dsub)).astype(np.float32))
+    cents = jnp.asarray(rng.normal(size=(m, k, dsub)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(pq_lut(queries, cents)),
+        np.asarray(pq_lut_ref(queries, cents)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.int32])
+@pytest.mark.parametrize("q,n,m,k", [
+    (8, 64, 8, 64), (37, 333, 16, 256), (130, 512, 32, 128),
+])
+def test_pq_adc_shapes(q, n, m, k, dtype):
+    rng = np.random.default_rng(n)
+    lut = jnp.asarray(rng.normal(size=(q, m, k)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, k, size=(n, m)).astype(dtype))
+    np.testing.assert_allclose(
+        np.asarray(pq_adc(lut, codes)),
+        np.asarray(pq_adc_ref(lut, codes)),
+        rtol=1e-4, atol=1e-3,
+    )
+
+
+def test_adc_matches_full_pipeline(codebook, codes, dataset):
+    """Kernel output == core.pq gather ADC on real index data."""
+    from repro.core import pq as core_pq
+
+    queries = jnp.asarray(dataset.queries[:16])
+    lut = core_pq.build_lut(codebook.centroids, queries)
+    ref = core_pq.adc(lut, jnp.asarray(codes))
+    out = pq_adc(lut, jnp.asarray(codes))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,c,k", [(4, 16, 4), (13, 200, 17), (8, 1024, 64),
+                                   (1, 7, 7)])
+def test_topk_shapes(b, c, k):
+    rng = np.random.default_rng(b * c)
+    vals = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32))
+    idxs = jnp.asarray(
+        rng.permutation(np.arange(b * c)).reshape(b, c).astype(np.int32)
+    )
+    ov, oi = bitonic_topk(vals, idxs, k)
+    rv, ri = topk_ref(vals, idxs, k)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6), c=st.integers(2, 96), k=st.integers(1, 16),
+    dup=st.booleans(), seed=st.integers(0, 2**16),
+)
+def test_topk_property(b, c, k, dup, seed):
+    """Property: kernel == oracle for any shape, incl. heavy duplicates."""
+    k = min(k, c)
+    rng = np.random.default_rng(seed)
+    if dup:
+        vals = rng.integers(0, 4, size=(b, c)).astype(np.float32)
+    else:
+        vals = rng.normal(size=(b, c)).astype(np.float32)
+    idxs = rng.permutation(np.arange(b * c)).reshape(b, c).astype(np.int32)
+    ov, oi = bitonic_topk(jnp.asarray(vals), jnp.asarray(idxs), k)
+    rv, ri = topk_ref(jnp.asarray(vals), jnp.asarray(idxs), k)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    q=st.integers(1, 9), n=st.integers(1, 80),
+    m=st.sampled_from([4, 8]), k=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_adc_property(q, n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    lut = jnp.asarray(rng.normal(size=(q, m, k)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, k, size=(n, m)).astype(np.uint8))
+    np.testing.assert_allclose(
+        np.asarray(pq_adc(lut, codes)), np.asarray(pq_adc_ref(lut, codes)),
+        rtol=1e-4, atol=1e-3,
+    )

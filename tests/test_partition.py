@@ -1,0 +1,46 @@
+"""Graph partitioning: balance, locality, map-building invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_ldg_balance(graph, p):
+    a = partition.ldg_partition(graph.neighbors, p, passes=2, slack=0.05)
+    sizes = np.bincount(a, minlength=p)
+    cap = partition.partition_capacity(len(a), p, 0.05)
+    assert (sizes <= cap).all()
+    assert sizes.min() > 0
+
+
+def test_ldg_beats_random_locality(graph):
+    a = partition.ldg_partition(graph.neighbors, 4, passes=2)
+    r = partition.random_partition(graph.n, 4)
+    assert partition.edge_locality(graph.neighbors, a) > \
+        partition.edge_locality(graph.neighbors, r) + 0.2
+
+
+def test_kmeans_balance(dataset):
+    a = partition.balanced_kmeans(dataset.vectors[:600], 4, iters=4)
+    cap = partition.partition_capacity(600, 4, 0.05)
+    assert (np.bincount(a, minlength=4) <= cap).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 200), p=st.integers(1, 8), seed=st.integers(0, 999))
+def test_build_maps_roundtrip(n, p, seed):
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, p, size=n).astype(np.int32)
+    node2part, node2local, local2global, sizes = partition.build_maps(assign, p)
+    assert sizes.sum() == n
+    for v in range(n):
+        pp, loc = node2part[v], node2local[v]
+        assert local2global[pp, loc] == v
+    # padding is NO_ID
+    for pi in range(p):
+        row = local2global[pi]
+        assert (row[sizes[pi]:] == -1).all()
+        assert (row[: sizes[pi]] >= 0).all()

@@ -1,0 +1,77 @@
+"""SPMD (shard_map) equivalence: the multi-device path must produce the same
+results as the single-host simulated path.
+
+Runs in a subprocess because the 8-device host-platform override must not
+leak into other tests (jax locks device count at first backend init).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.data import synth
+    from repro.core import ref, baton
+    from repro.core.beam_search import Shard
+
+    ds = synth.make_dataset("deep", n=1200, n_queries=24, seed=1)
+    idx = baton.build_index(ds.vectors, p=8, r=16, l_build=32, pq_m=16,
+                            pq_k=128, head_fraction=0.03, seed=1)
+    cfg = baton.BatonParams(L=32, W=4, k=10, pool=128, slots=16, pair_cap=4,
+                            n_starts=4)
+    ids_sim, _, stats_sim = baton.run_simulated(idx, ds.queries, cfg)
+
+    mesh = jax.make_mesh((8,), ("part",))
+    q_dev, qid_dev, st_dev, sd_dev, B, Bp, per = baton._split_round_robin(
+        idx, ds.queries, cfg)
+    devs = jax.vmap(
+        lambda q, i, s, sd: baton.init_device_state(q, i, s, sd, cfg))(
+        jnp.asarray(q_dev), jnp.asarray(qid_dev), jnp.asarray(st_dev),
+        jnp.asarray(sd_dev))
+    shard = idx.stacked_shards()
+    codebook = jnp.asarray(idx.codebook)
+    fn = baton.make_spmd_fn(cfg, n_parts=8, axis_name="part")
+
+    def body(d, s, c):
+        d1 = jax.tree.map(lambda x: x[0], d)
+        s1 = Shard(s.vectors[0], s.neighbors[0], s.codes, s.node2part,
+                   s.node2local)
+        out = fn(d1, s1, c)
+        return jax.tree.map(lambda x: x[None], out)
+
+    dev_specs = jax.tree.map(lambda _: P("part"), devs)
+    shard_specs = Shard(vectors=P("part"), neighbors=P("part"), codes=P(),
+                        node2part=P(), node2local=P())
+    smfn = jax.shard_map(body, mesh=mesh,
+                         in_specs=(dev_specs, shard_specs, P()),
+                         out_specs=dev_specs, check_vma=False)
+    out = jax.jit(smfn)(devs, shard, codebook)
+    ids_spmd, _, stats_spmd = baton._collect(out, qid_dev, cfg, B, Bp, 8,
+                                             per, 0)
+    assert stats_spmd["delivered"] == 1.0, stats_spmd["delivered"]
+    assert np.array_equal(ids_sim, ids_spmd), "sim/spmd mismatch"
+    rec = ref.recall_at_k(ids_spmd, ds.gt, 10)
+    assert rec > 0.8, rec
+    print("SPMD-EQUIV-OK", rec)
+    """
+)
+
+
+@pytest.mark.slow
+def test_spmd_matches_simulation():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=1800,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "SPMD-EQUIV-OK" in r.stdout
