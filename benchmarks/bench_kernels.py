@@ -54,4 +54,46 @@ def kernel_rows():
     t_k = _time(lambda v, i: bitonic_topk(v, i, 128), vals, idxs)
     t_r = _time(jax.jit(lambda v, i: topk_ref(v, i, 128)), vals, idxs)
     rows.append(("kernel_topk", t_k * 1e6, f"ref_us={t_r*1e6:.0f};c=1024"))
+
+    from repro.core.pq import adc_slots
+    from repro.kernels.pq_adc.ops import pq_adc_slots
+
+    luts = jnp.asarray(rng.normal(size=(16, 24, 256)).astype(np.float32))
+    scodes = jnp.asarray(rng.integers(0, 256, size=(16, 256, 24)).astype(np.uint8))
+    t_g = _time(jax.jit(adc_slots), luts, scodes)
+    t_m = _time(pq_adc_slots, luts, scodes.astype(jnp.int32))
+    rows.append(("kernel_adc_slots", t_g * 1e6,
+                 f"mxu_us={t_m*1e6:.0f};s=16;c=256"))
+    return rows
+
+
+def superstep_rows():
+    """Baton super-step micro-bench: fused slot-batched hot path vs the
+    per-slot seed path, same index/queries.  us_per_call is wall-clock per
+    super-step; derived carries the counter story (LUT builds per query,
+    dist comps) so the BENCH_* trajectory can track both time and work."""
+    import numpy as np
+
+    from benchmarks import common
+    from repro.core import baton
+
+    p = min(4, common.BENCH_P)
+    ds, idx = common.baton_index(p)
+    rows = []
+    for fused, tag in ((True, "fused"), (False, "seed")):
+        cfg = baton.BatonParams(L=64, W=8, k=10, pool=256, slots=32,
+                                n_starts=4, fused=fused)
+        # wall includes trace+compile (run_simulated jits per call) — the
+        # same overhead lands on both variants, so the comparison holds
+        t0 = time.time()
+        ids, _, stats = baton.run_simulated(idx, ds.queries, cfg)
+        wall = time.time() - t0
+        n_ss = max(stats["n_supersteps"], 1)
+        rows.append((
+            f"superstep_{tag}", wall / n_ss * 1e6,
+            f"supersteps={n_ss};wall_s={wall:.2f};"
+            f"lut_builds={float(np.mean(stats['lut_builds'])):.2f};"
+            f"dist_comps={float(np.mean(stats['dist_comps'])):.0f};"
+            f"inter={float(np.mean(stats['inter_hops'])):.2f}",
+        ))
     return rows

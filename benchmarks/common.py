@@ -116,14 +116,24 @@ def sg_index(p: int | None = None) -> scatter_gather.ScatterGatherIndex:
 # ---------------------------------------------------------------------------
 
 
-def batann_model(stats: dict, p: int, L: int, pool: int, d: int):
-    env = envelope_bytes(d, L, pool)
+PQ_M, PQ_K = 24, 256    # the PQ geometry every bench index is built with
+
+
+def batann_model(stats: dict, p: int, L: int, pool: int, d: int,
+                 ship_lut: bool = False):
+    """Model QPS/latency from exact counters.  ``ship_lut`` prices the §8
+    envelope tradeoff: shipping the LUT grows every hand-off by M·K·4 bytes;
+    the default (recompute, matching BatonParams) keeps the paper's 4-8 KB
+    calibrated envelope for all figure rows."""
+    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut)
+    luts = float(np.mean(stats.get("lut_builds", 0.0)))
     qps = COST.cluster_qps(
         n_servers=p,
         reads_per_query=float(np.mean(stats["reads"])),
         dist_comps_per_query=float(np.mean(stats["dist_comps"])),
         inter_hops_per_query=float(np.mean(stats["inter_hops"])),
         envelope_bytes=env,
+        lut_builds_per_query=luts,
     )
     lat = COST.query_latency_s(
         hops=float(np.mean(stats["hops"])),
@@ -131,6 +141,7 @@ def batann_model(stats: dict, p: int, L: int, pool: int, d: int):
         reads=float(np.mean(stats["reads"])),
         dist_comps=float(np.mean(stats["dist_comps"])),
         envelope_bytes=env,
+        lut_builds=luts,
     )
     return qps, lat
 

@@ -31,15 +31,17 @@ def _memo(fn):
 
 
 @_memo
-def _run_batann(p: int, L: int, w: int, slots: int = 32):
+def _run_batann(p: int, L: int, w: int, slots: int = 32,
+                ship_lut: bool = False):
     ds, idx = common.baton_index(p)
     cfg = baton.BatonParams(L=L, W=w, k=10, pool=256, slots=slots,
-                            pair_cap=4, n_starts=4)
+                            pair_cap=4, n_starts=4, ship_lut=ship_lut)
     t0 = time.time()
     ids, dists, stats = baton.run_simulated(idx, ds.queries, cfg)
     wall = time.time() - t0
     rec = ref.recall_at_k(ids, ds.gt, 10)
-    qps, lat = common.batann_model(stats, p, L, 256, ds.dim)
+    qps, lat = common.batann_model(stats, p, L, 256, ds.dim,
+                                   ship_lut=ship_lut)
     return {
         "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
         "wall_s": wall, "ds": ds,
@@ -237,6 +239,32 @@ def fig13_latency_vs_send_rate():
                 f"rate_qps={rate:.0f};mean_ms={mean*1e3:.2f};"
                 f"p99_ms={p99*1e3:.2f}",
             ))
+    return rows
+
+
+def sec8_ship_vs_recompute():
+    """§8 "Reducing Message Size": ship the PQ LUT in the envelope vs
+    recompute it on arrival.  Same exact search (ids bit-identical); only
+    the modeled envelope bytes and LUT-build counters move."""
+    rows = []
+    for ship, tag in ((True, "ship"), (False, "recompute")):
+        if ship:
+            r = _run_batann(common.BENCH_P, L_DEFAULT, w=8, ship_lut=True)
+        else:
+            # identical memo key as the fig3-fig14 runs -> cache hit
+            r = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
+        from repro.core.state import envelope_bytes
+
+        env = envelope_bytes(r["ds"].dim, L_DEFAULT, 256, m=common.PQ_M,
+                             k_pq=common.PQ_K, ship_lut=ship)
+        luts = float(np.mean(r["stats"]["lut_builds"]))
+        inter = float(np.mean(r["stats"]["inter_hops"]))
+        rows.append((
+            f"sec8_{tag}_lut", r["lat_s"] * 1e6,
+            f"envelope_bytes={env};qps={r['qps']:.0f};"
+            f"lut_builds={luts:.2f};inter={inter:.2f};"
+            f"recall={r['recall']:.3f}",
+        ))
     return rows
 
 

@@ -1,22 +1,27 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (and writes artifacts/bench.csv).
+Prints ``name,us_per_call,derived`` CSV and writes both
+``artifacts/bench.csv`` and machine-readable ``artifacts/bench.json``
+(keyed by row name, so the BENCH_* trajectory is diffable across PRs).
 Scale via env: BENCH_N / BENCH_Q / BENCH_P (defaults 20000/256/8).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _ROOT)                       # benchmarks package
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # repro package
 
 
 def main() -> None:
     from benchmarks import figures
-    from benchmarks.bench_kernels import kernel_rows
+    from benchmarks.bench_kernels import kernel_rows, superstep_rows
 
     suites = [
         ("fig3", figures.fig3_inter_partition_hops),
@@ -29,7 +34,9 @@ def main() -> None:
         ("fig12", figures.fig12_latency_recall),
         ("fig13", figures.fig13_latency_vs_send_rate),
         ("fig14", figures.fig14_w_throughput),
+        ("sec8", figures.sec8_ship_vs_recompute),
         ("kernels", kernel_rows),
+        ("superstep", superstep_rows),
     ]
     all_rows = []
     print("name,us_per_call,derived")
@@ -43,14 +50,21 @@ def main() -> None:
         for name, us, derived in rows:
             line = f"{name},{us:.1f},{derived}"
             print(line, flush=True)
-            all_rows.append(line)
+            all_rows.append((name, us, derived))
         print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
 
     out = os.path.join(os.path.dirname(__file__), "..", "artifacts")
     os.makedirs(out, exist_ok=True)
     with open(os.path.join(out, "bench.csv"), "w") as f:
         f.write("name,us_per_call,derived\n")
-        f.write("\n".join(all_rows) + "\n")
+        f.writelines(f"{n},{us:.1f},{d}\n" for n, us, d in all_rows)
+    with open(os.path.join(out, "bench.json"), "w") as f:
+        json.dump(
+            {n: {"us_per_call": round(us, 1), "derived": d}
+             for n, us, d in all_rows},
+            f, indent=2, sort_keys=True,
+        )
+        f.write("\n")
 
 
 if __name__ == "__main__":

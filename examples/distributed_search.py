@@ -34,8 +34,10 @@ def main():
     mesh = jax.make_mesh((8,), ("part",))
     q_dev, qid_dev, st_dev, sd_dev, B, Bp, per = baton._split_round_robin(
         index, ds.queries, cfg)
+    codebook = jnp.asarray(index.codebook)
     devs = jax.vmap(
-        lambda q, i, s, sd: baton.init_device_state(q, i, s, sd, cfg))(
+        lambda q, i, s, sd: baton.init_device_state(q, i, s, sd, cfg,
+                                                    codebook))(
         jnp.asarray(q_dev), jnp.asarray(qid_dev), jnp.asarray(st_dev),
         jnp.asarray(sd_dev))
     shard = index.stacked_shards()
@@ -50,10 +52,11 @@ def main():
     dev_specs = jax.tree.map(lambda _: P("part"), devs)
     shard_specs = Shard(vectors=P("part"), neighbors=P("part"), codes=P(),
                         node2part=P(), node2local=P())
-    out = jax.jit(jax.shard_map(
+    from repro.compat import shard_map
+    out = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(dev_specs, shard_specs, P()),
-        out_specs=dev_specs, check_vma=False,
-    ))(devs, shard, jnp.asarray(index.codebook))
+        out_specs=dev_specs, check=False,
+    ))(devs, shard, codebook)
     ids_spmd, _, st2 = baton._collect(out, qid_dev, cfg, B, Bp, 8, per, 0)
     match = np.array_equal(ids_sim, ids_spmd)
     print(f"recall@10={ref.recall_at_k(ids_spmd, ds.gt, 10):.3f} "

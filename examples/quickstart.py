@@ -42,14 +42,18 @@ def main():
           f"({stats['inter_hops'].sum()/stats['hops'].sum():.1%} of hops)")
     print(f"disk reads/query   : {stats['reads'].mean():.1f}")
     print(f"dist comps/query   : {stats['dist_comps'].mean():.0f}")
-    env = envelope_bytes(ds.dim, cfg.L, cfg.pool)
+    pq_m, pq_k = index.codebook.shape[:2]
+    env = envelope_bytes(ds.dim, cfg.L, cfg.pool, m=pq_m, k_pq=pq_k,
+                         ship_lut=cfg.ship_lut)
     qps = COST.cluster_qps(4, stats['reads'].mean(),
                            stats['dist_comps'].mean(),
-                           stats['inter_hops'].mean(), env)
+                           stats['inter_hops'].mean(), env,
+                           lut_builds_per_query=stats['lut_builds'].mean())
     lat = COST.query_latency_s(stats['hops'].mean(),
                                stats['inter_hops'].mean(),
                                stats['reads'].mean(),
-                               stats['dist_comps'].mean(), env)
+                               stats['dist_comps'].mean(), env,
+                               lut_builds=stats['lut_builds'].mean())
     print(f"modeled cluster QPS: {qps:.0f} (paper's c6620 cost model)")
     print(f"modeled latency    : {lat*1e3:.2f} ms")
 

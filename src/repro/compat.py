@@ -1,0 +1,21 @@
+"""Version-compat shims for jax API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (<=0.4.x, with the
+replication check named ``check_rep``) to ``jax.shard_map`` (newer, with the
+check named ``check_vma``).  Everything SPMD in this repo goes through this
+wrapper so the engine runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

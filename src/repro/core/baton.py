@@ -8,10 +8,23 @@ Execution model (TPU adaptation of the paper's asynchronous TCP relay):
   local query queue immediately.
 * The search runs in **super-steps**:
     1. refill   — start queued queries in free slots (head-index entry points
-                  precomputed per §4.2; beam seeded with PQ distances),
+                  precomputed per §4.2; beam seeded with PQ distances).  The
+                  query's PQ lookup table is built exactly once — at enqueue
+                  (``init_device_state``) — and carried in ``QueryState.lut``
+                  ever after, so the per-super-step LUT rebuild of the naive
+                  engine disappears (O(1) builds per query instead of
+                  O(super-steps); ``Counters.lut_builds`` proves it),
     2. advance  — inner ``while_loop``: every resident state explores all
                   *local* nodes among its top-W frontier (Alg. 2) until every
-                  state is done or blocked on remote data,
+                  state is done or blocked on remote data.  The default hot
+                  path is **slot-batched**: one fused candidate-scoring call
+                  (``pq.adc_slots`` gather, or the Pallas MXU one-hot kernel
+                  via ``BatonParams.adc_impl``) and single-pass sort-merges
+                  (``merge_into_beam_fused``; ``BatonParams.merge_impl``
+                  routes them through the bitonic top-k kernel) cover all S
+                  resident states per iteration.  ``BatonParams.fused=False``
+                  keeps the original per-slot reference path for equivalence
+                  testing — both return bit-identical results,
     3. route    — blocked states are handed off to the owner of their top
                   frontier node over a capacity-bounded ``all_to_all`` (the
                   paper's opportunistic message batching).  A deterministic
@@ -23,6 +36,12 @@ Execution model (TPU adaptation of the paper's asynchronous TCP relay):
                   counters) — the paper's client-return arrow ③ and also its
                   §8 "Reducing Message Size" optimization.  Results need no
                   slots, so the done channel always drains (liveness).
+                  ``BatonParams.ship_lut`` picks the other §8 tradeoff: ship
+                  the (M·K·4-byte) LUT inside the envelope, or drop it from
+                  the wire and have the receiver rebuild it from the query
+                  embedding on arrival (+1 ``lut_builds`` per hand-off).  The
+                  envelope-bytes consequence flows through
+                  ``state.envelope_bytes`` into the io_sim cost model.
     4. deliver  — arrived results are written to the output arrays.
 * Global termination: psum of (resident states + queued queries) == 0.
 
@@ -42,8 +61,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import beam_search, head_index, partition as part_mod, pq, vamana
-from repro.core.beam_search import Shard, select_frontier, step_disk
-from repro.core.state import INF, NO_ID, Counters, QueryState, empty_state
+from repro.core.beam_search import (
+    Shard, select_frontier, step_disk, step_disk_batched,
+)
+from repro.core.state import (
+    INF, N_STATS, NO_ID, Counters, QueryState, empty_state,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +86,22 @@ class BatonParams:
     n_starts: int = 4        # head-index entry points
     max_local_steps: int = 128
     max_supersteps: int = 512
+    # --- hot-path implementation knobs (all default to the fused path) ----
+    fused: bool = True       # slot-batched scoring + single-pass merges;
+    #                          False = per-slot seed path (equivalence ref)
+    adc_impl: str = "gather"  # "gather" (CPU fallback) | "mxu" (Pallas)
+    merge_impl: str = "lexsort"  # "lexsort" | "bitonic" (Pallas top-k)
+    ship_lut: bool = False   # §8: ship the LUT in the envelope (True) vs
+    #                          rebuild on arrival (False — the paper's
+    #                          4-8 KB envelope; +1 lut_build per hand-off)
+
+    def __post_init__(self):
+        if self.adc_impl not in ("gather", "mxu"):
+            raise ValueError(f"adc_impl must be gather|mxu: {self.adc_impl}")
+        if self.merge_impl not in ("lexsort", "bitonic"):
+            raise ValueError(
+                f"merge_impl must be lexsort|bitonic: {self.merge_impl}"
+            )
 
     @property
     def refill_headroom(self) -> int:
@@ -198,10 +237,11 @@ class DeviceState(NamedTuple):
     queue_qid: jnp.ndarray     # (Q,)  -1 = padding
     queue_starts: jnp.ndarray  # (Q, n_starts) global entry ids
     queue_start_d: jnp.ndarray  # (Q, n_starts) head-index exact distances
+    queue_lut: jnp.ndarray     # (Q, M, K) per-query PQ LUTs, built once
     queue_head: jnp.ndarray    # () — next queue row to start
     out_ids: jnp.ndarray       # (Q, k)
     out_dists: jnp.ndarray     # (Q, k)
-    out_stats: jnp.ndarray     # (Q, 4): hops, inter_hops, dist_comps, reads
+    out_stats: jnp.ndarray     # (Q, N_STATS) — see state.STAT_FIELDS
     delivered: jnp.ndarray     # (Q,) bool
 
 
@@ -211,7 +251,7 @@ class ResultMsg(NamedTuple):
     qid: jnp.ndarray           # () int32, -1 = empty
     ids: jnp.ndarray           # (k,)
     dists: jnp.ndarray         # (k,)
-    stats: jnp.ndarray         # (4,)
+    stats: jnp.ndarray         # (N_STATS,)
 
 
 def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
@@ -219,28 +259,36 @@ def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
         qid=jnp.full(shape, -1, jnp.int32),
         ids=jnp.full(shape + (cfg.k,), NO_ID, jnp.int32),
         dists=jnp.full(shape + (cfg.k,), INF, jnp.float32),
-        stats=jnp.zeros(shape + (4,), jnp.int32),
+        stats=jnp.zeros(shape + (N_STATS,), jnp.int32),
     )
 
 
-def _batched_empty_states(d: int, cfg: BatonParams, shape) -> QueryState:
-    one = empty_state(d, cfg.L, cfg.pool)
+def _batched_empty_states(
+    d: int, cfg: BatonParams, shape, m: int | None = None,
+    k_pq: int | None = None,
+) -> QueryState:
+    one = empty_state(d, cfg.L, cfg.pool, m=m, k_pq=k_pq)
     return jax.tree.map(lambda x: jnp.broadcast_to(x, shape + x.shape), one)
 
 
-def init_device_state(queries, qids, starts, start_d,
-                      cfg: BatonParams) -> DeviceState:
+def init_device_state(queries, qids, starts, start_d, cfg: BatonParams,
+                      codebook) -> DeviceState:
+    """Per-device state.  Builds every queued query's PQ LUT here — the one
+    and only ``build_lut`` on the query's lifetime (ship mode)."""
     q, d = queries.shape
+    codebook = jnp.asarray(codebook)
+    m, k_pq = codebook.shape[0], codebook.shape[1]
     return DeviceState(
-        states=_batched_empty_states(d, cfg, (cfg.slots,)),
+        states=_batched_empty_states(d, cfg, (cfg.slots,), m=m, k_pq=k_pq),
         queue_emb=jnp.asarray(queries, jnp.float32),
         queue_qid=jnp.asarray(qids, jnp.int32),
         queue_starts=jnp.asarray(starts, jnp.int32),
         queue_start_d=jnp.asarray(start_d, jnp.float32),
+        queue_lut=pq.build_lut(codebook, jnp.asarray(queries, jnp.float32)),
         queue_head=jnp.int32(0),
         out_ids=jnp.full((q, cfg.k), NO_ID, jnp.int32),
         out_dists=jnp.full((q, cfg.k), INF, jnp.float32),
-        out_stats=jnp.zeros((q, 4), jnp.int32),
+        out_stats=jnp.zeros((q, N_STATS), jnp.int32),
         delivered=jnp.zeros((q,), bool),
     )
 
@@ -250,8 +298,12 @@ def init_device_state(queries, qids, starts, start_d,
 # ---------------------------------------------------------------------------
 
 
-def refill(dev: DeviceState, shard: Shard, codebook, cfg: BatonParams, my_part):
-    """Start queued queries in free slots (paper §5 fixed-count balancing)."""
+def refill(dev: DeviceState, cfg: BatonParams, my_part):
+    """Start queued queries in free slots (paper §5 fixed-count balancing).
+
+    The seeded state adopts the query's precomputed LUT from the queue
+    (``lut_builds`` starts at 1 — the build at enqueue); no shard or
+    codebook access is needed here."""
     q_total = dev.queue_qid.shape[0]
     free = ~dev.states.active                                   # (S,)
     n_active = jnp.sum(dev.states.active.astype(jnp.int32))
@@ -269,13 +321,14 @@ def refill(dev: DeviceState, shard: Shard, codebook, cfg: BatonParams, my_part):
     emb = dev.queue_emb[row]                                    # (S, d)
     qid = dev.queue_qid[row]
     starts = dev.queue_starts[row]                              # (S, n_starts)
+    lut = dev.queue_lut[row]                                    # (S, M, K)
     take = take & (qid >= 0)
     # entry-point distances come from the (full-precision, in-memory) head
     # index — no global PQ lookup needed, which keeps the sector-codes mode
     # free of any replicated code array.
     sd = jnp.where(starts == NO_ID, INF, dev.queue_start_d[row])
 
-    def seed_one(st, e, s_ids, s_d, q, t):
+    def seed_one(st, e, s_ids, s_d, q, lu, t):
         L, P = cfg.L, cfg.pool
         bi, bd, be = beam_search.merge_into_beam(
             jnp.full((L,), NO_ID, jnp.int32), jnp.full((L,), INF, jnp.float32),
@@ -285,13 +338,13 @@ def refill(dev: DeviceState, shard: Shard, codebook, cfg: BatonParams, my_part):
             query=e, beam_ids=bi, beam_dists=bd, beam_expl=be,
             pool_ids=jnp.full((P,), NO_ID, jnp.int32),
             pool_dists=jnp.full((P,), INF, jnp.float32),
-            counters=Counters.zeros(),
+            counters=Counters.zeros()._replace(lut_builds=jnp.int32(1)),
             active=jnp.asarray(True), done=jnp.asarray(False),
-            home=jnp.int32(my_part), qid=q,
+            home=jnp.int32(my_part), qid=q, lut=lu,
         )
         return jax.tree.map(lambda a, b: jnp.where(t, a, b), new, st)
 
-    states = jax.vmap(seed_one)(dev.states, emb, starts, sd, qid, take)
+    states = jax.vmap(seed_one)(dev.states, emb, starts, sd, qid, lut, take)
     return dev._replace(states=states, queue_head=dev.queue_head + n_start)
 
 
@@ -304,21 +357,54 @@ def _frontier_ownership(state: QueryState, shard: Shard, cfg: BatonParams, my_pa
     return fpos, local, jnp.any(local), jnp.any(fvalid), dest
 
 
-def local_advance(dev: DeviceState, shard: Shard, luts, cfg: BatonParams, my_part):
+def _where_rows(pred, new, old):
+    """Select whole per-slot rows: pred (S,) against leaves (S, ...)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            pred.reshape(pred.shape + (1,) * (a.ndim - 1)), a, b
+        ),
+        new, old,
+    )
+
+
+def local_advance(dev: DeviceState, shard: Shard, cfg: BatonParams, my_part):
     """Inner loop: explore local frontier nodes until every resident state is
-    blocked on remote data or done (Alg. 2 lines 2-3, SIMD over slots)."""
+    blocked on remote data or done (Alg. 2 lines 2-3, SIMD over slots).
+
+    Per-slot LUTs come from ``states.lut`` (built once per query).  The
+    default body is the fused slot-batched step; ``cfg.fused=False`` selects
+    the per-slot reference path (bit-identical results)."""
+
+    def frontier(st):
+        return _frontier_ownership(st, shard, cfg, my_part)
 
     def one(st, lut):
-        fpos, local, any_local, any_frontier, _ = _frontier_ownership(
-            st, shard, cfg, my_part
-        )
+        fpos, local, any_local, any_frontier, _ = frontier(st)
         runnable = st.active & ~st.done & any_frontier & any_local
         mask = local & runnable
-        new = step_disk(st, shard, lut, mask, fpos)
+        new = step_disk(st, shard, lut, mask, fpos, fused=False)
         _, _, v = select_frontier(new.beam_ids, new.beam_expl, 1)
         new = new._replace(done=new.done | ~jnp.any(v))
         # scalar `runnable` broadcasts against every leaf shape
         return jax.tree.map(lambda a, b: jnp.where(runnable, a, b), new, st), runnable
+
+    def step_all(states):
+        if not cfg.fused:
+            return jax.vmap(one)(states, states.lut)
+        fposs, local, any_local, any_frontier, _ = jax.vmap(frontier)(states)
+        runnable = states.active & ~states.done & any_frontier & any_local
+        masks = local & runnable[:, None]
+        new = step_disk_batched(
+            states, shard, states.lut, masks, fposs,
+            adc_impl=cfg.adc_impl, merge_impl=cfg.merge_impl,
+        )
+        v = jax.vmap(
+            lambda st: jnp.any(
+                select_frontier(st.beam_ids, st.beam_expl, 1)[2]
+            )
+        )(new)
+        new = new._replace(done=new.done | ~v)
+        return _where_rows(runnable, new, states), runnable
 
     def cond(carry):
         _, it, progressed = carry
@@ -326,7 +412,7 @@ def local_advance(dev: DeviceState, shard: Shard, luts, cfg: BatonParams, my_par
 
     def body(carry):
         states, it, _ = carry
-        states, ran = jax.vmap(one)(states, luts)
+        states, ran = step_all(states)
         return states, it + 1, jnp.any(ran)
 
     states, _, _ = jax.lax.while_loop(
@@ -348,11 +434,7 @@ def deliver_local(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
     k = cfg.k
     out_ids = dev.out_ids.at[row].set(st.pool_ids[:, :k], mode="drop")
     out_dists = dev.out_dists.at[row].set(st.pool_dists[:, :k], mode="drop")
-    stats = jnp.stack(
-        [st.counters.hops, st.counters.inter_hops,
-         st.counters.dist_comps, st.counters.reads], axis=1,
-    )
-    out_stats = dev.out_stats.at[row].set(stats, mode="drop")
+    out_stats = dev.out_stats.at[row].set(st.counters.stacked(), mode="drop")
     delivered = dev.delivered.at[row].set(True, mode="drop")
     states = st._replace(active=st.active & ~ready)
     return dev._replace(
@@ -374,15 +456,11 @@ def pack_results(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
     c_idx = jnp.where(granted, my_rank, Cr)
 
     buf = _empty_results(cfg, (n_parts, Cr))
-    stats = jnp.stack(
-        [st.counters.hops, st.counters.inter_hops,
-         st.counters.dist_comps, st.counters.reads], axis=1,
-    )
     msg = ResultMsg(
         qid=jnp.where(granted, st.qid, -1),
         ids=st.pool_ids[:, : cfg.k],
         dists=st.pool_dists[:, : cfg.k],
-        stats=stats,
+        stats=st.counters.stacked(),
     )
     buf = jax.tree.map(
         lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, msg
@@ -442,8 +520,16 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
     states = states._replace(counters=states.counters._replace(inter_hops=inter))
     # only shipped copies are active on arrival
     shipped = states._replace(active=states.active & granted)
-
-    buf = _batched_empty_states(dev.queue_emb.shape[1], cfg, (n_parts, C))
+    if cfg.ship_lut:
+        m, k_pq = states.lut.shape[-2], states.lut.shape[-1]
+    else:
+        # §8 "Reducing Message Size": drop the LUT leaf from the send tree
+        # entirely, so the all_to_all genuinely moves M·K·4 fewer bytes per
+        # state (not just in the cost model); merge_recv rebuilds it.
+        m = k_pq = None
+        shipped = shipped._replace(lut=None)
+    buf = _batched_empty_states(dev.queue_emb.shape[1], cfg, (n_parts, C),
+                                m=m, k_pq=k_pq)
     buf = jax.tree.map(
         lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, shipped
     )
@@ -451,9 +537,25 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
     return buf, dev._replace(states=states)
 
 
-def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams):
-    """Place incoming states (flat (P*C,) batch) into free slots."""
+def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams,
+               codebook=None):
+    """Place incoming states (flat (P*C,) batch) into free slots.
+
+    In recompute mode (``cfg.ship_lut=False``) the LUT did not ride in the
+    envelope: rebuild it here from the (always-shipped) query embedding and
+    the replicated codebook, and count the build on the state."""
     S = cfg.slots
+    if not cfg.ship_lut:
+        # the wire tree arrived without a lut leaf (see pack_sends) —
+        # rebuild and reattach.  Inactive rows get garbage LUTs, but the
+        # slot scatter below drops their whole row anyway.
+        assert codebook is not None, "recompute mode needs the codebook"
+        builds = incoming.counters.lut_builds + \
+            incoming.active.astype(jnp.int32)
+        incoming = incoming._replace(
+            lut=pq.build_lut(jnp.asarray(codebook), incoming.query),
+            counters=incoming.counters._replace(lut_builds=builds),
+        )
     inc_active = incoming.active                                 # (P*C,)
     inc_rank = jnp.cumsum(inc_active.astype(jnp.int32)) - 1      # among active
     free = ~dev.states.active                                    # (S,)
@@ -467,11 +569,13 @@ def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams):
     return dev._replace(states=states)
 
 
-def _superstep_local(dev, shard, codebook, cfg, my_part, n_parts):
-    """Phases 1-2 + route planning (everything before communication)."""
-    dev = refill(dev, shard, codebook, cfg, my_part)
-    luts = pq.build_lut(codebook, dev.states.query)              # (S, M, K)
-    dev = local_advance(dev, shard, luts, cfg, my_part)
+def _superstep_local(dev, shard, cfg, my_part, n_parts):
+    """Phases 1-2 + route planning (everything before communication).
+
+    No per-super-step LUT build: every resident state carries its own LUT
+    (seeded at refill from the once-per-query queue build)."""
+    dev = refill(dev, cfg, my_part)
+    dev = local_advance(dev, shard, cfg, my_part)
     dev = deliver_local(dev, cfg, my_part, n_parts)
     res_buf, dev = pack_results(dev, cfg, my_part, n_parts)
     dest = plan_routes(dev, shard, cfg, my_part)                 # (S,)
@@ -514,24 +618,24 @@ def _split_round_robin(index, queries, cfg):
 
 
 def _collect(devs, qid_dev, cfg, B, Bp, P, per, n_supersteps):
+    from repro.core.state import STAT_FIELDS
+
     out_ids = np.asarray(devs.out_ids).reshape(P * per, -1)
     out_dists = np.asarray(devs.out_dists).reshape(P * per, -1)
-    out_stats = np.asarray(devs.out_stats).reshape(P * per, 4)
+    out_stats = np.asarray(devs.out_stats).reshape(P * per, N_STATS)
     qid_flat = np.asarray(qid_dev).reshape(-1)
     ids = np.full((Bp, cfg.k), -1, np.int32)
     dists = np.full((Bp, cfg.k), np.inf, np.float32)
-    stats = np.zeros((Bp, 4), np.int64)
+    stats = np.zeros((Bp, N_STATS), np.int64)
     ok = qid_flat >= 0
     ids[qid_flat[ok]] = out_ids[ok]
     dists[qid_flat[ok]] = out_dists[ok]
     stats[qid_flat[ok]] = out_stats[ok]
     ids, dists, stats = ids[:B], dists[:B], stats[:B]
-    return ids, dists, {
-        "hops": stats[:, 0], "inter_hops": stats[:, 1],
-        "dist_comps": stats[:, 2], "reads": stats[:, 3],
-        "n_supersteps": int(n_supersteps),
-        "delivered": float(np.asarray(devs.delivered).mean()),
-    }
+    out = {f: stats[:, i] for i, f in enumerate(STAT_FIELDS)}
+    out["n_supersteps"] = int(n_supersteps)
+    out["delivered"] = float(np.asarray(devs.delivered).mean())
+    return ids, dists, out
 
 
 def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
@@ -546,7 +650,9 @@ def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
         index, queries, cfg)
     shard = index.stacked_shards(sector_codes=sector_codes)
     codebook = jnp.asarray(index.codebook)
-    devs = jax.vmap(lambda q, i, s, sd: init_device_state(q, i, s, sd, cfg))(
+    devs = jax.vmap(
+        lambda q, i, s, sd: init_device_state(q, i, s, sd, cfg, codebook)
+    )(
         jnp.asarray(q_dev), jnp.asarray(qid_dev), jnp.asarray(st_dev),
         jnp.asarray(sd_dev)
     )
@@ -557,7 +663,7 @@ def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
 
     def superstep(devs):
         devs, res_buf, dest, want, free, remaining = jax.vmap(
-            lambda dv, sh, mp: _superstep_local(dv, sh, codebook, cfg, mp, P),
+            lambda dv, sh, mp: _superstep_local(dv, sh, cfg, mp, P),
             in_axes=(0, shard_axes, 0),
         )(devs, shard, my_parts)
         grant = grant_matrix(want, free, cfg.pair_cap)           # (P, P)
@@ -577,7 +683,9 @@ def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
             ),
             res_buf,
         )
-        devs = jax.vmap(lambda dv, inc: merge_recv(dv, inc, cfg))(devs, inc_states)
+        devs = jax.vmap(
+            lambda dv, inc: merge_recv(dv, inc, cfg, codebook)
+        )(devs, inc_states)
         devs = jax.vmap(lambda dv, inc: merge_results(dv, inc, cfg, P))(devs, inc_res)
         return devs, jnp.sum(remaining)
 
@@ -613,7 +721,7 @@ def make_spmd_fn(cfg: BatonParams, n_parts: int, axis_name: str = "part"):
         def body(c):
             dev, it, _ = c
             dev, res_buf, dest, want, free, remaining = _superstep_local(
-                dev, shard, codebook, cfg, my_part, n_parts
+                dev, shard, cfg, my_part, n_parts
             )
             want_all = jax.lax.all_gather(want, axis_name)       # (P, P)
             free_all = jax.lax.all_gather(free, axis_name)       # (P,)
@@ -631,7 +739,7 @@ def make_spmd_fn(cfg: BatonParams, n_parts: int, axis_name: str = "part"):
                 ).reshape((n_parts * cfg.result_cap,) + x.shape[2:]),
                 res_buf,
             )
-            dev = merge_recv(dev, inc, cfg)
+            dev = merge_recv(dev, inc, cfg, codebook)
             dev = merge_results(dev, inc_res, cfg, n_parts)
             rem = jax.lax.psum(remaining, axis_name)
             return dev, it + 1, rem

@@ -88,6 +88,79 @@ def _contains(haystack_ids, needle_ids):
     return jnp.any(eq & (needle_ids[:, None] != NO_ID), axis=1)
 
 
+def _contains_rows(haystack_ids, needle_ids):
+    """Row-wise _contains: (B, H) x (B, C) -> (B, C) bool."""
+    eq = haystack_ids[:, None, :] == needle_ids[:, :, None]
+    return jnp.any(eq & (needle_ids[:, :, None] != NO_ID), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# fused merges — the inner-loop hot path
+#
+# ``merge_into_beam``/``merge_pool`` above pay two lexsorts per call: one to
+# group duplicates, one to re-order by distance.  On the disk-search hot path
+# the candidates are *already* deduplicated against the beam and the pool
+# (step_disk masks them via _contains before scoring), so a single
+# sort-by-(dist, id) is sufficient and bit-identical.  Both run batched over
+# a leading row axis so the baton engine merges all S resident slots in one
+# call; ``impl="bitonic"`` routes the selection through the Pallas bitonic
+# top-k kernel (kernels/topk) instead of lexsort.
+# ---------------------------------------------------------------------------
+
+
+def _ordered_take(ids, dists, k: int, extra=None):
+    """Best k rows-wise by (dist, id): one lexsort instead of two."""
+    order = jnp.lexsort((ids, dists), axis=-1)[:, :k]
+    take = lambda x: jnp.take_along_axis(x, order, axis=1)  # noqa: E731
+    return take(ids), take(dists), (take(extra) if extra is not None else None)
+
+
+def merge_into_beam_fused(beam_ids, beam_dists, beam_expl, cand_ids,
+                          cand_dists, impl: str = "lexsort"):
+    """Batched single-pass beam merge: (B, L) beam x (B, C) candidates.
+
+    REQUIRES candidates deduplicated against the beam and among themselves
+    (padding (NO_ID, INF) entries excepted) — step_disk guarantees this.
+    Output order matches ``merge_into_beam`` bitwise under that precondition.
+    """
+    L = beam_ids.shape[-1]
+    if impl == "bitonic":
+        from repro.kernels.topk.ops import merge_topk
+
+        ids, dists = merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, L)
+        # recover explored flags: an output id is explored iff its (unique)
+        # source entry was an explored beam entry; candidates are unexplored
+        expl = jnp.any(
+            (ids[:, :, None] == beam_ids[:, None, :])
+            & beam_expl[:, None, :] & (ids[:, :, None] != NO_ID),
+            axis=2,
+        )
+        return ids, dists, expl
+    ids = jnp.concatenate([beam_ids, cand_ids], axis=1)
+    dists = jnp.concatenate([beam_dists, cand_dists], axis=1)
+    expl = jnp.concatenate(
+        [beam_expl, jnp.zeros(cand_ids.shape, bool)], axis=1
+    )
+    ids, dists, expl = _ordered_take(ids, dists, L, extra=expl)
+    return ids, dists, expl
+
+
+def merge_pool_fused(pool_ids, pool_dists, new_ids, new_dists,
+                     impl: str = "lexsort"):
+    """Batched single-pass pool merge; same precondition as the beam merge
+    (new ids not already pooled — reads are unique by the explored-flag
+    invariant)."""
+    P = pool_ids.shape[-1]
+    if impl == "bitonic":
+        from repro.kernels.topk.ops import merge_topk
+
+        return merge_topk(pool_ids, pool_dists, new_ids, new_dists, P)
+    ids = jnp.concatenate([pool_ids, new_ids], axis=1)
+    dists = jnp.concatenate([pool_dists, new_dists], axis=1)
+    ids, dists, _ = _ordered_take(ids, dists, P)
+    return ids, dists
+
+
 # ---------------------------------------------------------------------------
 # in-memory full-precision search (graph build + head index)
 # ---------------------------------------------------------------------------
@@ -219,11 +292,15 @@ def step_disk(
     lut: jnp.ndarray,          # (M, K) PQ lookup table for state.query
     frontier_mask: jnp.ndarray,  # (W,) bool — which frontier slots to expand
     frontier_pos: jnp.ndarray,   # (W,) beam positions of the frontier
+    fused: bool = True,
+    merge_impl: str = "lexsort",
 ) -> QueryState:
     """Expand the masked frontier nodes: read sectors, rerank, grow beam.
 
     The caller (single-node / baton / scatter-gather driver) picks the
     frontier and the mask — Alg. 2's locality heuristic lives there.
+    ``fused=False`` selects the original double-lexsort merges (the seed
+    reference path the fused merges are equivalence-tested against).
     """
     W = frontier_mask.shape[0]
     gids = jnp.where(frontier_mask, state.beam_ids[frontier_pos], NO_ID)
@@ -232,7 +309,16 @@ def step_disk(
     # exact distances of the expanded nodes -> rerank pool
     ed = jnp.sum((vecs - state.query[None, :]) ** 2, -1)
     ed = jnp.where(gids == NO_ID, INF, ed)
-    pool_ids, pool_dists = merge_pool(state.pool_ids, state.pool_dists, gids, ed)
+    if fused:
+        pool_ids, pool_dists = merge_pool_fused(
+            state.pool_ids[None], state.pool_dists[None], gids[None], ed[None],
+            impl=merge_impl,
+        )
+        pool_ids, pool_dists = pool_ids[0], pool_dists[0]
+    else:
+        pool_ids, pool_dists = merge_pool(
+            state.pool_ids, state.pool_dists, gids, ed
+        )
 
     # mark frontier explored.  NOTE: frontier_pos contains duplicate (clipped)
     # indices for invalid lanes — the scatter must be order-independent, so
@@ -261,15 +347,23 @@ def step_disk(
     cand = jnp.where(dupm, NO_ID, cs)
     cd = jnp.where(cand == NO_ID, INF, cd_flat[order])
 
-    beam_ids, beam_dists, beam_expl = merge_into_beam(
-        state.beam_ids, state.beam_dists, beam_expl, cand, cd
-    )
+    if fused:
+        beam_ids, beam_dists, beam_expl = merge_into_beam_fused(
+            state.beam_ids[None], state.beam_dists[None], beam_expl[None],
+            cand[None], cd[None], impl=merge_impl,
+        )
+        beam_ids, beam_dists, beam_expl = (
+            beam_ids[0], beam_dists[0], beam_expl[0]
+        )
+    else:
+        beam_ids, beam_dists, beam_expl = merge_into_beam(
+            state.beam_ids, state.beam_dists, beam_expl, cand, cd
+        )
 
     n_read = jnp.sum(gids != NO_ID)
     c = state.counters
-    counters = Counters(
+    counters = c._replace(
         hops=c.hops + (n_read > 0).astype(jnp.int32),
-        inter_hops=c.inter_hops,
         dist_comps=c.dist_comps + jnp.sum(cand != NO_ID) + n_read,
         reads=c.reads + n_read,
     )
@@ -279,13 +373,98 @@ def step_disk(
     )
 
 
-@partial(jax.jit, static_argnames=("w", "max_hops"))
+def step_disk_batched(
+    states: QueryState,        # every leaf has leading (S,) axis
+    shard: Shard,
+    luts: jnp.ndarray,         # (S, M, K) per-slot PQ LUTs
+    masks: jnp.ndarray,        # (S, W) bool — frontier lanes to expand
+    fposs: jnp.ndarray,        # (S, W) beam positions of the frontiers
+    adc_impl: str = "gather",
+    merge_impl: str = "lexsort",
+) -> QueryState:
+    """Slot-batched ``step_disk``: one super-step of work for all S resident
+    states in single fused ops.
+
+    Candidate PQ scoring is one (S, W·R) call — ``pq.adc_slots`` (gather, the
+    CPU fallback, bit-identical to the per-slot path) or the Pallas MXU
+    one-hot kernel (``adc_impl="mxu"``) — instead of S vmapped gathers, and
+    both merges run once over all rows.  Per-slot semantics, counters and
+    returned values match vmapping ``step_disk`` exactly (equivalence-tested).
+    """
+    S, W = masks.shape
+    gids = jnp.where(
+        masks, jnp.take_along_axis(states.beam_ids, fposs, axis=1), NO_ID
+    )                                                            # (S, W)
+    vecs, nbrs, ncodes = read_sectors(shard, gids.reshape(-1))
+    vecs = vecs.reshape(S, W, -1)                                # (S, W, d)
+    R = nbrs.shape[-1]
+    nbrs = nbrs.reshape(S, W, R)
+
+    ed = jnp.sum((vecs - states.query[:, None, :]) ** 2, -1)     # (S, W)
+    ed = jnp.where(gids == NO_ID, INF, ed)
+    pool_ids, pool_dists = merge_pool_fused(
+        states.pool_ids, states.pool_dists, gids, ed, impl=merge_impl
+    )
+
+    # order-independent explored scatter (see step_disk note)
+    mark = jnp.zeros_like(states.beam_expl, dtype=jnp.int32)
+    mark = mark.at[jnp.arange(S)[:, None], fposs].add(masks.astype(jnp.int32))
+    beam_expl = states.beam_expl | (mark > 0)
+
+    cand = nbrs.reshape(S, W * R)
+    known = _contains_rows(states.beam_ids, cand) | \
+        _contains_rows(pool_ids, cand)
+    cand = jnp.where(known, NO_ID, cand)
+    if ncodes is not None:
+        cand_codes = ncodes.reshape(S, W * R, ncodes.shape[-1])
+    else:
+        cand_codes = shard.codes[jnp.clip(cand, 0, shard.codes.shape[0] - 1)]
+
+    # --- the fused scoring call: all S slots at once -----------------------
+    if adc_impl == "mxu":
+        from repro.kernels.pq_adc.ops import pq_adc_slots
+
+        cd_flat = pq_adc_slots(luts, cand_codes.astype(jnp.int32))
+    else:
+        cd_flat = pq.adc_slots(luts, cand_codes)                 # (S, W*R)
+
+    order = jnp.argsort(cand, axis=1, stable=True)
+    cs = jnp.take_along_axis(cand, order, axis=1)
+    dupm = jnp.concatenate(
+        [jnp.zeros((S, 1), bool), cs[:, 1:] == cs[:, :-1]], axis=1
+    )
+    cand = jnp.where(dupm, NO_ID, cs)
+    cd = jnp.where(
+        cand == NO_ID, INF, jnp.take_along_axis(cd_flat, order, axis=1)
+    )
+
+    beam_ids, beam_dists, beam_expl = merge_into_beam_fused(
+        states.beam_ids, states.beam_dists, beam_expl, cand, cd,
+        impl=merge_impl,
+    )
+
+    n_read = jnp.sum(gids != NO_ID, axis=1)                      # (S,)
+    c = states.counters
+    counters = c._replace(
+        hops=c.hops + (n_read > 0).astype(jnp.int32),
+        dist_comps=c.dist_comps + jnp.sum(cand != NO_ID, axis=1) + n_read,
+        reads=c.reads + n_read,
+    )
+    return states._replace(
+        beam_ids=beam_ids, beam_dists=beam_dists, beam_expl=beam_expl,
+        pool_ids=pool_ids, pool_dists=pool_dists, counters=counters,
+    )
+
+
+@partial(jax.jit, static_argnames=("w", "max_hops", "fused", "merge_impl"))
 def search_disk(
     state: QueryState,
     shard: Shard,
     codebook: jnp.ndarray,     # (M, K, dsub)
     w: int = 8,
     max_hops: int = 512,
+    fused: bool = True,
+    merge_impl: str = "lexsort",
 ) -> QueryState:
     """Single-server disk search: run Alg. 1 until the beam is fully explored."""
     lut = pq.build_lut(codebook, state.query[None])[0]
@@ -296,7 +475,8 @@ def search_disk(
 
     def body(s):
         fpos, _, fvalid = select_frontier(s.beam_ids, s.beam_expl, w)
-        return step_disk(s, shard, lut, fvalid, fpos)
+        return step_disk(s, shard, lut, fvalid, fpos, fused=fused,
+                         merge_impl=merge_impl)
 
     out = jax.lax.while_loop(cond, body, state)
     return out._replace(done=jnp.asarray(True))

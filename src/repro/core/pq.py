@@ -142,6 +142,20 @@ def adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(g, axis=1)
 
 
+def adc_slots(luts: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Slot-batched ADC: every resident state scores *its own* candidates.
+
+    luts: (S, M, K); codes: (S, C, M) uint8 -> (S, C) approximate sq-L2.
+    One fused gather+reduce for all S slots — bit-identical to vmapping
+    ``adc`` per slot (verified by tests), but a single XLA op instead of S.
+    The MXU one-hot route for the same contract is
+    ``repro.kernels.pq_adc.ops.pq_adc_slots``.
+    """
+    c = codes.astype(jnp.int32)                       # (S, C, M)
+    g = jnp.take_along_axis(luts, c.transpose(0, 2, 1), axis=2)  # (S, M, C)
+    return jnp.sum(g, axis=1)
+
+
 def reconstruct(cb: PQCodebook, codes: jnp.ndarray) -> jnp.ndarray:
     """Decode PQ codes back to vectors (for diagnostics)."""
     c = codes.astype(jnp.int32)

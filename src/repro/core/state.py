@@ -8,6 +8,12 @@ and the search parameters/counters.  Fixed shapes make it a legal operand of
 
 Sizes (paper §4.1): for L=128, pool=256, d=96 the envelope is ~4.3 KB —
 matching the paper's 4-8 KB estimate for L>=200-class configurations.
+
+The optional ``lut`` leaf carries the query's PQ lookup table (M, K) so the
+baton engine builds it exactly once per query instead of once per super-step.
+Whether the LUT also rides on the *wire* is the §8 "Reducing Message Size"
+tradeoff: ``envelope_bytes(..., ship_lut=...)`` exposes both sizes so the
+io_sim cost model can price ship-vs-recompute.
 """
 
 from __future__ import annotations
@@ -20,21 +26,38 @@ import jax.numpy as jnp
 INF = jnp.float32(jnp.inf)
 NO_ID = jnp.int32(-1)
 
+# columns of the packed per-query stats row (DeviceState.out_stats)
+STAT_FIELDS = ("hops", "inter_hops", "dist_comps", "reads", "lut_builds")
+N_STATS = len(STAT_FIELDS)
+
 
 class Counters(NamedTuple):
     hops: jnp.ndarray            # total beam-search steps (Fig. 3/4)
     inter_hops: jnp.ndarray      # inter-partition hand-offs (Fig. 3/4)
     dist_comps: jnp.ndarray      # PQ + full-precision comparisons (Fig. 5/10)
     reads: jnp.ndarray           # disk sectors read (Fig. 5/10)
+    lut_builds: jnp.ndarray      # PQ LUT constructions (1 + recompute hops)
 
     @staticmethod
     def zeros() -> "Counters":
         z = jnp.int32(0)
-        return Counters(z, z, z, z)
+        return Counters(z, z, z, z, z)
+
+    def stacked(self) -> jnp.ndarray:
+        """Pack into the fixed STAT_FIELDS order (last axis)."""
+        return jnp.stack(
+            [getattr(self, f) for f in STAT_FIELDS], axis=-1
+        )
 
 
 class QueryState(NamedTuple):
-    """One in-flight query.  All leaves have static shapes."""
+    """One in-flight query.  All leaves have static shapes.
+
+    ``lut`` is the per-query PQ lookup table (M, K).  It is ``None`` for
+    callers that manage the LUT themselves (single-server ``search_disk``,
+    scatter-gather); the baton engine always materializes it so a state can
+    resume scoring immediately after a hand-off.
+    """
 
     query: jnp.ndarray           # (d,) float32 embedding
     beam_ids: jnp.ndarray        # (L,) int32 global node ids, NO_ID padding
@@ -47,6 +70,7 @@ class QueryState(NamedTuple):
     done: jnp.ndarray            # () bool — search converged
     home: jnp.ndarray            # () int32 — partition the client sent it to
     qid: jnp.ndarray             # () int32 — client-side query id
+    lut: jnp.ndarray | None = None  # (M, K) float32 PQ lookup table
 
     @property
     def L(self) -> int:
@@ -57,7 +81,13 @@ class QueryState(NamedTuple):
         return self.pool_ids.shape[-1]
 
 
-def empty_state(d: int, L: int, P: int) -> QueryState:
+def empty_state(
+    d: int, L: int, P: int, m: int | None = None, k_pq: int | None = None,
+) -> QueryState:
+    lut = None
+    if m is not None:
+        assert k_pq is not None
+        lut = jnp.zeros((m, k_pq), jnp.float32)
     return QueryState(
         query=jnp.zeros((d,), jnp.float32),
         beam_ids=jnp.full((L,), NO_ID, jnp.int32),
@@ -70,6 +100,7 @@ def empty_state(d: int, L: int, P: int) -> QueryState:
         done=jnp.asarray(False),
         home=jnp.int32(0),
         qid=jnp.int32(-1),
+        lut=lut,
     )
 
 
@@ -103,7 +134,19 @@ def init_state(
     )
 
 
-def envelope_bytes(d: int, L: int, P: int) -> int:
-    """Wire size of one state (the paper's 4-8 KB envelope)."""
-    s = empty_state(d, L, P)
+def envelope_bytes(
+    d: int, L: int, P: int,
+    m: int | None = None, k_pq: int | None = None, ship_lut: bool = False,
+) -> int:
+    """Wire size of one state (the paper's 4-8 KB envelope).
+
+    With ``ship_lut=True`` the per-query PQ LUT (M·K·4 bytes) rides in the
+    envelope, trading wire bytes for zero recompute on arrival — the §8
+    "Reducing Message Size" knob.  Without it the receiver rebuilds the LUT
+    from the (always-shipped) query embedding and its replicated codebook.
+    """
+    if ship_lut and (m is None or k_pq is None):
+        raise ValueError("ship_lut=True needs the PQ geometry (m, k_pq)")
+    s = empty_state(d, L, P, m=m if ship_lut else None,
+                    k_pq=k_pq if ship_lut else None)
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))

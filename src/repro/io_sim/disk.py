@@ -15,6 +15,21 @@ Calibration targets (c6620: 28-core Xeon Gold 5512U @2.1 GHz, NVMe SSD,
 * serialization/deserialization of a state envelope: ~2 us [§5]
 
 These constants are configurable so sensitivity is testable.
+
+§8 "Reducing Message Size" — ship vs recompute the PQ LUT
+---------------------------------------------------------
+The baton envelope optionally carries the query's PQ lookup table
+(``BatonParams.ship_lut``).  Shipping adds M·K·4 bytes to every hand-off
+(e.g. 24 KB for M=24, K=256 — dwarfing the ~4 KB base envelope) but the
+receiver resumes scoring immediately; recomputing keeps the wire at the
+paper's 4-8 KB at the cost of one LUT build (M·K·dsub MACs, ~microseconds)
+per arrival, counted in ``Counters.lut_builds``.  Both sides of the
+tradeoff are measurable here: feed ``state.envelope_bytes(d, L, P, m, k_pq,
+ship_lut=...)`` into ``query_latency_s`` / ``cluster_qps`` (the
+``sec8_ship_vs_recompute`` benchmark does exactly this).  At 25 GbE the
+wire-time delta is ~7.7 us per hand-off for the 24 KB LUT — comparable to
+the LUT rebuild cost, which is why the paper calls this knob out as
+deployment-dependent rather than always-on.
 """
 
 from __future__ import annotations
@@ -31,6 +46,9 @@ class CostModel:
     tcp_one_way_us: float = 30.0         # small-message one-way latency
     tcp_bandwidth_gbps: float = 25.0
     serialize_us: float = 2.0            # per envelope (object pooling, §5)
+    lut_build_us: float = 5.0            # PQ LUT rebuild on arrival (M·K·dsub
+    #                                      MACs, SIMD) — the recompute side of
+    #                                      the §8 ship-vs-recompute tradeoff
     threads_per_server: int = 8          # paper runs 8 search threads
     states_per_thread: int = 8           # fixed-count inter-query balancing
 
@@ -42,13 +60,17 @@ class CostModel:
         reads: float,
         dist_comps: float,
         envelope_bytes: int,
+        lut_builds: float = 0.0,
     ) -> float:
         """End-to-end latency of one query (no queueing).
 
         Each beam-search step waits one SSD read round (W reads issued in
         parallel cost ~1 latency, §4.4); each inter-partition hop adds one
         one-way TCP latency + serialization + wire time (the *baton* pattern:
-        one-way, not round trip — the paper's core claim).
+        one-way, not round trip — the paper's core claim).  ``lut_builds``
+        charges the recompute side of §8: pass the per-query LUT-build count
+        so ship (bigger envelope, lut_builds~1) and recompute (small
+        envelope, 1+inter_hops builds) are priced symmetrically.
         """
         io = hops * self.ssd_read_latency_us
         net = inter_hops * (
@@ -56,7 +78,7 @@ class CostModel:
             + 2 * self.serialize_us
             + envelope_bytes * 8.0 / (self.tcp_bandwidth_gbps * 1e3)  # us
         )
-        cpu = dist_comps * self.dist_comp_us
+        cpu = dist_comps * self.dist_comp_us + lut_builds * self.lut_build_us
         return (io + net + cpu) * 1e-6
 
     def query_latency_rr_s(self, hops, round_trips, reads, dist_comps,
@@ -79,18 +101,20 @@ class CostModel:
         dist_comps_per_query: float,
         inter_hops_per_query: float = 0.0,
         envelope_bytes: int = 4096,
+        lut_builds_per_query: float = 0.0,
     ) -> float:
         """Sustained QPS of the cluster = min over resource bottlenecks.
 
         Disk: total IOPS across servers / reads-per-query.
-        CPU:  total thread-time / compute-per-query.
+        CPU:  total thread-time / compute-per-query (incl. §8 LUT rebuilds).
         NET:  total NIC bandwidth / state-transfer bytes per query.
         (The paper identifies disk I/O and distance comps as the two
         dominant bottlenecks, §4.4; network enters through inter-hops.)
         """
         disk_qps = n_servers * self.ssd_iops / max(reads_per_query, 1e-9)
         cpu_us = dist_comps_per_query * self.dist_comp_us + \
-            inter_hops_per_query * 2 * self.serialize_us
+            inter_hops_per_query * 2 * self.serialize_us + \
+            lut_builds_per_query * self.lut_build_us
         cpu_qps = n_servers * self.threads_per_server * 1e6 / max(cpu_us, 1e-9)
         if inter_hops_per_query > 0:
             wire_bits = inter_hops_per_query * envelope_bytes * 8.0

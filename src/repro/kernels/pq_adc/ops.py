@@ -42,4 +42,27 @@ def pq_adc(
     return out[:q, :n]
 
 
-__all__ = ["pq_adc", "pq_adc_ref"]
+@partial(jax.jit, static_argnames=("tn", "tq", "interpret"))
+def pq_adc_slots(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    tn: int | None = None,
+    tq: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(S, M, K) x (S, C, M) -> (S, C): per-slot candidates on the MXU.
+
+    The one-hot kernel scores every (query, code-row) pair, so we flatten all
+    slots' candidates into one (S·C, M) code matrix, run the full (S, S·C)
+    tile-padded matmul, and keep the block diagonal.  The S× extra FLOPs run
+    on the otherwise-idle MXU (see kernel.py); the gather formulation for
+    CPU/debug is ``repro.core.pq.adc_slots``.
+    """
+    s, c, m = codes.shape
+    full = pq_adc(luts, codes.reshape(s * c, m), tn=tn, tq=tq,
+                  interpret=interpret)                       # (S, S*C)
+    idx = jnp.arange(c)[None, :] + jnp.arange(s)[:, None] * c
+    return jnp.take_along_axis(full, idx, axis=1)
+
+
+__all__ = ["pq_adc", "pq_adc_ref", "pq_adc_slots"]

@@ -39,4 +39,26 @@ def bitonic_topk(
     return ov[:b], oi[:b]
 
 
-__all__ = ["bitonic_topk", "topk_ref"]
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def merge_topk(
+    ids_a: jnp.ndarray, dists_a: jnp.ndarray,
+    ids_b: jnp.ndarray, dists_b: jnp.ndarray,
+    k: int,
+    interpret: bool | None = None,
+):
+    """Fused sorted-merge of two batched id/dist lists: best k by (dist, id).
+
+    Rows are merged independently: (B, Ca) ∪ (B, Cb) -> (B, k) ids + dists,
+    ascending by distance with ties broken by id — the exact order
+    ``jnp.lexsort((ids, dists))`` produces, but via one bitonic network pass
+    instead of an O(C log C) host sort per merge.  Inputs must already be
+    deduplicated across a∪b (padding (NO_ID, INF) rows excepted): ids double
+    as the sort payload, so duplicate real ids would both survive.
+    """
+    dists = jnp.concatenate([dists_a, dists_b], axis=1)
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    ov, oi = bitonic_topk(dists, ids, k, interpret=interpret)
+    return oi, ov
+
+
+__all__ = ["bitonic_topk", "merge_topk", "topk_ref"]

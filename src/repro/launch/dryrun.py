@@ -158,16 +158,19 @@ def _batann_cell(mesh, multi_pod, sector: bool = False):
 
     dev = baton.DeviceState(
         states=jax.eval_shape(
-            lambda: baton._batched_empty_states(d, cfg, (n_dev, cfg.slots))
+            lambda: baton._batched_empty_states(
+                d, cfg, (n_dev, cfg.slots), m=BC.pq_m, k_pq=BC.pq_k
+            )
         ),
         queue_emb=sds((n_dev, q_per_dev, d), jnp.float32),
         queue_qid=sds((n_dev, q_per_dev), jnp.int32),
         queue_starts=sds((n_dev, q_per_dev, cfg.n_starts), jnp.int32),
         queue_start_d=sds((n_dev, q_per_dev, cfg.n_starts), jnp.float32),
+        queue_lut=sds((n_dev, q_per_dev, BC.pq_m, BC.pq_k), jnp.float32),
         queue_head=sds((n_dev,), jnp.int32),
         out_ids=sds((n_dev, q_per_dev, cfg.k), jnp.int32),
         out_dists=sds((n_dev, q_per_dev, cfg.k), jnp.float32),
-        out_stats=sds((n_dev, q_per_dev, 4), jnp.int32),
+        out_stats=sds((n_dev, q_per_dev, baton.N_STATS), jnp.int32),
         delivered=sds((n_dev, q_per_dev), bool),
     )
     if sector:
@@ -205,9 +208,10 @@ def _batann_cell(mesh, multi_pod, sector: bool = False):
     shard_specs = Shard(vectors=P(axes), neighbors=P(axes), codes=P(),
                         node2part=P(), node2local=P(),
                         nbr_codes=P(axes) if sector else None)
-    smfn = jax.shard_map(
+    from repro.compat import shard_map as _shard_map
+    smfn = _shard_map(
         body, mesh=mesh, in_specs=(dev_specs, shard_specs, P()),
-        out_specs=dev_specs, check_vma=False,
+        out_specs=dev_specs, check=False,
     )
     named = lambda tree: jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree,

@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--slots", type=int, default=32)
     ap.add_argument("--sector-codes", action="store_true",
                     help="AiSAQ sector layout (no replicated PQ array)")
+    ap.add_argument("--ship-lut", action="store_true",
+                    help="§8 alternative: ship the PQ LUT inside the "
+                         "hand-off envelope instead of rebuilding on arrival "
+                         "(bigger wire, zero recompute)")
     ap.add_argument("--partitioner", default="ldg",
                     choices=["ldg", "kmeans", "random"])
     args = ap.parse_args()
@@ -50,7 +54,7 @@ def main():
           f"{'sector' if args.sector_codes else 'replicated'} codes)")
 
     cfg = baton.BatonParams(L=args.L, W=args.W, k=args.k, pool=256,
-                            slots=args.slots)
+                            slots=args.slots, ship_lut=args.ship_lut)
     t0 = time.time()
     ids, dists, stats = baton.run_simulated(index, ds.queries, cfg,
                                             sector_codes=args.sector_codes)
@@ -58,14 +62,18 @@ def main():
           f"(simulated {args.servers} servers)")
 
     rec = ref.recall_at_k(ids, ds.gt, 10)
-    env = envelope_bytes(ds.dim, cfg.L, cfg.pool)
+    pq_m, pq_k = index.codebook.shape[:2]
+    env = envelope_bytes(ds.dim, cfg.L, cfg.pool, m=pq_m, k_pq=pq_k,
+                         ship_lut=cfg.ship_lut)
     qps = COST.cluster_qps(args.servers, stats["reads"].mean(),
                            stats["dist_comps"].mean(),
-                           stats["inter_hops"].mean(), env)
+                           stats["inter_hops"].mean(), env,
+                           lut_builds_per_query=stats["lut_builds"].mean())
     lat = COST.query_latency_s(stats["hops"].mean(),
                                stats["inter_hops"].mean(),
                                stats["reads"].mean(),
-                               stats["dist_comps"].mean(), env)
+                               stats["dist_comps"].mean(), env,
+                               lut_builds=stats["lut_builds"].mean())
     print(f"  recall@10={rec:.3f} hops={stats['hops'].mean():.1f} "
           f"inter={stats['inter_hops'].mean():.2f} "
           f"reads={stats['reads'].mean():.1f} "

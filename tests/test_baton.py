@@ -5,7 +5,7 @@ properties (single-host simulated driver; SPMD equivalence in test_spmd.py).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import baton, partition, ref, scatter_gather
 from repro.core.state import envelope_bytes

@@ -1,0 +1,259 @@
+"""Fused hot-path equivalence: the slot-batched/fused engine must return
+bit-identical (ids, dists) and counters to the per-slot seed path, across
+ship/recompute LUT modes, both merge implementations, both ADC routes, and
+both code layouts (replicated / AiSAQ sector)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import baton, beam_search, pq, ref
+from repro.core.state import envelope_bytes, init_state
+from repro.io_sim.disk import CostModel
+
+
+# ---------------------------------------------------------------------------
+# single-server search_disk: fused merges vs seed double-lexsort merges
+# ---------------------------------------------------------------------------
+
+
+def _single_shard(dataset, graph, codes):
+    return beam_search.Shard(
+        vectors=jnp.asarray(dataset.vectors),
+        neighbors=jnp.asarray(graph.neighbors),
+        codes=jnp.asarray(codes),
+        node2part=jnp.zeros(dataset.n, jnp.int32),
+        node2local=jnp.arange(dataset.n, dtype=jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("merge_impl", ["lexsort", "bitonic"])
+def test_search_disk_fused_matches_seed(dataset, graph, codebook, codes,
+                                        merge_impl):
+    shard = _single_shard(dataset, graph, codes)
+
+    def run(q, fused, merge_impl="lexsort"):
+        lut = pq.build_lut(codebook.centroids, q[None])[0]
+        starts = jnp.asarray([graph.medoid], dtype=jnp.int32)
+        sd = pq.adc(lut[None], shard.codes[starts])[0]
+        state = init_state(q, starts, sd, L=40, P=256)
+        return beam_search.search_disk(state, shard, codebook.centroids,
+                                       w=8, max_hops=512, fused=fused,
+                                       merge_impl=merge_impl)
+
+    qs = jnp.asarray(dataset.queries[:8])
+    seed = jax.vmap(lambda q: run(q, False))(qs)
+    fused = jax.vmap(lambda q: run(q, True, merge_impl))(qs)
+    np.testing.assert_array_equal(np.asarray(fused.pool_ids),
+                                  np.asarray(seed.pool_ids))
+    np.testing.assert_array_equal(np.asarray(fused.pool_dists),
+                                  np.asarray(seed.pool_dists))
+    np.testing.assert_array_equal(np.asarray(fused.beam_ids),
+                                  np.asarray(seed.beam_ids))
+    for f in ("hops", "dist_comps", "reads"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fused.counters, f)),
+            np.asarray(getattr(seed.counters, f)), err_msg=f,
+        )
+
+
+# ---------------------------------------------------------------------------
+# one batched super-step == vmapped per-slot seed steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("adc_impl", ["gather", "mxu"])
+def test_step_disk_batched_matches_vmap(dataset, graph, codebook, codes,
+                                        adc_impl):
+    shard = _single_shard(dataset, graph, codes)
+    S, W, L = 6, 8, 40
+    qs = jnp.asarray(dataset.queries[:S])
+    luts = pq.build_lut(codebook.centroids, qs)
+    starts = jnp.asarray(
+        [[graph.medoid, (graph.medoid + 7) % dataset.n]] * S, jnp.int32
+    )
+    sd = jax.vmap(lambda lut, s: pq.adc(lut[None], shard.codes[s])[0])(
+        luts, starts
+    )
+    states = jax.vmap(lambda q, s, d: init_state(q, s, d, L=L, P=256))(
+        qs, starts, sd
+    )
+    # advance two steps so beams/pools are non-trivial before comparing
+    for _ in range(2):
+        fposs, _, fvalids = jax.vmap(
+            lambda st: beam_search.select_frontier(st.beam_ids, st.beam_expl, W)
+        )(states)
+        states = jax.vmap(
+            lambda st, lut, m, p: beam_search.step_disk(st, shard, lut, m, p,
+                                                        fused=False)
+        )(states, luts, fvalids, fposs)
+
+    fposs, _, fvalids = jax.vmap(
+        lambda st: beam_search.select_frontier(st.beam_ids, st.beam_expl, W)
+    )(states)
+    seed = jax.vmap(
+        lambda st, lut, m, p: beam_search.step_disk(st, shard, lut, m, p,
+                                                    fused=False)
+    )(states, luts, fvalids, fposs)
+    batched = beam_search.step_disk_batched(states, shard, luts, fvalids,
+                                            fposs, adc_impl=adc_impl)
+    if adc_impl == "gather":
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            batched, seed,
+        )
+    else:
+        # MXU one-hot accumulates per-subspace partials in a different order
+        # than the gather's axis reduce — beam PQ dists may differ in ulps
+        np.testing.assert_allclose(np.asarray(batched.beam_dists),
+                                   np.asarray(seed.beam_dists),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_array_equal(np.asarray(batched.pool_ids),
+                                      np.asarray(seed.pool_ids))
+
+
+# ---------------------------------------------------------------------------
+# full engine: run_simulated across every knob combination
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def eq_cfg():
+    return dict(L=32, W=8, k=10, pool=128, slots=16, pair_cap=4, n_starts=4)
+
+
+@pytest.fixture(scope="module")
+def seed_run(baton_index, dataset, eq_cfg):
+    cfg = baton.BatonParams(**eq_cfg, fused=False)
+    return baton.run_simulated(baton_index, dataset.queries, cfg)
+
+
+@pytest.mark.parametrize("ship_lut", [True, False])
+@pytest.mark.parametrize("merge_impl", ["lexsort", "bitonic"])
+def test_run_simulated_fused_matches_seed(baton_index, dataset, eq_cfg,
+                                          seed_run, ship_lut, merge_impl):
+    ids_s, dists_s, st_s = seed_run
+    cfg = baton.BatonParams(**eq_cfg, fused=True, ship_lut=ship_lut,
+                            merge_impl=merge_impl)
+    ids_f, dists_f, st_f = baton.run_simulated(baton_index, dataset.queries,
+                                               cfg)
+    np.testing.assert_array_equal(ids_f, ids_s)
+    np.testing.assert_array_equal(dists_f, dists_s)
+    for key in ("hops", "inter_hops", "dist_comps", "reads"):
+        np.testing.assert_array_equal(st_f[key], st_s[key], err_msg=key)
+
+
+def test_run_simulated_sector_fused_matches_seed(dataset, graph, eq_cfg):
+    idx = baton.build_index(
+        dataset.vectors, p=4, pq_m=16, pq_k=128, head_fraction=0.03,
+        seed=0, graph=graph, codes_mode="sector",
+    )
+    cfg_s = baton.BatonParams(**eq_cfg, fused=False)
+    cfg_f = baton.BatonParams(**eq_cfg, fused=True)
+    ids_s, d_s, st_s = baton.run_simulated(idx, dataset.queries, cfg_s,
+                                           sector_codes=True)
+    ids_f, d_f, st_f = baton.run_simulated(idx, dataset.queries, cfg_f,
+                                           sector_codes=True)
+    np.testing.assert_array_equal(ids_f, ids_s)
+    np.testing.assert_array_equal(d_f, d_s)
+    for key in ("hops", "inter_hops", "dist_comps", "reads"):
+        np.testing.assert_array_equal(st_f[key], st_s[key], err_msg=key)
+
+
+def test_run_simulated_mxu_adc(dataset, graph, eq_cfg):
+    """MXU one-hot ADC: same search quality; ids equal up to ulp-level PQ
+    distance reorderings (exact bit-match is not guaranteed off the gather
+    path, so assert agreement + recall parity instead)."""
+    idx = baton.build_index(
+        dataset.vectors[:600], p=2, pq_m=16, pq_k=64, head_fraction=0.05,
+        seed=0,
+    )
+    qs = dataset.queries[:8]
+    cfg_g = baton.BatonParams(**eq_cfg, adc_impl="gather")
+    cfg_m = baton.BatonParams(**eq_cfg, adc_impl="mxu")
+    ids_g, _, _ = baton.run_simulated(idx, qs, cfg_g)
+    ids_m, _, _ = baton.run_simulated(idx, qs, cfg_m)
+    gt = ref.brute_force_knn(dataset.vectors[:600], qs, 10)
+    rec_g = ref.recall_at_k(ids_g, gt, 10)
+    rec_m = ref.recall_at_k(ids_m, gt, 10)
+    assert (ids_m == ids_g).mean() > 0.9, (ids_m != ids_g).mean()
+    assert abs(rec_m - rec_g) < 0.02, (rec_g, rec_m)
+
+
+# ---------------------------------------------------------------------------
+# LUT lifecycle counters (the point of carrying the LUT in QueryState)
+# ---------------------------------------------------------------------------
+
+
+def test_lut_builds_counter(baton_index, dataset, eq_cfg):
+    cfg_ship = baton.BatonParams(**eq_cfg, ship_lut=True)
+    _, _, st_ship = baton.run_simulated(baton_index, dataset.queries, cfg_ship)
+    # ship mode: exactly one build per query, ever
+    np.testing.assert_array_equal(st_ship["lut_builds"],
+                                  np.ones_like(st_ship["lut_builds"]))
+
+    cfg_rc = baton.BatonParams(**eq_cfg, ship_lut=False)
+    _, _, st_rc = baton.run_simulated(baton_index, dataset.queries, cfg_rc)
+    # recompute mode: one build at enqueue + one per hand-off arrival
+    np.testing.assert_array_equal(st_rc["lut_builds"],
+                                  1 + st_rc["inter_hops"])
+    assert st_rc["inter_hops"].sum() > 0, "want at least one hand-off"
+
+
+# ---------------------------------------------------------------------------
+# §8 envelope accounting reaches the cost model
+# ---------------------------------------------------------------------------
+
+
+def test_ship_lut_envelope_flows_into_cost_model():
+    d, L, P, m, k = 96, 64, 256, 24, 256
+    env_ship = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=True)
+    env_rc = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=False)
+    assert env_ship - env_rc == m * k * 4
+    assert env_rc == envelope_bytes(d, L, P)  # back-compat default
+
+    # symmetric pricing: ship pays wire bytes (lut_builds=1), recompute pays
+    # one LUT rebuild per hand-off (lut_builds=1+inter_hops)
+    cost = CostModel()
+    lat_ship = cost.query_latency_s(hops=30, inter_hops=4, reads=60,
+                                    dist_comps=4000,
+                                    envelope_bytes=env_ship, lut_builds=1)
+    lat_rc = cost.query_latency_s(hops=30, inter_hops=4, reads=60,
+                                  dist_comps=4000,
+                                  envelope_bytes=env_rc, lut_builds=5)
+    lat_base = cost.query_latency_s(hops=30, inter_hops=4, reads=60,
+                                    dist_comps=4000, envelope_bytes=env_rc,
+                                    lut_builds=1)
+    assert lat_ship > lat_base and lat_rc > lat_base  # both sides cost
+    # cpu-bound scenario: extra LUT rebuilds must cut cluster QPS
+    qps_lo = cost.cluster_qps(8, 0.001, 4000, lut_builds_per_query=1)
+    qps_hi = cost.cluster_qps(8, 0.001, 4000, lut_builds_per_query=1000)
+    assert qps_hi < qps_lo
+
+
+# ---------------------------------------------------------------------------
+# slot-batched ADC padding/tiling property (non-aligned shapes)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(1, 9), c=st.integers(1, 70),
+    m=st.sampled_from([4, 8]), k=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_adc_slots_padding_property(s, c, m, k, seed):
+    from repro.kernels.pq_adc.ops import pq_adc_slots
+
+    rng = np.random.default_rng(seed)
+    luts = jnp.asarray(rng.normal(size=(s, m, k)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, k, size=(s, c, m)).astype(np.uint8))
+    want = jax.vmap(lambda lut, cc: pq.adc(lut[None], cc)[0])(luts, codes)
+    got_gather = pq.adc_slots(luts, codes)
+    np.testing.assert_array_equal(np.asarray(got_gather), np.asarray(want))
+    got_mxu = pq_adc_slots(luts, codes.astype(jnp.int32))
+    np.testing.assert_allclose(np.asarray(got_mxu), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.kernels.pq_adc.ops import pq_adc, pq_adc_ref
 from repro.kernels.pq_lut.ops import pq_lut, pq_lut_ref

@@ -32,12 +32,13 @@ _SCRIPT = textwrap.dedent(
     mesh = jax.make_mesh((8,), ("part",))
     q_dev, qid_dev, st_dev, sd_dev, B, Bp, per = baton._split_round_robin(
         idx, ds.queries, cfg)
+    codebook = jnp.asarray(idx.codebook)
     devs = jax.vmap(
-        lambda q, i, s, sd: baton.init_device_state(q, i, s, sd, cfg))(
+        lambda q, i, s, sd: baton.init_device_state(q, i, s, sd, cfg,
+                                                    codebook))(
         jnp.asarray(q_dev), jnp.asarray(qid_dev), jnp.asarray(st_dev),
         jnp.asarray(sd_dev))
     shard = idx.stacked_shards()
-    codebook = jnp.asarray(idx.codebook)
     fn = baton.make_spmd_fn(cfg, n_parts=8, axis_name="part")
 
     def body(d, s, c):
@@ -50,9 +51,10 @@ _SCRIPT = textwrap.dedent(
     dev_specs = jax.tree.map(lambda _: P("part"), devs)
     shard_specs = Shard(vectors=P("part"), neighbors=P("part"), codes=P(),
                         node2part=P(), node2local=P())
-    smfn = jax.shard_map(body, mesh=mesh,
-                         in_specs=(dev_specs, shard_specs, P()),
-                         out_specs=dev_specs, check_vma=False)
+    from repro.compat import shard_map
+    smfn = shard_map(body, mesh=mesh,
+                     in_specs=(dev_specs, shard_specs, P()),
+                     out_specs=dev_specs, check=False)
     out = jax.jit(smfn)(devs, shard, codebook)
     ids_spmd, _, stats_spmd = baton._collect(out, qid_dev, cfg, B, Bp, 8,
                                              per, 0)
