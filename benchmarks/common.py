@@ -118,14 +118,21 @@ def sg_index(p: int | None = None) -> scatter_gather.ScatterGatherIndex:
 
 PQ_M, PQ_K = 24, 256    # the PQ geometry every bench index is built with
 
+# event-simulator scale knobs (fig9_sim / fig13): arrivals per simulated
+# rate point and per saturation-search probe
+SIM_ARRIVALS = int(os.environ.get("BENCH_SIM_ARRIVALS", 5000))
+SIM_SAT_ARRIVALS = int(os.environ.get("BENCH_SIM_SAT_ARRIVALS", 800))
+
 
 def batann_model(stats: dict, p: int, L: int, pool: int, d: int,
-                 ship_lut: bool = False):
+                 ship_lut: bool = False, lut_dtype: str = "f32"):
     """Model QPS/latency from exact counters.  ``ship_lut`` prices the §8
-    envelope tradeoff: shipping the LUT grows every hand-off by M·K·4 bytes;
-    the default (recompute, matching BatonParams) keeps the paper's 4-8 KB
-    calibrated envelope for all figure rows."""
-    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut)
+    envelope tradeoff: shipping the LUT grows every hand-off by M·K·4 bytes
+    (M·K·2 for the fp16-quantized wire variant); the default (recompute,
+    matching BatonParams) keeps the paper's 4-8 KB calibrated envelope for
+    all figure rows."""
+    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut,
+                         lut_dtype=lut_dtype)
     luts = float(np.mean(stats.get("lut_builds", 0.0)))
     qps = COST.cluster_qps(
         n_servers=p,
@@ -164,6 +171,22 @@ def sg_model(stats: dict, p: int):
         envelope_bytes=512,
     )
     return qps, lat
+
+
+def batann_cluster_traces(stats: dict, d: int, L: int, pool: int = 256,
+                          ship_lut: bool = False, lut_dtype: str = "f32"):
+    """Per-query replay traces for the event simulator (repro.cluster)."""
+    from repro import cluster
+
+    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut,
+                         lut_dtype=lut_dtype)
+    return cluster.from_baton_stats(stats, env)
+
+
+def sg_cluster_traces(stats: dict, p: int):
+    from repro import cluster
+
+    return cluster.from_scatter_gather_stats(stats, p)
 
 
 def recall_at_095(l_values, recalls, values):

@@ -32,16 +32,17 @@ def _memo(fn):
 
 @_memo
 def _run_batann(p: int, L: int, w: int, slots: int = 32,
-                ship_lut: bool = False):
+                ship_lut: bool = False, lut_dtype: str = "f32"):
     ds, idx = common.baton_index(p)
     cfg = baton.BatonParams(L=L, W=w, k=10, pool=256, slots=slots,
-                            pair_cap=4, n_starts=4, ship_lut=ship_lut)
+                            pair_cap=4, n_starts=4, ship_lut=ship_lut,
+                            lut_wire_dtype=lut_dtype)
     t0 = time.time()
     ids, dists, stats = baton.run_simulated(idx, ds.queries, cfg)
     wall = time.time() - t0
     rec = ref.recall_at_k(ids, ds.gt, 10)
     qps, lat = common.batann_model(stats, p, L, 256, ds.dim,
-                                   ship_lut=ship_lut)
+                                   ship_lut=ship_lut, lut_dtype=lut_dtype)
     return {
         "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
         "wall_s": wall, "ds": ds,
@@ -221,42 +222,118 @@ def fig12_latency_recall():
     return rows
 
 
+_FIG13_FRACS = (0.1, 0.5, 0.8, 0.9, 0.95)
+
+
+@_memo
+def _sim_system(tag: str, p: int):
+    """(replay traces, saturation QPS) for "batann"|"sg" at server count p.
+
+    Memoized: fig13 and fig9_sim share the (expensive) saturation search."""
+    from repro import cluster
+
+    if tag == "batann":
+        r = _run_batann(p, L_DEFAULT, w=8)
+        traces = common.batann_cluster_traces(r["stats"], r["ds"].dim,
+                                              L_DEFAULT)
+    else:
+        r = _run_sg(p, L_DEFAULT, w=8)
+        traces = common.sg_cluster_traces(r["stats"], p)
+    sat = cluster.find_saturation_qps(
+        traces, p, n_arrivals=common.SIM_SAT_ARRIVALS, seed=0)
+    return traces, sat
+
+
 def fig13_latency_vs_send_rate():
-    """Fig. 13: latency vs send rate (first-order M/M/1 queueing on the
-    bottleneck resource).  BatANN stays flat to ~its max QPS; ScatterGather
-    collapses early."""
-    rb = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
-    rs = _run_sg(common.BENCH_P, L_DEFAULT, w=8)
+    """Fig. 13: latency vs send rate from the *discrete-event simulator* —
+    exact per-query traces replayed through per-server SSD/CPU/slot/NIC
+    queues under open-loop Poisson arrivals (no closed-form queueing).
+    BatANN stays flat to near its saturation rate, then shows the
+    characteristic latency knee; ScatterGather saturates far earlier."""
+    from repro import cluster
+
+    p = common.BENCH_P
     rows = []
-    for frac in (0.1, 0.5, 0.8, 0.95):
-        for tag, r in (("batann", rb), ("sg", rs)):
-            rate = frac * r["qps"]
-            rho = rate / r["qps"]
-            mean = r["lat_s"] / max(1 - rho, 1e-3)
-            p99 = r["lat_s"] * (1 + 3 * rho) / max(1 - rho, 1e-3)
+    p99s = {}
+    for tag in ("batann", "sg"):
+        traces, sat = _sim_system(tag, p)
+        rows.append((f"fig13_{tag}_saturation", 0.0, f"sat_qps={sat:.0f}"))
+        sweep = cluster.latency_vs_rate(
+            traces, p, sat, _FIG13_FRACS,
+            n_arrivals=common.SIM_ARRIVALS, seed=1)
+        for frac in _FIG13_FRACS:
+            r = sweep[frac]
+            p99s[(tag, frac)] = r.p99_s
             rows.append((
-                f"fig13_{tag}_rate{frac:.2f}", mean * 1e6,
-                f"rate_qps={rate:.0f};mean_ms={mean*1e3:.2f};"
-                f"p99_ms={p99*1e3:.2f}",
+                f"fig13_{tag}_rate{frac:.2f}", r.mean_s * 1e6,
+                f"rate_qps={frac*sat:.0f};mean_ms={r.mean_s*1e3:.2f};"
+                f"p50_ms={r.p50_s*1e3:.2f};p99_ms={r.p99_s*1e3:.2f};"
+                f"achieved_qps={r.throughput_qps:.0f}",
             ))
+    rows.append((
+        "fig13_knee", 0.0,
+        f"batann_p99_ratio_0.9v0.1="
+        f"{p99s[('batann', 0.9)] / p99s[('batann', 0.1)]:.2f};"
+        f"sg_p99_ratio_0.9v0.1={p99s[('sg', 0.9)] / p99s[('sg', 0.1)]:.2f}",
+    ))
+    return rows
+
+
+def fig9_sim_scaling():
+    """Fig. 9 re-derived from the event simulator: saturation QPS and
+    simulated latency distribution (mean/p50/p99 at 0.7× saturation) vs
+    server count.  BatANN's saturation scales near-linearly P=2→P; the
+    scatter-gather baseline's stays ~flat (per-query work grows ∝ P)."""
+    from repro import cluster
+
+    ps = sorted({2, max(2, common.BENCH_P // 2), common.BENCH_P})
+    rows = []
+    sat = {}
+    for p in ps:
+        for tag in ("batann", "sg"):
+            traces, s = _sim_system(tag, p)
+            sat[(tag, p)] = s
+            r = cluster.latency_vs_rate(
+                traces, p, s, (0.7,), n_arrivals=common.SIM_ARRIVALS,
+                seed=1)[0.7]
+            rows.append((
+                f"fig9_sim_{tag}_p{p}", r.mean_s * 1e6,
+                f"sat_qps={s:.0f};mean_ms={r.mean_s*1e3:.2f};"
+                f"p50_ms={r.p50_s*1e3:.2f};p99_ms={r.p99_s*1e3:.2f}",
+            ))
+    p0, p1 = ps[0], ps[-1]
+    lin = p1 / p0
+    rows.append((
+        "fig9_sim_scaling", 0.0,
+        f"batann_sat_ratio_p{p1}v{p0}={sat[('batann', p1)]/sat[('batann', p0)]:.2f}"
+        f"(linear={lin:.0f});"
+        f"sg_sat_ratio_p{p1}v{p0}={sat[('sg', p1)]/sat[('sg', p0)]:.2f}",
+    ))
     return rows
 
 
 def sec8_ship_vs_recompute():
-    """§8 "Reducing Message Size": ship the PQ LUT in the envelope vs
-    recompute it on arrival.  Same exact search (ids bit-identical); only
-    the modeled envelope bytes and LUT-build counters move."""
+    """§8 "Reducing Message Size": ship the PQ LUT in the envelope (f32, or
+    fp16-quantized at half the wire bytes) vs recompute it on arrival.
+    f32-ship and recompute run the same exact search (ids bit-identical);
+    the fp16 wire LUT trades a bounded distance error (recall delta in the
+    row) for the halved envelope."""
     rows = []
-    for ship, tag in ((True, "ship"), (False, "recompute")):
+    for ship, lut_dtype, tag in (
+        (True, "f32", "ship"), (True, "f16", "ship_f16"),
+        (False, "f32", "recompute"),
+    ):
         if ship:
-            r = _run_batann(common.BENCH_P, L_DEFAULT, w=8, ship_lut=True)
+            r = _run_batann(common.BENCH_P, L_DEFAULT, w=8, ship_lut=True,
+                            lut_dtype=lut_dtype)
         else:
             # identical memo key as the fig3-fig14 runs -> cache hit
             r = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
         from repro.core.state import envelope_bytes
 
         env = envelope_bytes(r["ds"].dim, L_DEFAULT, 256, m=common.PQ_M,
-                             k_pq=common.PQ_K, ship_lut=ship)
+                             k_pq=common.PQ_K, ship_lut=ship,
+                             lut_dtype=lut_dtype)
         luts = float(np.mean(r["stats"]["lut_builds"]))
         inter = float(np.mean(r["stats"]["inter_hops"]))
         rows.append((

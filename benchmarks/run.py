@@ -29,6 +29,7 @@ def main() -> None:
         ("fig5", figures.fig5_w_efficiency),
         ("fig7", figures.fig7_single_server),
         ("fig9", figures.fig9_throughput_qps_recall),
+        ("fig9sim", figures.fig9_sim_scaling),
         ("fig10", figures.fig10_efficiency),
         ("fig11", figures.fig11_scalability),
         ("fig12", figures.fig12_latency_recall),

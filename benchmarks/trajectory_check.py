@@ -1,0 +1,85 @@
+"""Cross-PR bench trajectory check (ROADMAP follow-up).
+
+Compares the current ``artifacts/bench.json`` against the previous CI run's
+artifact and fails on a >20% regression in any *modeled* QPS figure.  Only
+``...qps=...`` values parsed out of the ``derived`` strings are compared —
+they come from exact counters through the calibrated cost model / event
+simulator, so they are machine-independent.  Wall-clock-derived values
+(``wall_qps``) and raw ``us_per_call`` timings are deliberately ignored:
+they vary with the CI machine.
+
+    python benchmarks/trajectory_check.py prev/bench.json artifacts/bench.json
+
+Exit code 1 iff a tracked metric regressed beyond the threshold.  Rows that
+exist on only one side are reported but never fail the check (figures come
+and go across PRs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+# qps-bearing derived fields, e.g. "batann_qps=1234" / "sat_qps=5e3"
+_QPS_RE = re.compile(r"([A-Za-z0-9_.@/]*qps[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
+_IGNORE = ("wall", "rate_qps")  # machine-dependent / input knobs
+
+
+def extract_qps(bench: dict) -> dict:
+    out = {}
+    for row, rec in bench.items():
+        derived = str(rec.get("derived", ""))
+        for key, val in _QPS_RE.findall(derived):
+            if any(tok in key for tok in _IGNORE):
+                continue
+            try:
+                v = float(val)
+            except ValueError:
+                continue
+            if v > 0:
+                out[f"{row}:{key}"] = v
+    return out
+
+
+def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
+    p, c = extract_qps(prev), extract_qps(cur)
+    regressions = []
+    for key in sorted(p.keys() & c.keys()):
+        ratio = c[key] / p[key]
+        flag = ""
+        if ratio < 1.0 - threshold:
+            flag = "  << REGRESSION"
+            regressions.append(key)
+        print(f"{key}: {p[key]:.1f} -> {c[key]:.1f} ({ratio:.2f}x){flag}")
+    for key in sorted(p.keys() - c.keys()):
+        print(f"{key}: dropped (was {p[key]:.1f})")
+    for key in sorted(c.keys() - p.keys()):
+        print(f"{key}: new ({c[key]:.1f})")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous run's bench.json")
+    ap.add_argument("cur", help="current bench.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated fractional QPS drop (default 0.20)")
+    args = ap.parse_args()
+    with open(args.prev) as f:
+        prev = json.load(f)
+    with open(args.cur) as f:
+        cur = json.load(f)
+    regressions = compare(prev, cur, args.threshold)
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} modeled-QPS regression(s) "
+              f"> {args.threshold:.0%}: {', '.join(regressions)}")
+        return 1
+    print("\nOK: no modeled-QPS regression beyond "
+          f"{args.threshold:.0%} ({len(extract_qps(cur))} tracked metrics)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

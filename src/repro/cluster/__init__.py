@@ -1,0 +1,16 @@
+"""Discrete-event cluster simulator (see README.md in this directory).
+
+Replays exact per-query traces from the baton / scatter-gather engines
+through queueing-aware per-server resources: SSD channel queues, bounded
+search-thread pools with resident-state slots, serializing NIC links.
+"""
+
+from repro.cluster.trace import (          # noqa: F401
+    BatonTrace, ScatterGatherTrace, Segment,
+    from_baton_stats, from_scatter_gather_stats,
+)
+from repro.cluster.workload import Workload, make_workload  # noqa: F401
+from repro.cluster.sim import (            # noqa: F401
+    SimParams, SimResult, capacity_qps, find_saturation_qps,
+    latency_vs_rate, simulate, trace_homes, zero_load_result,
+)

@@ -1,0 +1,550 @@
+"""Discrete-event cluster simulator: queueing-accurate throughput/latency.
+
+Replays exact per-query event traces (``repro.cluster.trace``) through
+modeled per-server resources:
+
+* **SSD** — ``CostModel.ssd_channels`` parallel read channels (Little's law
+  from the calibrated IOPS/latency pair); a hop's W pipelined reads are
+  granted *atomically* and complete after one ``read_service_s`` — the §4.4
+  I/O pipeline.  The FIFO channel queue is where the latency knee lives.
+* **CPU** — ``threads_per_server`` workers serving per-hop scoring jobs
+  (``compute_s``: PQ comparisons + LUT rebuilds).
+* **Slots** — the bounded resident-state pool (``threads × states_per
+  thread``, §5 fixed-count balancing).  Hand-off arrivals have strict
+  priority over fresh admissions, which keep ``admit_headroom`` slots free —
+  the engine's refill-headroom backpressure.  A state in flight holds no
+  slot, so the slot graph has no hold-and-wait cycle (deadlock-free).
+* **NIC** — serializing egress link per server (``tx_s`` occupancy =
+  serialization + wire time) plus flat propagation + receiver deserialize.
+
+The zero-load limit of this machine is exactly the closed-form
+``CostModel.query_latency_s`` (tested to <1%); under load, queueing delay,
+tail latency and stragglers emerge from the event dynamics instead of an
+M/M/1 fudge.  Everything is deterministic given (traces, workload, params):
+same seed => identical event log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+
+import numpy as np
+
+from repro.cluster.trace import BatonTrace, ScatterGatherTrace, Segment
+from repro.cluster.workload import Workload, make_workload
+from repro.io_sim.disk import DEFAULT, CostModel
+
+
+# ---------------------------------------------------------------------------
+# scheduler + resources
+# ---------------------------------------------------------------------------
+
+
+class _Sched:
+    """Event heap keyed (time, seq): FIFO among simultaneous events."""
+
+    __slots__ = ("heap", "seq", "now")
+
+    def __init__(self):
+        self.heap: list = []
+        self.seq = 0
+        self.now = 0.0
+
+    def at(self, t: float, fn) -> None:
+        heapq.heappush(self.heap, (t, self.seq, fn))
+        self.seq += 1
+
+    def run(self) -> None:
+        heap = self.heap
+        while heap:
+            t, _, fn = heapq.heappop(heap)
+            self.now = t
+            fn(t)
+
+
+class _Channels:
+    """``capacity`` identical service channels with an atomic-batch FIFO.
+
+    A batch of n units starts only when n channels are free (the W reads of
+    one hop proceed in parallel) and completes after one service time."""
+
+    __slots__ = ("sched", "capacity", "service_s", "free", "q", "max_q")
+
+    def __init__(self, sched: _Sched, capacity: int, service_s: float):
+        self.sched = sched
+        self.capacity = capacity
+        self.service_s = service_s
+        self.free = capacity
+        self.q: deque = deque()
+        self.max_q = 0
+
+    def acquire(self, t: float, n: int, cb) -> None:
+        self.q.append((min(n, self.capacity), cb))
+        self.max_q = max(self.max_q, len(self.q))
+        self._pump(t)
+
+    def _pump(self, t: float) -> None:
+        while self.q and self.q[0][0] <= self.free:
+            n, cb = self.q.popleft()
+            self.free -= n
+
+            def done(td, n=n, cb=cb):
+                self.free += n
+                cb(td)
+                self._pump(td)
+
+            self.sched.at(t + self.service_s, done)
+
+
+class _Threads:
+    """``capacity`` workers serving variable-duration FIFO jobs."""
+
+    __slots__ = ("sched", "free", "q", "max_q")
+
+    def __init__(self, sched: _Sched, capacity: int):
+        self.sched = sched
+        self.free = capacity
+        self.q: deque = deque()
+        self.max_q = 0
+
+    def acquire(self, t: float, dur_s: float, cb) -> None:
+        self.q.append((dur_s, cb))
+        self.max_q = max(self.max_q, len(self.q))
+        self._pump(t)
+
+    def _pump(self, t: float) -> None:
+        while self.q and self.free > 0:
+            dur, cb = self.q.popleft()
+            self.free -= 1
+
+            def done(td, cb=cb):
+                self.free += 1
+                cb(td)
+                self._pump(td)
+
+            self.sched.at(t + dur, done)
+
+
+class _Nic:
+    """Serializing egress link; delivery = tx occupancy + propagation + rx."""
+
+    __slots__ = ("sched", "cost", "busy")
+
+    def __init__(self, sched: _Sched, cost: CostModel):
+        self.sched = sched
+        self.cost = cost
+        self.busy = 0.0
+
+    def send(self, t: float, n_bytes: int, cb_arrive) -> None:
+        start = max(t, self.busy)
+        end = start + self.cost.tx_s(n_bytes)
+        self.busy = end
+        self.sched.at(end + self.cost.propagation_s + self.cost.rx_s,
+                      cb_arrive)
+
+
+class _Slots:
+    """Bounded resident-state pool with hand-off priority.
+
+    Hand-offs may take every slot; fresh admissions keep ``headroom`` free
+    for them (the engine's refill headroom)."""
+
+    __slots__ = ("free", "headroom", "handoffs", "admits", "max_wait")
+
+    def __init__(self, capacity: int, headroom: int):
+        self.free = capacity
+        self.headroom = min(headroom, capacity - 1)
+        self.handoffs: deque = deque()
+        self.admits: deque = deque()
+        self.max_wait = 0
+
+    def admit(self, t: float, cb) -> None:
+        self.admits.append(cb)
+        self._pump(t)
+
+    def arrive(self, t: float, cb) -> None:
+        self.handoffs.append(cb)
+        self._pump(t)
+
+    def release(self, t: float) -> None:
+        self.free += 1
+        self._pump(t)
+
+    def _pump(self, t: float) -> None:
+        self.max_wait = max(self.max_wait,
+                            len(self.handoffs) + len(self.admits))
+        while True:
+            if self.handoffs and self.free > 0:
+                self.free -= 1
+                self.handoffs.popleft()(t)
+            elif self.admits and self.free > self.headroom:
+                self.free -= 1
+                self.admits.popleft()(t)
+            else:
+                return
+
+
+class _Server:
+    __slots__ = ("ssd", "cpu", "nic", "slots")
+
+    def __init__(self, sched: _Sched, cost: CostModel, params: "SimParams"):
+        self.ssd = _Channels(sched, cost.ssd_channels, cost.read_service_s)
+        self.cpu = _Threads(sched, cost.threads_per_server)
+        self.nic = _Nic(sched, cost)
+        cap = params.slots_per_server or cost.server_slots
+        self.slots = _Slots(cap, params.admit_headroom)
+
+
+# ---------------------------------------------------------------------------
+# parameters & results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    cost: CostModel = DEFAULT
+    slots_per_server: int | None = None  # default: cost.server_slots
+    admit_headroom: int = 2              # slots reserved for hand-offs
+    charge_result_return: bool = False   # price client-return message ③
+    #                                      (closed-form latency doesn't)
+    result_bytes: int = 512
+    record_events: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    latencies_s: np.ndarray   # per-arrival completion latency (NaN if lost)
+    arrive_s: np.ndarray
+    trace_idx: np.ndarray
+    offered: int
+    completed: int
+    makespan_s: float
+    rate_qps: float
+    events: "list | None" = None
+    diag: dict = dataclasses.field(default_factory=dict)
+
+    def _done(self) -> np.ndarray:
+        return self.latencies_s[~np.isnan(self.latencies_s)]
+
+    @property
+    def mean_s(self) -> float:
+        return float(np.mean(self._done()))
+
+    def percentile_s(self, q: float) -> float:
+        return float(np.percentile(self._done(), q))
+
+    @property
+    def p50_s(self) -> float:
+        return self.percentile_s(50)
+
+    @property
+    def p95_s(self) -> float:
+        return self.percentile_s(95)
+
+    @property
+    def p99_s(self) -> float:
+        return self.percentile_s(99)
+
+    @property
+    def throughput_qps(self) -> float:
+        return self.completed / max(self.makespan_s, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# the simulation
+# ---------------------------------------------------------------------------
+
+
+def simulate(traces, n_servers: int, workload: Workload,
+             params: "SimParams | None" = None) -> SimResult:
+    """Replay ``workload`` (arrival times + trace choices) through the
+    modeled cluster; every enqueued query runs to completion (the event loop
+    drains)."""
+    params = params or SimParams()
+    cost = params.cost
+    sched = _Sched()
+    servers = [_Server(sched, cost, params) for _ in range(n_servers)]
+    n = workload.n
+    lat = np.full(n, np.nan)
+    arrive = np.asarray(workload.times_s, float)
+    completed = 0
+    events: "list | None" = [] if params.record_events else None
+
+    def log(t, kind, aid, srv):
+        if events is not None:
+            events.append((t, kind, aid, srv))
+
+    def hop_plan(seg: Segment):
+        """Split a segment into per-hop (reads, cpu_seconds) phases.
+
+        Per-segment counters are exact; reads/comparisons spread evenly
+        across the segment's hops (each hop issues <= W reads by
+        construction).  LUT builds charge the first hop."""
+        h = seg.hops
+        if h == 0:
+            cpu = cost.compute_s(seg.dist_comps, seg.lut_builds)
+            return [(seg.reads, cpu)] if (seg.reads or cpu > 0) else []
+        rb, rx = divmod(seg.reads, h)
+        db, dx = divmod(seg.dist_comps, h)
+        return [
+            (rb + (1 if i < rx else 0),
+             cost.compute_s(db + (1 if i < dx else 0),
+                            seg.lut_builds if i == 0 else 0))
+            for i in range(h)
+        ]
+
+    def finish(aid, t0, t, last_part, home):
+        def complete(tc):
+            nonlocal completed
+            lat[aid] = tc - t0
+            completed += 1
+            log(tc, "complete", aid, home)
+
+        if params.charge_result_return and last_part != home:
+            servers[last_part].nic.send(t, params.result_bytes, complete)
+        else:
+            complete(t)
+
+    def run_segment(sv: _Server, seg: Segment, t: float, on_done) -> None:
+        plan = hop_plan(seg)
+
+        def do_hop(hi, t):
+            if hi >= len(plan):
+                on_done(t)
+                return
+            nr, cpu_s = plan[hi]
+
+            def after_io(t2):
+                sv.cpu.acquire(t2, cpu_s, lambda t3: do_hop(hi + 1, t3))
+
+            if nr > 0:
+                sv.ssd.acquire(t, nr, after_io)
+            else:
+                after_io(t)
+
+        do_hop(0, t)
+
+    # --- baton lifecycle: admission -> segments linked by hand-offs --------
+    def launch_baton(aid: int, tr: BatonTrace, t0: float) -> None:
+        segs = tr.segments
+
+        def seg_cb(si):
+            def with_slot(t):
+                seg = segs[si]
+                sv = servers[seg.part]
+                log(t, "seg_start", aid, seg.part)
+
+                def done(t):
+                    sv.slots.release(t)
+                    if si + 1 < len(segs):
+                        log(t, "handoff", aid, seg.part)
+                        sv.nic.send(
+                            t, tr.envelope_bytes,
+                            lambda ta: servers[segs[si + 1].part].slots.arrive(
+                                ta, seg_cb(si + 1)
+                            ),
+                        )
+                    else:
+                        # hand-offs folded into the last trace segment
+                        # (trace_cap overflow) still cost envelope
+                        # transfers — charge them before completing
+                        def drain(t, left=tr.folded_handoffs):
+                            if left > 0:
+                                sv.nic.send(
+                                    t, tr.envelope_bytes,
+                                    lambda ta: drain(ta, left - 1),
+                                )
+                            else:
+                                finish(aid, t0, t, seg.part, tr.home)
+
+                        drain(t)
+
+                run_segment(sv, seg, t, done)
+
+            return with_slot
+
+        def arrive0(t):
+            log(t, "arrive", aid, tr.home)
+            servers[tr.home].slots.admit(t, seg_cb(0))
+
+        sched.at(t0, arrive0)
+
+    # --- scatter-gather lifecycle: fan-out, parallel branches, gather ------
+    def launch_sg(aid: int, tr: ScatterGatherTrace, t0: float) -> None:
+        remaining = len(tr.branches)
+
+        def branch_done(t):  # result available at the home server at t
+            nonlocal remaining
+            remaining -= 1
+            if remaining == 0:
+                servers[tr.home].slots.release(t)
+                finish(aid, t0, t, tr.home, tr.home)
+
+        def run_branch(seg: Segment, t_start: float, remote: bool):
+            sv = servers[seg.part]
+
+            def with_slot(t):
+                def done(t):
+                    if remote:
+                        sv.slots.release(t)
+                        sv.nic.send(t, tr.reply_bytes, branch_done)
+                    else:
+                        branch_done(t)  # home slot released at gather
+
+                run_segment(sv, seg, t, done)
+
+            if remote:
+                sv.slots.arrive(t_start, with_slot)
+            else:
+                with_slot(t_start)
+
+        def admitted(t):
+            log(t, "seg_start", aid, tr.home)
+            home_nic = servers[tr.home].nic
+            for seg in tr.branches:
+                if seg.part == tr.home:
+                    run_branch(seg, t, remote=False)
+                else:
+                    home_nic.send(
+                        t, tr.scatter_bytes,
+                        lambda ta, seg=seg: run_branch(seg, ta, remote=True),
+                    )
+
+        def arrive0(t):
+            log(t, "arrive", aid, tr.home)
+            servers[tr.home].slots.admit(t, admitted)
+
+        sched.at(t0, arrive0)
+
+    for aid in range(n):
+        tr = traces[int(workload.trace_idx[aid])]
+        if isinstance(tr, BatonTrace):
+            launch_baton(aid, tr, float(arrive[aid]))
+        elif isinstance(tr, ScatterGatherTrace):
+            launch_sg(aid, tr, float(arrive[aid]))
+        else:
+            raise TypeError(f"unknown trace type: {type(tr)}")
+
+    sched.run()
+
+    makespan = float(sched.now - arrive[0]) if n else 0.0
+    diag = {
+        "max_ssd_queue": max(s.ssd.max_q for s in servers),
+        "max_cpu_queue": max(s.cpu.max_q for s in servers),
+        "max_slot_wait": max(s.slots.max_wait for s in servers),
+    }
+    return SimResult(
+        latencies_s=lat, arrive_s=arrive,
+        trace_idx=np.asarray(workload.trace_idx),
+        offered=n, completed=completed, makespan_s=makespan,
+        rate_qps=workload.rate_qps, events=events, diag=diag,
+    )
+
+
+# ---------------------------------------------------------------------------
+# capacity, saturation, sweeps
+# ---------------------------------------------------------------------------
+
+
+def trace_homes(traces) -> np.ndarray:
+    return np.asarray([t.home for t in traces])
+
+
+def capacity_qps(traces, n_servers: int,
+                 params: "SimParams | None" = None) -> float:
+    """Analytic throughput upper bound: 1 / max per-server resource demand.
+
+    Expected seconds of each resource consumed per arrival (traces uniform),
+    per server; the binding resource on the busiest server caps the rate.
+    Queueing (atomic read batches, slot waits) keeps the *achievable* rate
+    below this — use :func:`find_saturation_qps` for the operational knee.
+    """
+    params = params or SimParams()
+    cost = params.cost
+    disk = np.zeros(n_servers)
+    cpu = np.zeros(n_servers)
+    nic = np.zeros(n_servers)
+    for t in traces:
+        if isinstance(t, BatonTrace):
+            for i, s in enumerate(t.segments):
+                disk[s.part] += s.reads / cost.ssd_iops
+                cpu[s.part] += (cost.compute_s(s.dist_comps, s.lut_builds)
+                                / cost.threads_per_server)
+                if i + 1 < len(t.segments):
+                    nic[s.part] += cost.tx_s(t.envelope_bytes)
+            nic[t.segments[-1].part] += (t.folded_handoffs
+                                         * cost.tx_s(t.envelope_bytes))
+        else:
+            for s in t.branches:
+                disk[s.part] += s.reads / cost.ssd_iops
+                cpu[s.part] += (cost.compute_s(s.dist_comps, s.lut_builds)
+                                / cost.threads_per_server)
+                if s.part != t.home:
+                    nic[s.part] += cost.tx_s(t.reply_bytes)
+                    nic[t.home] += cost.tx_s(t.scatter_bytes)
+    demand = max(np.max(disk), np.max(cpu), np.max(nic)) / len(traces)
+    return 1.0 / max(demand, 1e-12)
+
+
+def zero_load_result(traces, n_servers: int,
+                     params: "SimParams | None" = None) -> SimResult:
+    """Each trace replayed once, spaced far apart (no queueing)."""
+    cap = capacity_qps(traces, n_servers, params)
+    wl = Workload(
+        times_s=np.arange(len(traces)) * (1000.0 / cap),
+        trace_idx=np.arange(len(traces)),
+        rate_qps=cap / 1000.0, kind="zero-load",
+    )
+    return simulate(traces, n_servers, wl, params)
+
+
+def find_saturation_qps(
+    traces, n_servers: int, params: "SimParams | None" = None,
+    n_arrivals: int = 800, seed: int = 0, latency_factor: float = 10.0,
+    iters: int = 9,
+) -> float:
+    """Saturation send rate via rate sweep (bisection): the highest open-loop
+    Poisson rate whose mean simulated latency stays below ``latency_factor``×
+    the zero-load mean.  Deterministic given the seed."""
+    base = zero_load_result(traces, n_servers, params).mean_s
+    cap = capacity_qps(traces, n_servers, params)
+    lo, hi = 0.02 * cap, cap
+
+    def sustainable(rate):
+        wl = make_workload(len(traces), rate, n_arrivals, "poisson",
+                           seed=seed)
+        r = simulate(traces, n_servers, wl, params)
+        return r.mean_s <= latency_factor * base
+
+    # validate the bracket: `cap` averages demand over servers, so heavily
+    # imbalanced traces (e.g. one hot home) can make even `lo` unsustainable
+    # — scan down until the returned rate is one the cluster actually holds
+    for _ in range(8):
+        if sustainable(lo):
+            break
+        hi = lo
+        lo *= 0.25
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if sustainable(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def latency_vs_rate(
+    traces, n_servers: int, sat_qps: float, fracs,
+    n_arrivals: int = 2000, seed: int = 0, arrival: str = "poisson",
+    params: "SimParams | None" = None,
+) -> dict:
+    """Simulate at ``frac × sat_qps`` for each fraction -> {frac: SimResult}."""
+    homes = trace_homes(traces)
+    out = {}
+    for frac in fracs:
+        wl = make_workload(len(traces), frac * sat_qps, n_arrivals, arrival,
+                           seed=seed, homes=homes)
+        out[frac] = simulate(traces, n_servers, wl, params)
+    return out

@@ -1,0 +1,86 @@
+"""Open-loop arrival generators for the cluster simulator.
+
+All generators are seeded and produce a fixed-length :class:`Workload`
+(arrival times + which trace each arrival replays), so a simulation run is a
+pure function of (traces, workload, params) — the determinism the replay
+tests rely on.
+
+Three processes (paper §6 drives load open-loop at a fixed send rate; the
+burst/skew variants are the obvious stress scenarios the closed-form model
+cannot price):
+
+* ``poisson`` — memoryless arrivals at ``rate_qps``; traces drawn uniformly.
+* ``burst``   — compound-Poisson clusters: bursts of ``burst_size`` queries
+                arrive back-to-back, burst *starts* are Poisson at
+                ``rate_qps / burst_size`` (same mean rate, bursty variance).
+* ``skew``    — Poisson arrivals, but traces are drawn with a Zipf-weighted
+                preference over *home servers*, concentrating load on a few
+                servers (hot-tenant scenario).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    times_s: np.ndarray    # (n,) sorted arrival times, seconds
+    trace_idx: np.ndarray  # (n,) index into the trace list
+    rate_qps: float
+    kind: str
+
+    @property
+    def n(self) -> int:
+        return len(self.times_s)
+
+
+def make_workload(
+    n_traces: int,
+    rate_qps: float,
+    n: int,
+    arrival: str = "poisson",
+    seed: int = 0,
+    burst_size: int = 8,
+    skew_alpha: float = 1.5,
+    homes: "np.ndarray | None" = None,
+) -> Workload:
+    """Generate ``n`` arrivals at mean rate ``rate_qps``.
+
+    ``homes`` (one home-server id per trace) is required for ``skew``.
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be > 0: {rate_qps}")
+    rng = np.random.default_rng(seed)
+
+    if arrival == "poisson":
+        times = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+        idx = rng.integers(0, n_traces, size=n)
+    elif arrival == "burst":
+        n_bursts = max(1, (n + burst_size - 1) // burst_size)
+        starts = np.cumsum(
+            rng.exponential(burst_size / rate_qps, size=n_bursts)
+        )
+        times = (starts[:, None] + 1e-6 * np.arange(burst_size)).reshape(-1)[:n]
+        idx = rng.integers(0, n_traces, size=len(times))
+    elif arrival == "skew":
+        if homes is None:
+            raise ValueError("skew arrivals need `homes` (per-trace server)")
+        homes = np.asarray(homes)
+        assert len(homes) == n_traces
+        times = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+        servers = np.unique(homes)
+        w = 1.0 / np.arange(1, len(servers) + 1) ** skew_alpha  # Zipf weights
+        w /= w.sum()
+        by_home = [np.flatnonzero(homes == s) for s in servers]
+        pick_srv = rng.choice(len(servers), size=n, p=w)
+        idx = np.array([
+            by_home[s][rng.integers(0, len(by_home[s]))] for s in pick_srv
+        ])
+    else:
+        raise ValueError(f"arrival must be poisson|burst|skew: {arrival}")
+
+    return Workload(times_s=times, trace_idx=idx, rate_qps=rate_qps,
+                    kind=arrival)

@@ -62,10 +62,10 @@ import numpy as np
 
 from repro.core import beam_search, head_index, partition as part_mod, pq, vamana
 from repro.core.beam_search import (
-    Shard, select_frontier, step_disk, step_disk_batched,
+    Shard, seed_beam_fused, select_frontier, step_disk, step_disk_batched,
 )
 from repro.core.state import (
-    INF, N_STATS, NO_ID, Counters, QueryState, empty_state,
+    INF, N_STATS, N_TRACE, NO_ID, Counters, HopTrace, QueryState, empty_state,
 )
 
 
@@ -94,6 +94,12 @@ class BatonParams:
     ship_lut: bool = False   # §8: ship the LUT in the envelope (True) vs
     #                          rebuild on arrival (False — the paper's
     #                          4-8 KB envelope; +1 lut_build per hand-off)
+    lut_wire_dtype: str = "f32"  # §8 cont.: quantize the *shipped* LUT to
+    #                          "f16" — halves its wire bytes at a bounded
+    #                          distance-error cost (only used with ship_lut)
+    trace_cap: int = 32      # residency segments recorded per query for the
+    #                          cluster simulator (repro.cluster); overflow
+    #                          folds into the last segment
 
     def __post_init__(self):
         if self.adc_impl not in ("gather", "mxu"):
@@ -102,6 +108,12 @@ class BatonParams:
             raise ValueError(
                 f"merge_impl must be lexsort|bitonic: {self.merge_impl}"
             )
+        if self.lut_wire_dtype not in ("f32", "f16"):
+            raise ValueError(
+                f"lut_wire_dtype must be f32|f16: {self.lut_wire_dtype}"
+            )
+        if self.trace_cap < 1:
+            raise ValueError(f"trace_cap must be >= 1: {self.trace_cap}")
 
     @property
     def refill_headroom(self) -> int:
@@ -242,6 +254,7 @@ class DeviceState(NamedTuple):
     out_ids: jnp.ndarray       # (Q, k)
     out_dists: jnp.ndarray     # (Q, k)
     out_stats: jnp.ndarray     # (Q, N_STATS) — see state.STAT_FIELDS
+    out_trace: jnp.ndarray     # (Q, T, N_TRACE) — see state.TRACE_FIELDS
     delivered: jnp.ndarray     # (Q,) bool
 
 
@@ -252,6 +265,7 @@ class ResultMsg(NamedTuple):
     ids: jnp.ndarray           # (k,)
     dists: jnp.ndarray         # (k,)
     stats: jnp.ndarray         # (N_STATS,)
+    trace: jnp.ndarray         # (T, N_TRACE) packed HopTrace
 
 
 def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
@@ -260,14 +274,16 @@ def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
         ids=jnp.full(shape + (cfg.k,), NO_ID, jnp.int32),
         dists=jnp.full(shape + (cfg.k,), INF, jnp.float32),
         stats=jnp.zeros(shape + (N_STATS,), jnp.int32),
+        trace=jnp.full(shape + (cfg.trace_cap, N_TRACE), -1, jnp.int32),
     )
 
 
 def _batched_empty_states(
     d: int, cfg: BatonParams, shape, m: int | None = None,
-    k_pq: int | None = None,
+    k_pq: int | None = None, lut_dtype=jnp.float32,
 ) -> QueryState:
-    one = empty_state(d, cfg.L, cfg.pool, m=m, k_pq=k_pq)
+    one = empty_state(d, cfg.L, cfg.pool, m=m, k_pq=k_pq,
+                      lut_dtype=lut_dtype, trace_cap=cfg.trace_cap)
     return jax.tree.map(lambda x: jnp.broadcast_to(x, shape + x.shape), one)
 
 
@@ -289,6 +305,7 @@ def init_device_state(queries, qids, starts, start_d, cfg: BatonParams,
         out_ids=jnp.full((q, cfg.k), NO_ID, jnp.int32),
         out_dists=jnp.full((q, cfg.k), INF, jnp.float32),
         out_stats=jnp.zeros((q, N_STATS), jnp.int32),
+        out_trace=jnp.full((q, cfg.trace_cap, N_TRACE), -1, jnp.int32),
         delivered=jnp.zeros((q,), bool),
     )
 
@@ -330,9 +347,13 @@ def refill(dev: DeviceState, cfg: BatonParams, my_part):
 
     def seed_one(st, e, s_ids, s_d, q, lu, t):
         L, P = cfg.L, cfg.pool
-        bi, bd, be = beam_search.merge_into_beam(
-            jnp.full((L,), NO_ID, jnp.int32), jnp.full((L,), INF, jnp.float32),
-            jnp.zeros((L,), bool), s_ids, s_d,
+        # fused single-sort seeding (bit-identical to the old double-lexsort
+        # merge_into_beam against an empty beam)
+        bi, bd, be = seed_beam_fused(s_ids, s_d, L)
+        trace = HopTrace.empty(cfg.trace_cap)
+        trace = trace._replace(
+            part=trace.part.at[0].set(jnp.int32(my_part)),
+            lut_builds=trace.lut_builds.at[0].set(1),
         )
         new = QueryState(
             query=e, beam_ids=bi, beam_dists=bd, beam_expl=be,
@@ -340,7 +361,7 @@ def refill(dev: DeviceState, cfg: BatonParams, my_part):
             pool_dists=jnp.full((P,), INF, jnp.float32),
             counters=Counters.zeros()._replace(lut_builds=jnp.int32(1)),
             active=jnp.asarray(True), done=jnp.asarray(False),
-            home=jnp.int32(my_part), qid=q, lut=lu,
+            home=jnp.int32(my_part), qid=q, lut=lu, trace=trace,
         )
         return jax.tree.map(lambda a, b: jnp.where(t, a, b), new, st)
 
@@ -435,11 +456,12 @@ def deliver_local(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
     out_ids = dev.out_ids.at[row].set(st.pool_ids[:, :k], mode="drop")
     out_dists = dev.out_dists.at[row].set(st.pool_dists[:, :k], mode="drop")
     out_stats = dev.out_stats.at[row].set(st.counters.stacked(), mode="drop")
+    out_trace = dev.out_trace.at[row].set(st.trace.stacked(), mode="drop")
     delivered = dev.delivered.at[row].set(True, mode="drop")
     states = st._replace(active=st.active & ~ready)
     return dev._replace(
         states=states, out_ids=out_ids, out_dists=out_dists,
-        out_stats=out_stats, delivered=delivered,
+        out_stats=out_stats, out_trace=out_trace, delivered=delivered,
     )
 
 
@@ -461,6 +483,7 @@ def pack_results(dev: DeviceState, cfg: BatonParams, my_part, n_parts: int):
         ids=st.pool_ids[:, : cfg.k],
         dists=st.pool_dists[:, : cfg.k],
         stats=st.counters.stacked(),
+        trace=st.trace.stacked(),
     )
     buf = jax.tree.map(
         lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, msg
@@ -477,6 +500,7 @@ def merge_results(dev: DeviceState, inc: ResultMsg, cfg: BatonParams, n_parts: i
         out_ids=dev.out_ids.at[row].set(inc.ids, mode="drop"),
         out_dists=dev.out_dists.at[row].set(inc.dists, mode="drop"),
         out_stats=dev.out_stats.at[row].set(inc.stats, mode="drop"),
+        out_trace=dev.out_trace.at[row].set(inc.trace, mode="drop"),
         delivered=dev.delivered.at[row].set(True, mode="drop"),
     )
 
@@ -518,10 +542,31 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
     states = dev.states
     inter = states.counters.inter_hops + granted.astype(jnp.int32)
     states = states._replace(counters=states.counters._replace(inter_hops=inter))
+    # close the residency segment: the next one runs on `dest` (trace
+    # overflow beyond trace_cap folds into the last segment)
+    tr = states.trace
+    T = tr.part.shape[-1]
+    next_seg = jnp.clip(tr.seg + 1, 0, T - 1)
+    rows = jnp.arange(dest.shape[0])
+    cur_part = tr.part[rows, next_seg]
+    tr = tr._replace(
+        part=tr.part.at[rows, next_seg].set(
+            jnp.where(granted, dest.astype(jnp.int32), cur_part)
+        ),
+        seg=jnp.where(granted, next_seg, tr.seg),
+    )
+    states = states._replace(trace=tr)
     # only shipped copies are active on arrival
     shipped = states._replace(active=states.active & granted)
+    lut_dtype = jnp.float32
     if cfg.ship_lut:
         m, k_pq = states.lut.shape[-2], states.lut.shape[-1]
+        if cfg.lut_wire_dtype == "f16":
+            # §8 "Reducing Message Size": ship a half-precision LUT — the
+            # wire tree genuinely carries M·K·2 bytes; the receiver widens
+            # back to f32 (bounded quantization error, tested).
+            lut_dtype = jnp.float16
+            shipped = shipped._replace(lut=shipped.lut.astype(jnp.float16))
     else:
         # §8 "Reducing Message Size": drop the LUT leaf from the send tree
         # entirely, so the all_to_all genuinely moves M·K·4 fewer bytes per
@@ -529,7 +574,7 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
         m = k_pq = None
         shipped = shipped._replace(lut=None)
     buf = _batched_empty_states(dev.queue_emb.shape[1], cfg, (n_parts, C),
-                                m=m, k_pq=k_pq)
+                                m=m, k_pq=k_pq, lut_dtype=lut_dtype)
     buf = jax.tree.map(
         lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, shipped
     )
@@ -545,18 +590,40 @@ def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams,
     envelope: rebuild it here from the (always-shipped) query embedding and
     the replicated codebook, and count the build on the state."""
     S = cfg.slots
+    inc_active = incoming.active                                 # (P*C,)
     if not cfg.ship_lut:
         # the wire tree arrived without a lut leaf (see pack_sends) —
-        # rebuild and reattach.  Inactive rows get garbage LUTs, but the
-        # slot scatter below drops their whole row anyway.
+        # rebuild and reattach.  The grant protocol admits at most `free`
+        # (<= S) states per super-step, so compacting the active rows to the
+        # front and building only min(S, P·C) LUTs covers every row that can
+        # land in a slot: rebuild work scales with the *active* incoming
+        # states, not the P·C wire capacity (matters at large P).
         assert codebook is not None, "recompute mode needs the codebook"
-        builds = incoming.counters.lut_builds + \
-            incoming.active.astype(jnp.int32)
+        codebook = jnp.asarray(codebook)
+        pc = inc_active.shape[0]
+        cap = min(S, pc)
+        order = jnp.argsort(~inc_active, stable=True)            # active first
+        sel = order[:cap]
+        lut_sel = pq.build_lut(codebook, incoming.query[sel])    # (cap, M, K)
+        lut = jnp.zeros((pc,) + lut_sel.shape[1:], lut_sel.dtype)
+        lut = lut.at[sel].set(lut_sel)
+        builds = incoming.counters.lut_builds + inc_active.astype(jnp.int32)
+        # the rebuild belongs to the (just-opened) arrival segment
+        tr = incoming.trace
+        rows = jnp.arange(pc)
+        segc = jnp.clip(tr.seg, 0, tr.part.shape[-1] - 1)
+        tr = tr._replace(
+            lut_builds=tr.lut_builds.at[rows, segc].add(
+                inc_active.astype(jnp.int32)
+            )
+        )
         incoming = incoming._replace(
-            lut=pq.build_lut(jnp.asarray(codebook), incoming.query),
+            lut=lut, trace=tr,
             counters=incoming.counters._replace(lut_builds=builds),
         )
-    inc_active = incoming.active                                 # (P*C,)
+    elif incoming.lut.dtype != jnp.float32:
+        # quantized §8 wire LUT: widen back to f32 for scoring
+        incoming = incoming._replace(lut=incoming.lut.astype(jnp.float32))
     inc_rank = jnp.cumsum(inc_active.astype(jnp.int32)) - 1      # among active
     free = ~dev.states.active                                    # (S,)
     free_pos = jnp.sort(jnp.where(free, jnp.arange(S), S))       # first n_free ok
@@ -569,13 +636,35 @@ def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams,
     return dev._replace(states=states)
 
 
+def _trace_accumulate(dev: DeviceState, pre: Counters) -> DeviceState:
+    """Charge this super-step's local work (counter deltas since ``pre``,
+    taken right after refill) to every state's open residency segment."""
+    st = dev.states
+    tr = st.trace
+    seg = jnp.clip(tr.seg, 0, tr.part.shape[-1] - 1)             # (S,)
+    rows = jnp.arange(seg.shape[0])
+    c = st.counters
+
+    def add(leaf, delta):
+        return leaf.at[rows, seg].add(delta)
+
+    tr = tr._replace(
+        hops=add(tr.hops, c.hops - pre.hops),
+        reads=add(tr.reads, c.reads - pre.reads),
+        dist_comps=add(tr.dist_comps, c.dist_comps - pre.dist_comps),
+    )
+    return dev._replace(states=st._replace(trace=tr))
+
+
 def _superstep_local(dev, shard, cfg, my_part, n_parts):
     """Phases 1-2 + route planning (everything before communication).
 
     No per-super-step LUT build: every resident state carries its own LUT
     (seeded at refill from the once-per-query queue build)."""
     dev = refill(dev, cfg, my_part)
+    pre = dev.states.counters
     dev = local_advance(dev, shard, cfg, my_part)
+    dev = _trace_accumulate(dev, pre)
     dev = deliver_local(dev, cfg, my_part, n_parts)
     res_buf, dev = pack_results(dev, cfg, my_part, n_parts)
     dest = plan_routes(dev, shard, cfg, my_part)                 # (S,)
@@ -623,16 +712,22 @@ def _collect(devs, qid_dev, cfg, B, Bp, P, per, n_supersteps):
     out_ids = np.asarray(devs.out_ids).reshape(P * per, -1)
     out_dists = np.asarray(devs.out_dists).reshape(P * per, -1)
     out_stats = np.asarray(devs.out_stats).reshape(P * per, N_STATS)
+    out_trace = np.asarray(devs.out_trace).reshape(
+        P * per, cfg.trace_cap, N_TRACE
+    )
     qid_flat = np.asarray(qid_dev).reshape(-1)
     ids = np.full((Bp, cfg.k), -1, np.int32)
     dists = np.full((Bp, cfg.k), np.inf, np.float32)
     stats = np.zeros((Bp, N_STATS), np.int64)
+    trace = np.full((Bp, cfg.trace_cap, N_TRACE), -1, np.int64)
     ok = qid_flat >= 0
     ids[qid_flat[ok]] = out_ids[ok]
     dists[qid_flat[ok]] = out_dists[ok]
     stats[qid_flat[ok]] = out_stats[ok]
+    trace[qid_flat[ok]] = out_trace[ok]
     ids, dists, stats = ids[:B], dists[:B], stats[:B]
     out = {f: stats[:, i] for i, f in enumerate(STAT_FIELDS)}
+    out["trace"] = trace[:B]
     out["n_supersteps"] = int(n_supersteps)
     out["delivered"] = float(np.asarray(devs.delivered).mean())
     return ids, dists, out

@@ -145,6 +145,28 @@ def merge_into_beam_fused(beam_ids, beam_dists, beam_expl, cand_ids,
     return ids, dists, expl
 
 
+def seed_beam_fused(start_ids, start_dists, L: int):
+    """Seed an *empty* beam from head-index start candidates (refill path).
+
+    ``merge_into_beam`` pays two (L+n)-length lexsorts; here the beam is
+    empty, so it suffices to dedup the tiny start list (keep the
+    best-distance copy per id) and run the single-sort fused merge.
+    Bit-identical to ``merge_into_beam(empty_beam, starts)`` —
+    tests/test_cluster_sim.py::test_seed_beam_fused_bit_identical.
+    """
+    order = jnp.lexsort((start_dists, start_ids))      # per-id best first
+    si, sd = start_ids[order], start_dists[order]
+    dup = jnp.concatenate([jnp.array([False]), si[1:] == si[:-1]])
+    si = jnp.where(dup, NO_ID, si)
+    sd = jnp.where(dup, INF, sd)
+    ids, dists, expl = merge_into_beam_fused(
+        jnp.full((1, L), NO_ID, jnp.int32),
+        jnp.full((1, L), INF, jnp.float32),
+        jnp.zeros((1, L), bool), si[None], sd[None],
+    )
+    return ids[0], dists[0], expl[0]
+
+
 def merge_pool_fused(pool_ids, pool_dists, new_ids, new_dists,
                      impl: str = "lexsort"):
     """Batched single-pass pool merge; same precondition as the beam merge

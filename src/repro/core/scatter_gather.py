@@ -154,10 +154,16 @@ def run_simulated(
     out_ids = np.asarray(jnp.take_along_axis(gids, order, axis=1))
     out_dists = np.asarray(jnp.take_along_axis(gdist, order, axis=1))
 
-    st = np.asarray(stats).sum(0).astype(np.int64)     # (B, 4) summed over P
+    per_part = np.asarray(stats).astype(np.int64)      # (P, B, 4)
+    st = per_part.sum(0)                               # (B, 4) summed over P
     return out_ids, out_dists, {
         "hops": st[:, 0], "inter_hops": st[:, 1],
         "dist_comps": st[:, 2], "reads": st[:, 3],
         # per-query latency is driven by the *slowest* partition (§6.5)
-        "max_part_hops": np.asarray(stats)[:, :, 0].max(0),
+        "max_part_hops": per_part[:, :, 0].max(0),
+        # per-partition branch traces (B, P) — the cluster simulator replays
+        # each query's scatter fan-out through per-server queues with these
+        "part_hops": per_part[:, :, 0].T,
+        "part_dist_comps": per_part[:, :, 2].T,
+        "part_reads": per_part[:, :, 3].T,
     }

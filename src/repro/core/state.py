@@ -30,6 +30,55 @@ NO_ID = jnp.int32(-1)
 STAT_FIELDS = ("hops", "inter_hops", "dist_comps", "reads", "lut_builds")
 N_STATS = len(STAT_FIELDS)
 
+# columns of one packed trace segment (DeviceState.out_trace, axis -1)
+TRACE_FIELDS = ("part", "hops", "reads", "dist_comps", "lut_builds")
+N_TRACE = len(TRACE_FIELDS)
+
+
+class HopTrace(NamedTuple):
+    """Per-query residency trace: one row per contiguous stay on a server.
+
+    Segment ``i`` records the work a query did during its ``i``-th residency
+    (``part[i]`` is the server; segment 0 is the home server).  A hand-off
+    closes the current segment and opens the next; the number of populated
+    segments is therefore ``inter_hops + 1``.  This is the exact event record
+    the cluster simulator (``repro.cluster``) replays through queueing-aware
+    resources — closed-form latency only needs the Counters totals, but
+    queueing needs to know *where* each read/comparison happened.
+
+    Fixed shape (T segments, ``BatonParams.trace_cap``): overflow beyond T
+    segments folds into the last row (totals stay exact; per-server
+    attribution of the overflow is approximated by the final server).
+
+    The trace rides in the engine's hand-off tree (so it follows the state
+    through ``all_to_all`` with no out-of-band join) but it is *measurement
+    instrumentation*, not protocol payload: a real deployment would not ship
+    it, so ``envelope_bytes`` deliberately excludes it from the priced wire
+    size.
+    """
+
+    part: jnp.ndarray        # (T,) int32 server of each segment, -1 = unused
+    hops: jnp.ndarray        # (T,) int32 beam-search steps in the segment
+    reads: jnp.ndarray       # (T,) int32 sector reads in the segment
+    dist_comps: jnp.ndarray  # (T,) int32 PQ + exact comparisons
+    lut_builds: jnp.ndarray  # (T,) int32 LUT (re)builds in the segment
+    seg: jnp.ndarray         # () int32 index of the open segment
+
+    @staticmethod
+    def empty(t: int) -> "HopTrace":
+        z = jnp.zeros((t,), jnp.int32)
+        return HopTrace(
+            part=jnp.full((t,), -1, jnp.int32),
+            hops=z, reads=z, dist_comps=z, lut_builds=z,
+            seg=jnp.int32(0),
+        )
+
+    def stacked(self) -> jnp.ndarray:
+        """Pack into the fixed TRACE_FIELDS order: (..., T, N_TRACE)."""
+        return jnp.stack(
+            [getattr(self, f) for f in TRACE_FIELDS], axis=-1
+        )
+
 
 class Counters(NamedTuple):
     hops: jnp.ndarray            # total beam-search steps (Fig. 3/4)
@@ -71,6 +120,7 @@ class QueryState(NamedTuple):
     home: jnp.ndarray            # () int32 — partition the client sent it to
     qid: jnp.ndarray             # () int32 — client-side query id
     lut: jnp.ndarray | None = None  # (M, K) float32 PQ lookup table
+    trace: HopTrace | None = None   # per-residency event record (baton only)
 
     @property
     def L(self) -> int:
@@ -83,11 +133,12 @@ class QueryState(NamedTuple):
 
 def empty_state(
     d: int, L: int, P: int, m: int | None = None, k_pq: int | None = None,
+    lut_dtype=jnp.float32, trace_cap: int | None = None,
 ) -> QueryState:
     lut = None
     if m is not None:
         assert k_pq is not None
-        lut = jnp.zeros((m, k_pq), jnp.float32)
+        lut = jnp.zeros((m, k_pq), lut_dtype)
     return QueryState(
         query=jnp.zeros((d,), jnp.float32),
         beam_ids=jnp.full((L,), NO_ID, jnp.int32),
@@ -101,6 +152,7 @@ def empty_state(
         home=jnp.int32(0),
         qid=jnp.int32(-1),
         lut=lut,
+        trace=HopTrace.empty(trace_cap) if trace_cap is not None else None,
     )
 
 
@@ -137,16 +189,25 @@ def init_state(
 def envelope_bytes(
     d: int, L: int, P: int,
     m: int | None = None, k_pq: int | None = None, ship_lut: bool = False,
+    lut_dtype: str = "f32",
 ) -> int:
     """Wire size of one state (the paper's 4-8 KB envelope).
 
-    With ``ship_lut=True`` the per-query PQ LUT (M·K·4 bytes) rides in the
-    envelope, trading wire bytes for zero recompute on arrival — the §8
-    "Reducing Message Size" knob.  Without it the receiver rebuilds the LUT
-    from the (always-shipped) query embedding and its replicated codebook.
+    With ``ship_lut=True`` the per-query PQ LUT (M·K·4 bytes, or M·K·2 for
+    the ``lut_dtype="f16"`` quantized variant) rides in the envelope, trading
+    wire bytes for zero recompute on arrival — the §8 "Reducing Message Size"
+    knob.  Without it the receiver rebuilds the LUT from the (always-shipped)
+    query embedding and its replicated codebook.
+
+    The ``HopTrace`` leaves the engine attaches to in-flight states are
+    measurement instrumentation (see ``HopTrace``) and are not counted here.
     """
     if ship_lut and (m is None or k_pq is None):
         raise ValueError("ship_lut=True needs the PQ geometry (m, k_pq)")
-    s = empty_state(d, L, P, m=m if ship_lut else None,
-                    k_pq=k_pq if ship_lut else None)
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))
+    if lut_dtype not in ("f32", "f16"):
+        raise ValueError(f"lut_dtype must be f32|f16: {lut_dtype}")
+    s = empty_state(d, L, P)
+    base = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))
+    if ship_lut:
+        base += m * k_pq * (2 if lut_dtype == "f16" else 4)
+    return base

@@ -52,6 +52,48 @@ class CostModel:
     threads_per_server: int = 8          # paper runs 8 search threads
     states_per_thread: int = 8           # fixed-count inter-query balancing
 
+    # ---- event-simulator service-time primitives (repro.cluster) ----------
+    # The discrete-event cluster simulator replays per-query traces through
+    # queues whose *service times* come from exactly these constants, so the
+    # closed-form `query_latency_s` below is its zero-load limit (tested to
+    # <1%: tests/test_cluster_sim.py::test_zero_load_matches_closed_form).
+
+    @property
+    def read_service_s(self) -> float:
+        """Service time of one (pipelined batch of) 4 KB sector read(s)."""
+        return self.ssd_read_latency_us * 1e-6
+
+    @property
+    def ssd_channels(self) -> int:
+        """Concurrent in-flight reads that sustain ``ssd_iops`` at
+        ``ssd_read_latency_us`` (Little's law: c = IOPS × latency)."""
+        return max(1, int(round(self.ssd_iops * self.read_service_s)))
+
+    @property
+    def server_slots(self) -> int:
+        """Resident query states per server (fixed-count balancing, §5)."""
+        return self.threads_per_server * self.states_per_thread
+
+    def compute_s(self, dist_comps: float, lut_builds: float = 0.0) -> float:
+        """CPU service time of one hop's scoring work."""
+        return (dist_comps * self.dist_comp_us
+                + lut_builds * self.lut_build_us) * 1e-6
+
+    def tx_s(self, n_bytes: float) -> float:
+        """Sender-side NIC occupancy: serialization + wire time."""
+        return (self.serialize_us
+                + n_bytes * 8.0 / (self.tcp_bandwidth_gbps * 1e3)) * 1e-6
+
+    @property
+    def rx_s(self) -> float:
+        """Receiver-side deserialization (flat, uncontended)."""
+        return self.serialize_us * 1e-6
+
+    @property
+    def propagation_s(self) -> float:
+        """One-way small-message network latency."""
+        return self.tcp_one_way_us * 1e-6
+
     # ---- per-query latency (seconds) --------------------------------------
     def query_latency_s(
         self,

@@ -171,6 +171,8 @@ def _batann_cell(mesh, multi_pod, sector: bool = False):
         out_ids=sds((n_dev, q_per_dev, cfg.k), jnp.int32),
         out_dists=sds((n_dev, q_per_dev, cfg.k), jnp.float32),
         out_stats=sds((n_dev, q_per_dev, baton.N_STATS), jnp.int32),
+        out_trace=sds((n_dev, q_per_dev, cfg.trace_cap, baton.N_TRACE),
+                      jnp.int32),
         delivered=sds((n_dev, q_per_dev), bool),
     )
     if sector:

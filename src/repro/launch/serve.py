@@ -36,6 +36,16 @@ def main():
                          "(bigger wire, zero recompute)")
     ap.add_argument("--partitioner", default="ldg",
                     choices=["ldg", "kmeans", "random"])
+    ap.add_argument("--send-rate", type=float, default=0.0,
+                    help="open-loop send rate (QPS) for the discrete-event "
+                         "cluster simulator: replays the measured per-query "
+                         "traces through per-server SSD/CPU/slot/NIC queues "
+                         "and reports p50/p99 under load (0 = skip)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "burst", "skew"],
+                    help="arrival process for --send-rate")
+    ap.add_argument("--sim-arrivals", type=int, default=2000,
+                    help="queries to simulate at --send-rate")
     args = ap.parse_args()
 
     ds = synth.make_dataset("deep", n=args.n, n_queries=args.queries, seed=0)
@@ -80,6 +90,21 @@ def main():
           f"dcs={stats['dist_comps'].mean():.0f}")
     print(f"  modeled: QPS={qps:.0f} latency={lat*1e3:.2f}ms "
           f"bottleneck={COST.bottleneck(args.servers, stats['reads'].mean(), stats['dist_comps'].mean(), stats['inter_hops'].mean(), env)}")
+
+    if args.send_rate > 0:
+        from repro import cluster
+
+        traces = cluster.from_baton_stats(stats, env)
+        sat = cluster.find_saturation_qps(traces, args.servers, seed=0)
+        wl = cluster.make_workload(
+            len(traces), args.send_rate, args.sim_arrivals, args.arrival,
+            seed=0, homes=cluster.trace_homes(traces))
+        res = cluster.simulate(traces, args.servers, wl)
+        print(f"  simulated @{args.send_rate:.0f} qps ({args.arrival}, "
+              f"{res.completed}/{res.offered} completed): "
+              f"mean={res.mean_s*1e3:.2f}ms p50={res.p50_s*1e3:.2f}ms "
+              f"p95={res.p95_s*1e3:.2f}ms p99={res.p99_s*1e3:.2f}ms "
+              f"(saturation~{sat:.0f} qps)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,360 @@
+"""Discrete-event cluster simulator (repro.cluster) + PR satellites.
+
+Covers the ISSUE-2 acceptance battery:
+* trace emission is exact (per-segment counters sum to the engine's totals),
+* deterministic replay (same seed => identical event log),
+* conservation (every enqueued query completes) + the closed-form
+  ``query_latency_s`` as a per-query lower bound,
+* zero-load simulated latency matches the closed-form model within 1%,
+* the latency knee near saturation and baton-vs-scatter-gather scaling,
+* satellite equivalences: fused refill seeding (bit-identical), compacted
+  merge_recv LUT rebuild (values + counters unchanged), fp16 wire LUT
+  (halved envelope, bounded distance error, recall parity).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro import cluster
+from repro.core import baton, beam_search, pq, ref, scatter_gather
+from repro.core.state import INF, NO_ID, envelope_bytes
+from repro.io_sim.disk import DEFAULT as COST
+
+
+@pytest.fixture(scope="module")
+def traced_run(baton_index, dataset):
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    ids, dists, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128, ship_lut=False)
+    traces = cluster.from_baton_stats(stats, env)
+    return cfg, stats, traces, env
+
+
+@pytest.fixture(scope="module")
+def sg_traces(dataset, graph):
+    sg = scatter_gather.build_index(
+        dataset.vectors, p=4, r=20, l_build=40, pq_m=16, pq_k=128,
+        seed=0, global_graph=graph,
+    )
+    _, _, stats = scatter_gather.run_simulated(sg, dataset.queries, L=32,
+                                               W=8, k=10)
+    return cluster.from_scatter_gather_stats(stats, 4)
+
+
+def _closed_form(trace, env):
+    t = trace.totals()
+    return COST.query_latency_s(
+        hops=t["hops"], inter_hops=t["inter_hops"], reads=t["reads"],
+        dist_comps=t["dist_comps"], envelope_bytes=env,
+        lut_builds=t["lut_builds"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace emission
+# ---------------------------------------------------------------------------
+
+
+def test_trace_totals_match_counters(traced_run):
+    """Per-segment trace sums reproduce the engine's exact counters."""
+    _, stats, traces, _ = traced_run
+    assert len(traces) == len(stats["hops"])
+    for tr in traces:
+        t = tr.totals()
+        q = tr.qid
+        assert t["hops"] == stats["hops"][q]
+        assert t["reads"] == stats["reads"][q]
+        assert t["dist_comps"] == stats["dist_comps"][q]
+        assert t["lut_builds"] == stats["lut_builds"][q]
+        assert t["inter_hops"] == stats["inter_hops"][q]
+        # home = round-robin placement; every segment on a real server
+        assert tr.home == q % 4
+        assert all(0 <= s.part < 4 for s in tr.segments)
+        # consecutive segments are on different servers (it was a hand-off)
+        for a, b in zip(tr.segments, tr.segments[1:]):
+            assert a.part != b.part
+
+
+def test_trace_cap_overflow_folds_exactly(baton_index, dataset):
+    """With a tiny trace_cap, hand-offs beyond capacity fold into the last
+    segment but stay counted (folded_handoffs) — totals and zero-load
+    latency remain exact."""
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4,
+                            trace_cap=2)
+    _, _, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    assert (stats["inter_hops"] > 1).any()       # overflow actually happens
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128)
+    traces = cluster.from_baton_stats(stats, env)
+    for tr in traces:
+        assert len(tr.segments) <= 2
+        t = tr.totals()
+        assert t["inter_hops"] == stats["inter_hops"][tr.qid]
+        assert t["hops"] == stats["hops"][tr.qid]
+        assert t["reads"] == stats["reads"][tr.qid]
+    res = cluster.zero_load_result(traces, 4)
+    for i, tr in enumerate(traces):
+        cf = _closed_form(tr, env)
+        assert abs(res.latencies_s[i] - cf) / cf < 0.01
+
+
+def test_sg_traces_cover_all_partitions(sg_traces):
+    for tr in sg_traces:
+        assert len(tr.branches) == 4
+        assert sum(b.reads for b in tr.branches) > 0
+        assert {b.part for b in tr.branches} == set(range(4))
+
+
+# ---------------------------------------------------------------------------
+# simulator core properties (ISSUE satellite: test coverage)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_load_matches_closed_form(traced_run, dataset):
+    """Satellite: zero-load simulated latency == closed-form within 1%."""
+    _, _, traces, env = traced_run
+    res = cluster.zero_load_result(traces, 4)
+    assert res.completed == len(traces)
+    for i, tr in enumerate(traces):
+        cf = _closed_form(tr, env)
+        assert abs(res.latencies_s[i] - cf) / cf < 0.01, (i, res.latencies_s[i], cf)
+
+
+def test_deterministic_replay(traced_run):
+    """Satellite: same seed => bit-identical event log."""
+    _, _, traces, _ = traced_run
+    params = cluster.SimParams(record_events=True)
+    wl = cluster.make_workload(len(traces), 2000.0, 400, "poisson", seed=7)
+    r1 = cluster.simulate(traces, 4, wl, params)
+    r2 = cluster.simulate(traces, 4, wl, params)
+    assert r1.events == r2.events
+    assert np.array_equal(r1.latencies_s, r2.latencies_s)
+    # a different seed gives a different arrival pattern (sanity)
+    wl2 = cluster.make_workload(len(traces), 2000.0, 400, "poisson", seed=8)
+    r3 = cluster.simulate(traces, 4, wl2, params)
+    assert r3.events != r1.events
+
+
+def test_conservation_and_lower_bound(traced_run):
+    """Satellite: every enqueued query completes; per-query simulated
+    latency >= the closed-form (queue-free) lower bound."""
+    _, _, traces, env = traced_run
+    sat = cluster.find_saturation_qps(traces, 4, n_arrivals=400, seed=0)
+    wl = cluster.make_workload(len(traces), 0.7 * sat, 800, "poisson", seed=1)
+    res = cluster.simulate(traces, 4, wl)
+    assert res.completed == res.offered == 800
+    assert not np.isnan(res.latencies_s).any()
+    lb = np.array([_closed_form(traces[i], env) for i in res.trace_idx])
+    assert (res.latencies_s >= lb - 1e-9).all()
+
+
+def test_latency_knee_near_saturation(traced_run):
+    """Acceptance: p99 at 0.9x saturation >= 3x p99 at 0.1x saturation."""
+    _, _, traces, _ = traced_run
+    sat = cluster.find_saturation_qps(traces, 4, n_arrivals=600, seed=0)
+    sweep = cluster.latency_vs_rate(traces, 4, sat, (0.1, 0.9),
+                                    n_arrivals=2000, seed=1)
+    ratio = sweep[0.9].p99_s / sweep[0.1].p99_s
+    assert ratio >= 3.0, ratio
+    # and the mean moves too (the knee is not only a tail effect)
+    assert sweep[0.9].mean_s > 1.5 * sweep[0.1].mean_s
+
+
+def test_scaling_baton_linear_sg_sublinear(dataset, graph, baton_index,
+                                           sg_traces):
+    """Fig. 9/11 shape: doubling servers ~doubles baton saturation; the
+    scatter-gather baseline gains far less (per-query work grows with P)."""
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    idx2 = baton.build_index(
+        dataset.vectors, p=2, pq_m=16, pq_k=128, head_fraction=0.03,
+        seed=0, graph=graph,
+    )
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128)
+    _, _, st2 = baton.run_simulated(idx2, dataset.queries, cfg)
+    _, _, st4 = baton.run_simulated(baton_index, dataset.queries, cfg)
+    sat2 = cluster.find_saturation_qps(cluster.from_baton_stats(st2, env), 2,
+                                       n_arrivals=400, seed=0)
+    sat4 = cluster.find_saturation_qps(cluster.from_baton_stats(st4, env), 4,
+                                       n_arrivals=400, seed=0)
+    ratio = sat4 / sat2
+    assert abs(ratio - 2.0) <= 0.5, ratio        # within 25% of linear
+
+    sg2 = scatter_gather.build_index(
+        dataset.vectors, p=2, r=20, l_build=40, pq_m=16, pq_k=128,
+        seed=0, global_graph=graph,
+    )
+    _, _, sg_st2 = scatter_gather.run_simulated(sg2, dataset.queries, L=32,
+                                                W=8, k=10)
+    sg_sat2 = cluster.find_saturation_qps(
+        cluster.from_scatter_gather_stats(sg_st2, 2), 2,
+        n_arrivals=400, seed=0)
+    sg_sat4 = cluster.find_saturation_qps(sg_traces, 4,
+                                          n_arrivals=400, seed=0)
+    assert sg_sat4 / sg_sat2 < ratio             # sublinear vs baton
+    assert sg_sat4 / sg_sat2 < 1.75              # and clearly below 2x
+
+
+def test_arrival_generators(traced_run):
+    """burst/skew keep the mean rate; skew concentrates load by home."""
+    _, _, traces, _ = traced_run
+    homes = cluster.trace_homes(traces)
+    n = 4000
+    for kind in ("poisson", "burst", "skew"):
+        wl = cluster.make_workload(len(traces), 1000.0, n, kind, seed=3,
+                                   homes=homes)
+        span = wl.times_s[-1] - wl.times_s[0]
+        rate = (wl.n - 1) / span
+        assert 0.8 * 1000 < rate < 1.25 * 1000, (kind, rate)
+    wl = cluster.make_workload(len(traces), 1000.0, n, "skew", seed=3,
+                               homes=homes)
+    counts = np.bincount(homes[wl.trace_idx], minlength=4)
+    assert counts.max() > 2 * counts.min()       # Zipf concentration
+    # the skewed hot server saturates the cluster earlier
+    wl_uni = cluster.make_workload(len(traces), 1000.0, 500, "poisson", seed=3)
+    wl_skew = cluster.make_workload(len(traces), 1000.0, 500, "skew", seed=3,
+                                    homes=homes)
+    r_uni = cluster.simulate(traces, 4, wl_uni)
+    r_skew = cluster.simulate(traces, 4, wl_skew)
+    assert r_skew.completed == r_uni.completed == 500
+
+
+def test_sg_simulation_completes(sg_traces):
+    sat = cluster.find_saturation_qps(sg_traces, 4, n_arrivals=400, seed=0)
+    wl = cluster.make_workload(len(sg_traces), 0.8 * sat, 600, "poisson",
+                               seed=2)
+    res = cluster.simulate(sg_traces, 4, wl)
+    assert res.completed == 600
+    assert res.mean_s > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: fused refill seeding (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    L=st.sampled_from([8, 32]),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_seed_beam_fused_bit_identical(L, n, seed):
+    """seed_beam_fused == merge_into_beam(empty beam, starts) bitwise,
+    including duplicate start ids and NO_ID padding."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, 6, size=n).astype(np.int32)   # dups + NO_ID likely
+    dists = np.where(ids < 0, np.inf,
+                     rng.integers(0, 4, size=n) * 0.5).astype(np.float32)
+    s_ids, s_d = jnp.asarray(ids), jnp.asarray(dists)
+    want = beam_search.merge_into_beam(
+        jnp.full((L,), NO_ID, jnp.int32), jnp.full((L,), INF, jnp.float32),
+        jnp.zeros((L,), bool), s_ids, s_d,
+    )
+    got = beam_search.seed_beam_fused(s_ids, s_d, L)
+    for w, g, name in zip(want, got, ("ids", "dists", "expl")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# satellite: compacted merge_recv LUT rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_merge_recv_compact_lut(dataset, codebook):
+    """Compacted rebuild: landed states carry the exact per-query LUT and
+    Counters.lut_builds is unchanged (one increment per active arrival)."""
+    d = dataset.vectors.shape[1]
+    cfg = baton.BatonParams(L=16, W=4, k=5, pool=32, slots=6, pair_cap=3,
+                            n_starts=2)
+    cb = codebook.centroids
+    m, k_pq = cb.shape[0], cb.shape[1]
+    P = 4
+    pc = P * cfg.pair_cap
+    # wire batch: lut dropped (recompute mode), some rows active
+    inc = baton._batched_empty_states(d, cfg, (pc,), m=None, k_pq=None)
+    inc = inc._replace(lut=None)
+    rng = np.random.default_rng(0)
+    active = np.zeros(pc, bool)
+    active[[1, 4, 5, 9]] = True
+    queries = rng.normal(size=(pc, d)).astype(np.float32)
+    inc = inc._replace(
+        query=jnp.asarray(queries),
+        active=jnp.asarray(active),
+        qid=jnp.arange(pc, dtype=jnp.int32),
+    )
+    dev = baton.init_device_state(
+        np.zeros((2, d), np.float32), np.full((2,), -1, np.int32),
+        np.full((2, cfg.n_starts), -1, np.int32),
+        np.full((2, cfg.n_starts), np.inf, np.float32), cfg, cb,
+    )
+    out = baton.merge_recv(dev, inc, cfg, codebook=cb)
+    st = out.states
+    placed = np.asarray(st.active)
+    assert placed.sum() == active.sum()
+    want_lut = np.asarray(pq.build_lut(cb, jnp.asarray(queries)))
+    got_qid = np.asarray(st.qid)
+    for slot in np.flatnonzero(placed):
+        row = got_qid[slot]
+        assert active[row]
+        np.testing.assert_array_equal(np.asarray(st.lut)[slot], want_lut[row])
+        # exactly one rebuild charged per arrival
+        assert int(np.asarray(st.counters.lut_builds)[slot]) == 1
+
+
+def test_lut_builds_counter_engine_invariant(baton_index, dataset):
+    """Satellite assertion: compacted rebuild leaves Counters.lut_builds
+    exactly at 1 + inter_hops in recompute mode."""
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4,
+                            ship_lut=False)
+    _, _, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    np.testing.assert_array_equal(stats["lut_builds"],
+                                  1 + stats["inter_hops"])
+    assert stats["inter_hops"].sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: fp16 wire LUT (§8 "Reducing Message Size")
+# ---------------------------------------------------------------------------
+
+
+def test_f16_envelope_halves_lut_bytes():
+    d, L, P, m, k = 96, 64, 256, 24, 256
+    base = envelope_bytes(d, L, P)
+    env32 = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=True)
+    env16 = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=True,
+                           lut_dtype="f16")
+    assert env32 - base == m * k * 4
+    assert env16 - base == m * k * 2
+
+
+def test_f16_lut_distance_error_bounded(dataset, codebook, codes):
+    """ADC with an fp16-roundtripped LUT stays within fp16 relative
+    precision of the f32 distances."""
+    lut = pq.build_lut(codebook.centroids,
+                       jnp.asarray(dataset.queries[:8]))
+    lut16 = lut.astype(jnp.float16).astype(jnp.float32)
+    d32 = np.asarray(pq.adc(lut, jnp.asarray(codes[:512])))
+    d16 = np.asarray(pq.adc(lut16, jnp.asarray(codes[:512])))
+    rel = np.abs(d16 - d32) / np.maximum(d32, 1e-6)
+    assert rel.max() < 5e-3, rel.max()
+
+
+def test_f16_ship_recall_delta_small(baton_index, dataset):
+    """Engine-level: fp16 wire LUT loses <2% recall@10 vs f32 shipping on
+    the smoke dataset (distances only drift after a hand-off)."""
+    kw = dict(L=32, W=8, k=10, pool=128, slots=16, n_starts=4, ship_lut=True)
+    ids32, _, st32 = baton.run_simulated(
+        baton_index, dataset.queries, baton.BatonParams(**kw))
+    ids16, _, st16 = baton.run_simulated(
+        baton_index, dataset.queries,
+        baton.BatonParams(**kw, lut_wire_dtype="f16"))
+    r32 = ref.recall_at_k(ids32, dataset.gt, 10)
+    r16 = ref.recall_at_k(ids16, dataset.gt, 10)
+    assert abs(r32 - r16) < 0.02, (r32, r16)
+    # same routing work: the quantization must not change hop structure much
+    assert abs(st32["inter_hops"].mean() - st16["inter_hops"].mean()) < 1.0
