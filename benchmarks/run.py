@@ -35,6 +35,9 @@ def main() -> None:
         ("fig12", figures.fig12_latency_recall),
         ("fig13", figures.fig13_latency_vs_send_rate),
         ("fig14", figures.fig14_w_throughput),
+        ("fig15cache", figures.fig15_cache_hit_sweep),
+        ("fig16repl", figures.fig16_replication_skew),
+        ("fig17strag", figures.fig17_straggler),
         ("sec8", figures.sec8_ship_vs_recompute),
         ("kernels", kernel_rows),
         ("superstep", superstep_rows),

@@ -1,8 +1,10 @@
 """Discrete-event cluster simulator (see README.md in this directory).
 
 Replays exact per-query traces from the baton / scatter-gather engines
-through queueing-aware per-server resources: SSD channel queues, bounded
-search-thread pools with resident-state slots, serializing NIC links.
+through composable per-server stage stacks (``repro.cluster.stages``):
+optional LRU sector-cache tier, SSD channel queues, bounded search-thread
+pools with resident-state slots, serializing NIC links — under a
+replication-aware partition placement with per-server straggler multipliers.
 """
 
 from repro.cluster.trace import (          # noqa: F401
@@ -10,7 +12,11 @@ from repro.cluster.trace import (          # noqa: F401
     from_baton_stats, from_scatter_gather_stats,
 )
 from repro.cluster.workload import Workload, make_workload  # noqa: F401
+from repro.cluster.stages import (         # noqa: F401
+    CacheTier, Placement, ServerConfig, ServerStack, Stage,
+)
 from repro.cluster.sim import (            # noqa: F401
-    SimParams, SimResult, capacity_qps, find_saturation_qps,
-    latency_vs_rate, simulate, trace_homes, zero_load_result,
+    SimParams, SimResult, backlog_growing, capacity_qps,
+    find_saturation_qps, latency_vs_rate, simulate, trace_homes,
+    zero_load_result,
 )

@@ -1,8 +1,13 @@
 """Discrete-event cluster simulator: queueing-accurate throughput/latency.
 
 Replays exact per-query event traces (``repro.cluster.trace``) through
-modeled per-server resources:
+per-server **stage stacks** (``repro.cluster.stages``):
 
+* **Cache** — optional LRU memory tier over sector keys
+  (``SimParams.cache_sectors``): hits cost ``CostModel.cache_hit_service_s``
+  and never enter the SSD queue; keys come from each trace's per-segment
+  distinct-sector footprint, so the hit rate is *trace-driven* (repeated
+  queries re-touch the same sectors), not a global scalar.
 * **SSD** — ``CostModel.ssd_channels`` parallel read channels (Little's law
   from the calibrated IOPS/latency pair); a hop's W pipelined reads are
   granted *atomically* and complete after one ``read_service_s`` — the §4.4
@@ -17,184 +22,28 @@ modeled per-server resources:
 * **NIC** — serializing egress link per server (``tx_s`` occupancy =
   serialization + wire time) plus flat propagation + receiver deserialize.
 
-The zero-load limit of this machine is exactly the closed-form
-``CostModel.query_latency_s`` (tested to <1%); under load, queueing delay,
-tail latency and stragglers emerge from the event dynamics instead of an
-M/M/1 fudge.  Everything is deterministic given (traces, workload, params):
-same seed => identical event log.
+A :class:`stages.Placement` maps partitions to replica server sets; the
+least-loaded replica is picked at slot-acquire time (``SimParams.replicas``
+or an explicit map).  Per-server straggler multipliers
+(``SimParams.read_mult`` / ``compute_mult``) scale SSD/CPU service times.
+
+With every scenario stage disabled (no cache, identity placement, unit
+multipliers — the defaults) the zero-load limit of this machine is exactly
+the closed-form ``CostModel.query_latency_s`` (tested to <1%) and the event
+log is bit-identical to the PR 2 pipeline.  Everything is deterministic
+given (traces, workload, params): same seed => identical event log.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from collections import deque
 
 import numpy as np
 
+from repro.cluster.stages import Placement, Sched, ServerConfig, ServerStack
 from repro.cluster.trace import BatonTrace, ScatterGatherTrace, Segment
 from repro.cluster.workload import Workload, make_workload
 from repro.io_sim.disk import DEFAULT, CostModel
-
-
-# ---------------------------------------------------------------------------
-# scheduler + resources
-# ---------------------------------------------------------------------------
-
-
-class _Sched:
-    """Event heap keyed (time, seq): FIFO among simultaneous events."""
-
-    __slots__ = ("heap", "seq", "now")
-
-    def __init__(self):
-        self.heap: list = []
-        self.seq = 0
-        self.now = 0.0
-
-    def at(self, t: float, fn) -> None:
-        heapq.heappush(self.heap, (t, self.seq, fn))
-        self.seq += 1
-
-    def run(self) -> None:
-        heap = self.heap
-        while heap:
-            t, _, fn = heapq.heappop(heap)
-            self.now = t
-            fn(t)
-
-
-class _Channels:
-    """``capacity`` identical service channels with an atomic-batch FIFO.
-
-    A batch of n units starts only when n channels are free (the W reads of
-    one hop proceed in parallel) and completes after one service time."""
-
-    __slots__ = ("sched", "capacity", "service_s", "free", "q", "max_q")
-
-    def __init__(self, sched: _Sched, capacity: int, service_s: float):
-        self.sched = sched
-        self.capacity = capacity
-        self.service_s = service_s
-        self.free = capacity
-        self.q: deque = deque()
-        self.max_q = 0
-
-    def acquire(self, t: float, n: int, cb) -> None:
-        self.q.append((min(n, self.capacity), cb))
-        self.max_q = max(self.max_q, len(self.q))
-        self._pump(t)
-
-    def _pump(self, t: float) -> None:
-        while self.q and self.q[0][0] <= self.free:
-            n, cb = self.q.popleft()
-            self.free -= n
-
-            def done(td, n=n, cb=cb):
-                self.free += n
-                cb(td)
-                self._pump(td)
-
-            self.sched.at(t + self.service_s, done)
-
-
-class _Threads:
-    """``capacity`` workers serving variable-duration FIFO jobs."""
-
-    __slots__ = ("sched", "free", "q", "max_q")
-
-    def __init__(self, sched: _Sched, capacity: int):
-        self.sched = sched
-        self.free = capacity
-        self.q: deque = deque()
-        self.max_q = 0
-
-    def acquire(self, t: float, dur_s: float, cb) -> None:
-        self.q.append((dur_s, cb))
-        self.max_q = max(self.max_q, len(self.q))
-        self._pump(t)
-
-    def _pump(self, t: float) -> None:
-        while self.q and self.free > 0:
-            dur, cb = self.q.popleft()
-            self.free -= 1
-
-            def done(td, cb=cb):
-                self.free += 1
-                cb(td)
-                self._pump(td)
-
-            self.sched.at(t + dur, done)
-
-
-class _Nic:
-    """Serializing egress link; delivery = tx occupancy + propagation + rx."""
-
-    __slots__ = ("sched", "cost", "busy")
-
-    def __init__(self, sched: _Sched, cost: CostModel):
-        self.sched = sched
-        self.cost = cost
-        self.busy = 0.0
-
-    def send(self, t: float, n_bytes: int, cb_arrive) -> None:
-        start = max(t, self.busy)
-        end = start + self.cost.tx_s(n_bytes)
-        self.busy = end
-        self.sched.at(end + self.cost.propagation_s + self.cost.rx_s,
-                      cb_arrive)
-
-
-class _Slots:
-    """Bounded resident-state pool with hand-off priority.
-
-    Hand-offs may take every slot; fresh admissions keep ``headroom`` free
-    for them (the engine's refill headroom)."""
-
-    __slots__ = ("free", "headroom", "handoffs", "admits", "max_wait")
-
-    def __init__(self, capacity: int, headroom: int):
-        self.free = capacity
-        self.headroom = min(headroom, capacity - 1)
-        self.handoffs: deque = deque()
-        self.admits: deque = deque()
-        self.max_wait = 0
-
-    def admit(self, t: float, cb) -> None:
-        self.admits.append(cb)
-        self._pump(t)
-
-    def arrive(self, t: float, cb) -> None:
-        self.handoffs.append(cb)
-        self._pump(t)
-
-    def release(self, t: float) -> None:
-        self.free += 1
-        self._pump(t)
-
-    def _pump(self, t: float) -> None:
-        self.max_wait = max(self.max_wait,
-                            len(self.handoffs) + len(self.admits))
-        while True:
-            if self.handoffs and self.free > 0:
-                self.free -= 1
-                self.handoffs.popleft()(t)
-            elif self.admits and self.free > self.headroom:
-                self.free -= 1
-                self.admits.popleft()(t)
-            else:
-                return
-
-
-class _Server:
-    __slots__ = ("ssd", "cpu", "nic", "slots")
-
-    def __init__(self, sched: _Sched, cost: CostModel, params: "SimParams"):
-        self.ssd = _Channels(sched, cost.ssd_channels, cost.read_service_s)
-        self.cpu = _Threads(sched, cost.threads_per_server)
-        self.nic = _Nic(sched, cost)
-        cap = params.slots_per_server or cost.server_slots
-        self.slots = _Slots(cap, params.admit_headroom)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +60,40 @@ class SimParams:
     #                                      (closed-form latency doesn't)
     result_bytes: int = 512
     record_events: bool = False
+    # --- scenario stages (all default OFF => PR 2-identical pipeline) ------
+    cache_sectors: int = 0               # per-server LRU capacity (sectors)
+    warm_cache: bool = False             # pre-touch every trace's sectors
+    replicas: int = 1                    # partition -> `replicas` servers
+    placement: Placement | None = None   # explicit map (overrides replicas)
+    read_mult: tuple[float, ...] | None = None     # per-server straggler
+    compute_mult: tuple[float, ...] | None = None  # multipliers
+
+    def server_config(self, sid: int) -> ServerConfig:
+        return ServerConfig(
+            read_mult=(self.read_mult[sid] if self.read_mult else 1.0),
+            compute_mult=(self.compute_mult[sid]
+                          if self.compute_mult else 1.0),
+            cache_sectors=self.cache_sectors,
+        )
+
+    def check_multipliers(self, n_servers: int) -> None:
+        for name, mult in (("read_mult", self.read_mult),
+                           ("compute_mult", self.compute_mult)):
+            if mult is not None and len(mult) != n_servers:
+                raise ValueError(
+                    f"{name} has {len(mult)} entries for {n_servers} "
+                    f"servers — need one multiplier per server")
+
+    def resolve_placement(self, n_parts: int, n_servers: int) -> Placement:
+        if self.placement is not None:
+            if self.placement.n_parts < n_parts:
+                raise ValueError(
+                    f"placement covers {self.placement.n_parts} partitions, "
+                    f"traces reference {n_parts}")
+            return self.placement
+        if self.replicas > 1:
+            return Placement.ring(n_parts, n_servers, self.replicas)
+        return Placement.identity(n_parts)
 
 
 @dataclasses.dataclass
@@ -251,10 +134,46 @@ class SimResult:
     def throughput_qps(self) -> float:
         return self.completed / max(self.makespan_s, 1e-12)
 
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.diag.get("cache_hit_rate", 0.0)
+
+    def backlog_at(self, times_s) -> np.ndarray:
+        """In-flight query count at each time: #arrived − #completed."""
+        times_s = np.asarray(times_s, float)
+        done = self.arrive_s + np.where(np.isnan(self.latencies_s),
+                                        np.inf, self.latencies_s)
+        arr = np.sort(self.arrive_s)
+        fin = np.sort(done)
+        return (np.searchsorted(arr, times_s, side="right")
+                - np.searchsorted(fin, times_s, side="right"))
+
 
 # ---------------------------------------------------------------------------
 # the simulation
 # ---------------------------------------------------------------------------
+
+
+def _max_part(traces) -> int:
+    m = 0
+    for t in traces:
+        segs = t.segments if isinstance(t, BatonTrace) else t.branches
+        for s in segs:
+            m = max(m, s.part)
+    return m + 1
+
+
+def _segment_keys(tr, seg_index: int, seg: Segment):
+    """Deterministic sector-key stream of one segment.
+
+    ``seg.sectors`` is the segment's distinct-sector footprint (measured by
+    the engine); keys are stable across replays of the same trace, so a
+    warm cache / repeated workload genuinely re-hits the same sectors, and
+    a fresh trace touches fresh ones (cold cache == no cache, tested).
+    Reads beyond the distinct footprint wrap onto it (intra-segment reuse).
+    """
+    n = max(seg.sectors, 1) if seg.reads else 0
+    return [(tr.qid, seg_index, j % n) for j in range(seg.reads)]
 
 
 def simulate(traces, n_servers: int, workload: Workload,
@@ -263,9 +182,25 @@ def simulate(traces, n_servers: int, workload: Workload,
     modeled cluster; every enqueued query runs to completion (the event loop
     drains)."""
     params = params or SimParams()
+    params.check_multipliers(n_servers)
     cost = params.cost
-    sched = _Sched()
-    servers = [_Server(sched, cost, params) for _ in range(n_servers)]
+    sched = Sched()
+    use_cache = params.cache_sectors > 0
+    servers = [
+        ServerStack(sched, cost, sid, params.server_config(sid),
+                    params.slots_per_server or cost.server_slots,
+                    params.admit_headroom)
+        for sid in range(n_servers)
+    ]
+    placement = params.resolve_placement(_max_part(traces), n_servers)
+    if params.warm_cache and params.cache_sectors > 0:
+        for tr in traces:
+            segs = (tr.segments if isinstance(tr, BatonTrace)
+                    else tr.branches)
+            for si, seg in enumerate(segs):
+                keys = _segment_keys(tr, si, seg)
+                for sid in placement.replicas[seg.part]:
+                    servers[sid].cache.warm(keys)
     n = workload.n
     lat = np.full(n, np.nan)
     arrive = np.asarray(workload.times_s, float)
@@ -276,53 +211,64 @@ def simulate(traces, n_servers: int, workload: Workload,
         if events is not None:
             events.append((t, kind, aid, srv))
 
-    def hop_plan(seg: Segment):
-        """Split a segment into per-hop (reads, cpu_seconds) phases.
+    def pick(part: int) -> int:
+        return placement.select(part, lambda s: servers[s].load())
+
+    def hop_plan(tr, seg_index: int, seg: Segment):
+        """Split a segment into per-hop (sector reads, cpu_seconds) phases.
 
         Per-segment counters are exact; reads/comparisons spread evenly
         across the segment's hops (each hop issues <= W reads by
-        construction).  LUT builds charge the first hop."""
+        construction).  LUT builds charge the first hop.  The read entry is
+        the hop's sector-key batch when a cache tier is configured, else a
+        bare count (``ServerStack.read`` takes either; no key tuples are
+        materialized on the cache-less path)."""
+        keys = _segment_keys(tr, seg_index, seg) if use_cache else None
         h = seg.hops
         if h == 0:
             cpu = cost.compute_s(seg.dist_comps, seg.lut_builds)
-            return [(seg.reads, cpu)] if (seg.reads or cpu > 0) else []
+            rd = keys if use_cache else seg.reads
+            return [(rd, cpu)] if (seg.reads or cpu > 0) else []
         rb, rx = divmod(seg.reads, h)
         db, dx = divmod(seg.dist_comps, h)
-        return [
-            (rb + (1 if i < rx else 0),
-             cost.compute_s(db + (1 if i < dx else 0),
-                            seg.lut_builds if i == 0 else 0))
-            for i in range(h)
-        ]
+        plan = []
+        at = 0
+        for i in range(h):
+            nr = rb + (1 if i < rx else 0)
+            plan.append((
+                keys[at:at + nr] if use_cache else nr,
+                cost.compute_s(db + (1 if i < dx else 0),
+                               seg.lut_builds if i == 0 else 0),
+            ))
+            at += nr
+        return plan
 
-    def finish(aid, t0, t, last_part, home):
+    def finish(aid, t0, t, last_srv, home_srv):
         def complete(tc):
             nonlocal completed
             lat[aid] = tc - t0
             completed += 1
-            log(tc, "complete", aid, home)
+            log(tc, "complete", aid, home_srv)
 
-        if params.charge_result_return and last_part != home:
-            servers[last_part].nic.send(t, params.result_bytes, complete)
+        if params.charge_result_return and last_srv != home_srv:
+            servers[last_srv].send(t, params.result_bytes, complete)
         else:
             complete(t)
 
-    def run_segment(sv: _Server, seg: Segment, t: float, on_done) -> None:
-        plan = hop_plan(seg)
+    def run_segment(sv: ServerStack, tr, seg_index: int, seg: Segment,
+                    t: float, on_done) -> None:
+        plan = hop_plan(tr, seg_index, seg)
 
         def do_hop(hi, t):
             if hi >= len(plan):
                 on_done(t)
                 return
-            nr, cpu_s = plan[hi]
+            keys, cpu_s = plan[hi]
 
             def after_io(t2):
-                sv.cpu.acquire(t2, cpu_s, lambda t3: do_hop(hi + 1, t3))
+                sv.compute(t2, cpu_s, lambda t3: do_hop(hi + 1, t3))
 
-            if nr > 0:
-                sv.ssd.acquire(t, nr, after_io)
-            else:
-                after_io(t)
+            sv.read(t, keys, after_io)
 
         do_hop(0, t)
 
@@ -330,44 +276,57 @@ def simulate(traces, n_servers: int, workload: Workload,
     def launch_baton(aid: int, tr: BatonTrace, t0: float) -> None:
         segs = tr.segments
 
-        def seg_cb(si):
+        def seg_cb(si, sid, home_srv):
+            sv = servers[sid]
+
             def with_slot(t):
                 seg = segs[si]
-                sv = servers[seg.part]
-                log(t, "seg_start", aid, seg.part)
+                log(t, "seg_start", aid, sid)
 
                 def done(t):
                     sv.slots.release(t)
                     if si + 1 < len(segs):
-                        log(t, "handoff", aid, seg.part)
-                        sv.nic.send(
-                            t, tr.envelope_bytes,
-                            lambda ta: servers[segs[si + 1].part].slots.arrive(
-                                ta, seg_cb(si + 1)
-                            ),
-                        )
+                        log(t, "handoff", aid, sid)
+                        nxt = pick(segs[si + 1].part)
+
+                        def arrive_next(ta):
+                            servers[nxt].slots.request(
+                                ta, "handoff", seg_cb(si + 1, nxt, home_srv))
+
+                        if nxt == sid and segs[si + 1].part != seg.part:
+                            # replica co-location: the next (different)
+                            # partition's chosen copy lives on this very
+                            # server — no wire hop.  Same-partition
+                            # consecutive segments, by contrast, are
+                            # trace_cap-folded revisits through *other*
+                            # servers: their envelope transfer is real and
+                            # stays charged (zero-load parity under folding)
+                            arrive_next(t)
+                        else:
+                            sv.send(t, tr.envelope_bytes, arrive_next)
                     else:
                         # hand-offs folded into the last trace segment
                         # (trace_cap overflow) still cost envelope
                         # transfers — charge them before completing
                         def drain(t, left=tr.folded_handoffs):
                             if left > 0:
-                                sv.nic.send(
+                                sv.send(
                                     t, tr.envelope_bytes,
                                     lambda ta: drain(ta, left - 1),
                                 )
                             else:
-                                finish(aid, t0, t, seg.part, tr.home)
+                                finish(aid, t0, t, sid, home_srv)
 
                         drain(t)
 
-                run_segment(sv, seg, t, done)
+                run_segment(sv, tr, si, seg, t, done)
 
             return with_slot
 
         def arrive0(t):
-            log(t, "arrive", aid, tr.home)
-            servers[tr.home].slots.admit(t, seg_cb(0))
+            sid = pick(segs[0].part)
+            log(t, "arrive", aid, sid)
+            servers[sid].slots.request(t, "admit", seg_cb(0, sid, sid))
 
         sched.at(t0, arrive0)
 
@@ -375,46 +334,54 @@ def simulate(traces, n_servers: int, workload: Workload,
     def launch_sg(aid: int, tr: ScatterGatherTrace, t0: float) -> None:
         remaining = len(tr.branches)
 
-        def branch_done(t):  # result available at the home server at t
+        def branch_done(t, home_srv):  # result available at home at t
             nonlocal remaining
             remaining -= 1
             if remaining == 0:
-                servers[tr.home].slots.release(t)
-                finish(aid, t0, t, tr.home, tr.home)
+                servers[home_srv].slots.release(t)
+                finish(aid, t0, t, home_srv, home_srv)
 
-        def run_branch(seg: Segment, t_start: float, remote: bool):
-            sv = servers[seg.part]
+        def run_branch(bi: int, seg: Segment, sid: int, t_start: float,
+                       remote: bool, home_srv: int):
+            sv = servers[sid]
 
             def with_slot(t):
                 def done(t):
                     if remote:
                         sv.slots.release(t)
-                        sv.nic.send(t, tr.reply_bytes, branch_done)
+                        sv.send(t, tr.reply_bytes,
+                                lambda ta: branch_done(ta, home_srv))
                     else:
-                        branch_done(t)  # home slot released at gather
+                        branch_done(t, home_srv)  # home slot held to gather
 
-                run_segment(sv, seg, t, done)
+                run_segment(sv, tr, bi, seg, t, done)
 
             if remote:
-                sv.slots.arrive(t_start, with_slot)
+                sv.slots.request(t_start, "handoff", with_slot)
             else:
                 with_slot(t_start)
 
-        def admitted(t):
-            log(t, "seg_start", aid, tr.home)
-            home_nic = servers[tr.home].nic
-            for seg in tr.branches:
-                if seg.part == tr.home:
-                    run_branch(seg, t, remote=False)
-                else:
-                    home_nic.send(
-                        t, tr.scatter_bytes,
-                        lambda ta, seg=seg: run_branch(seg, ta, remote=True),
-                    )
+        def admitted(home_srv):
+            def go(t):
+                log(t, "seg_start", aid, home_srv)
+                home = servers[home_srv]
+                for bi, seg in enumerate(tr.branches):
+                    sid = pick(seg.part)
+                    if sid == home_srv:
+                        run_branch(bi, seg, sid, t, False, home_srv)
+                    else:
+                        home.send(
+                            t, tr.scatter_bytes,
+                            lambda ta, bi=bi, seg=seg, sid=sid: run_branch(
+                                bi, seg, sid, ta, True, home_srv),
+                        )
+
+            return go
 
         def arrive0(t):
-            log(t, "arrive", aid, tr.home)
-            servers[tr.home].slots.admit(t, admitted)
+            home_srv = pick(tr.home)
+            log(t, "arrive", aid, home_srv)
+            servers[home_srv].slots.request(t, "admit", admitted(home_srv))
 
         sched.at(t0, arrive0)
 
@@ -433,8 +400,15 @@ def simulate(traces, n_servers: int, workload: Workload,
     diag = {
         "max_ssd_queue": max(s.ssd.max_q for s in servers),
         "max_cpu_queue": max(s.cpu.max_q for s in servers),
-        "max_slot_wait": max(s.slots.max_wait for s in servers),
+        "max_slot_wait": max(s.slots.max_q for s in servers),
+        "stages": {s.sid: s.stats() for s in servers},
     }
+    if params.cache_sectors > 0:
+        lookups = sum(s.cache.lookups for s in servers)
+        hits = sum(s.cache.hits for s in servers)
+        diag["cache_lookups"] = lookups
+        diag["cache_hits"] = hits
+        diag["cache_hit_rate"] = hits / lookups if lookups else 0.0
     return SimResult(
         latencies_s=lat, arrive_s=arrive,
         trace_idx=np.asarray(workload.trace_idx),
@@ -458,32 +432,54 @@ def capacity_qps(traces, n_servers: int,
 
     Expected seconds of each resource consumed per arrival (traces uniform),
     per server; the binding resource on the busiest server caps the rate.
-    Queueing (atomic read batches, slot waits) keeps the *achievable* rate
-    below this — use :func:`find_saturation_qps` for the operational knee.
+    Replicated partitions spread their demand evenly over the replica set;
+    straggler multipliers scale the per-server service times.  The cache
+    tier is deliberately ignored (it only *reduces* disk demand), so with a
+    cache this is a lower bound on true capacity — ``find_saturation_qps``
+    expands its bracket upward to compensate.  Queueing (atomic read
+    batches, slot waits) keeps the *achievable* rate below the true
+    capacity — use :func:`find_saturation_qps` for the operational knee.
     """
     params = params or SimParams()
+    params.check_multipliers(n_servers)
     cost = params.cost
+    placement = params.resolve_placement(_max_part(traces), n_servers)
+    rmult = [params.server_config(s).read_mult for s in range(n_servers)]
+    cmult = [params.server_config(s).compute_mult for s in range(n_servers)]
     disk = np.zeros(n_servers)
     cpu = np.zeros(n_servers)
     nic = np.zeros(n_servers)
+
+    def charge(seg):
+        srvs = placement.replicas[seg.part]
+        share = 1.0 / len(srvs)
+        for sid in srvs:
+            disk[sid] += share * seg.reads * rmult[sid] / cost.ssd_iops
+            cpu[sid] += (share * cmult[sid]
+                         * cost.compute_s(seg.dist_comps, seg.lut_builds)
+                         / cost.threads_per_server)
+        return srvs, share
+
     for t in traces:
         if isinstance(t, BatonTrace):
             for i, s in enumerate(t.segments):
-                disk[s.part] += s.reads / cost.ssd_iops
-                cpu[s.part] += (cost.compute_s(s.dist_comps, s.lut_builds)
-                                / cost.threads_per_server)
+                srvs, share = charge(s)
                 if i + 1 < len(t.segments):
-                    nic[s.part] += cost.tx_s(t.envelope_bytes)
-            nic[t.segments[-1].part] += (t.folded_handoffs
-                                         * cost.tx_s(t.envelope_bytes))
+                    for sid in srvs:
+                        nic[sid] += share * cost.tx_s(t.envelope_bytes)
+            for sid in placement.replicas[t.segments[-1].part]:
+                nic[sid] += (t.folded_handoffs * cost.tx_s(t.envelope_bytes)
+                             / len(placement.replicas[t.segments[-1].part]))
         else:
+            home_srvs = placement.replicas[t.home]
             for s in t.branches:
-                disk[s.part] += s.reads / cost.ssd_iops
-                cpu[s.part] += (cost.compute_s(s.dist_comps, s.lut_builds)
-                                / cost.threads_per_server)
+                srvs, share = charge(s)
                 if s.part != t.home:
-                    nic[s.part] += cost.tx_s(t.reply_bytes)
-                    nic[t.home] += cost.tx_s(t.scatter_bytes)
+                    for sid in srvs:
+                        nic[sid] += share * cost.tx_s(t.reply_bytes)
+                    for sid in home_srvs:
+                        nic[sid] += (cost.tx_s(t.scatter_bytes)
+                                     / len(home_srvs))
     demand = max(np.max(disk), np.max(cpu), np.max(nic)) / len(traces)
     return 1.0 / max(demand, 1e-12)
 
@@ -500,14 +496,46 @@ def zero_load_result(traces, n_servers: int,
     return simulate(traces, n_servers, wl, params)
 
 
+def backlog_growing(res: SimResult, slack: float = 0.05,
+                    grid: int = 16) -> bool:
+    """Backlog-growth saturation criterion: is the queue depth trending up
+    over the horizon?
+
+    Fits a least-squares slope to the in-flight count sampled on a uniform
+    grid over the arrival span; the system is saturated when the backlog
+    grows faster than ``slack`` × the offered rate (i.e. >5% of arrivals
+    never drain).  Unlike the latency-threshold criterion this does not
+    reference the zero-load mean, so the detected knee is independent of
+    the horizon length (a longer horizon just averages the same slope).
+    """
+    t0, t1 = float(res.arrive_s[0]), float(res.arrive_s[-1])
+    if t1 <= t0:
+        return False
+    ts = np.linspace(t0, t1, grid)
+    depth = res.backlog_at(ts).astype(float)
+    slope = np.polyfit(ts - t0, depth, 1)[0]        # queries / second
+    return slope > slack * res.rate_qps
+
+
 def find_saturation_qps(
     traces, n_servers: int, params: "SimParams | None" = None,
     n_arrivals: int = 800, seed: int = 0, latency_factor: float = 10.0,
-    iters: int = 9,
+    iters: int = 9, criterion: str = "latency",
 ) -> float:
     """Saturation send rate via rate sweep (bisection): the highest open-loop
-    Poisson rate whose mean simulated latency stays below ``latency_factor``×
-    the zero-load mean.  Deterministic given the seed."""
+    Poisson rate the cluster sustains.  Deterministic given the seed.
+
+    ``criterion`` picks the sustainability test:
+
+    * ``"latency"`` — mean simulated latency <= ``latency_factor`` × the
+      zero-load mean (the PR 2 knee definition);
+    * ``"backlog"`` — the queue-depth trend over the horizon stays flat
+      (:func:`backlog_growing`), decoupling the knee from horizon length;
+    * ``"both"`` — sustainable only if both hold.
+    """
+    if criterion not in ("latency", "backlog", "both"):
+        raise ValueError(
+            f"criterion must be latency|backlog|both: {criterion}")
     base = zero_load_result(traces, n_servers, params).mean_s
     cap = capacity_qps(traces, n_servers, params)
     lo, hi = 0.02 * cap, cap
@@ -516,7 +544,11 @@ def find_saturation_qps(
         wl = make_workload(len(traces), rate, n_arrivals, "poisson",
                            seed=seed)
         r = simulate(traces, n_servers, wl, params)
-        return r.mean_s <= latency_factor * base
+        lat_ok = r.mean_s <= latency_factor * base
+        if criterion == "latency":
+            return lat_ok
+        bk_ok = not backlog_growing(r)
+        return bk_ok if criterion == "backlog" else (lat_ok and bk_ok)
 
     # validate the bracket: `cap` averages demand over servers, so heavily
     # imbalanced traces (e.g. one hot home) can make even `lo` unsustainable
@@ -526,6 +558,14 @@ def find_saturation_qps(
             break
         hi = lo
         lo *= 0.25
+    # ... and upward: a cache tier serves reads the analytic bound still
+    # prices as disk I/O, so the true knee can sit *above* `cap`
+    if hi == cap and (params is not None and params.cache_sectors > 0):
+        for _ in range(5):
+            if not sustainable(hi):
+                break
+            lo = hi
+            hi *= 2.0
     for _ in range(iters):
         mid = 0.5 * (lo + hi)
         if sustainable(mid):

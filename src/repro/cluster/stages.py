@@ -1,0 +1,418 @@
+"""Composable per-server service stages — the simulator's resource substrate.
+
+PR 2 wired four resource classes (`_Channels`/`_Threads`/`_Nic`/`_Slots`)
+inline into ``sim._Server``; none of the ROADMAP's follow-on scenarios
+(caching, replication, stragglers, elasticity) could plug in without editing
+the event loop.  This module turns the per-server pipeline into a *stack* of
+stages behind one small protocol:
+
+* every stage has ``request(t, job, cb)`` — enqueue ``job`` at time ``t`` and
+  call ``cb(t_done)`` when service completes — plus uniform ``stats()``
+  (jobs served, busy seconds, max queue depth), so new resource types slot
+  in without touching the replay loop;
+* :class:`ServerStack` composes the stages of one server — memory-hierarchy
+  cache tier → SSD channels → CPU workers → NIC link → resident-state slots
+  — under a per-server :class:`ServerConfig` (straggler service-time
+  multipliers, cache capacity);
+* :class:`Placement` maps partitions to *sets* of servers (replication) with
+  deterministic least-loaded selection at slot-acquire time.
+
+Everything is deterministic: ties in replica selection break by position in
+the replica tuple, the scheduler orders simultaneous events FIFO by
+insertion, and the LRU cache is a plain ordered dict.  With the default
+config (no cache, identity placement, unit multipliers) the stack is
+event-for-event identical to the PR 2 pipeline — tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import OrderedDict, deque
+
+from repro.io_sim.disk import CostModel
+
+
+class Sched:
+    """Event heap keyed (time, seq): FIFO among simultaneous events."""
+
+    __slots__ = ("heap", "seq", "now")
+
+    def __init__(self):
+        self.heap: list = []
+        self.seq = 0
+        self.now = 0.0
+
+    def at(self, t: float, fn) -> None:
+        heapq.heappush(self.heap, (t, self.seq, fn))
+        self.seq += 1
+
+    def run(self) -> None:
+        heap = self.heap
+        while heap:
+            t, _, fn = heapq.heappop(heap)
+            self.now = t
+            fn(t)
+
+
+# ---------------------------------------------------------------------------
+# the stage protocol
+# ---------------------------------------------------------------------------
+
+
+class Stage:
+    """One queueing resource.  ``request(t, job, cb)`` -> ``cb(t_done)``.
+
+    ``job`` is stage-specific (units for channels, seconds for workers,
+    bytes for links, an admission class for slots); ``stats()`` is uniform.
+    """
+
+    name = "stage"
+
+    def __init__(self):
+        self.served = 0
+        self.busy_s = 0.0
+        self.max_q = 0
+
+    def request(self, t: float, job, cb) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {"served": self.served, "busy_s": self.busy_s,
+                "max_q": self.max_q}
+
+
+class ChannelStage(Stage):
+    """``capacity`` identical service channels with an atomic-batch FIFO.
+
+    A batch of n units starts only when n channels are free (the W reads of
+    one hop proceed in parallel) and completes after one service time."""
+
+    name = "ssd"
+
+    def __init__(self, sched: Sched, capacity: int, service_s: float):
+        super().__init__()
+        self.sched = sched
+        self.capacity = capacity
+        self.service_s = service_s
+        self.free = capacity
+        self.q: deque = deque()
+
+    def request(self, t: float, job: int, cb) -> None:
+        self.q.append((min(job, self.capacity), cb))
+        self.max_q = max(self.max_q, len(self.q))
+        self._pump(t)
+
+    def _pump(self, t: float) -> None:
+        while self.q and self.q[0][0] <= self.free:
+            n, cb = self.q.popleft()
+            self.free -= n
+            self.served += 1
+            self.busy_s += n * self.service_s
+
+            def done(td, n=n, cb=cb):
+                self.free += n
+                cb(td)
+                self._pump(td)
+
+            self.sched.at(t + self.service_s, done)
+
+
+class WorkerStage(Stage):
+    """``capacity`` workers serving variable-duration FIFO jobs."""
+
+    name = "cpu"
+
+    def __init__(self, sched: Sched, capacity: int):
+        super().__init__()
+        self.sched = sched
+        self.free = capacity
+        self.q: deque = deque()
+
+    def request(self, t: float, job: float, cb) -> None:
+        self.q.append((job, cb))
+        self.max_q = max(self.max_q, len(self.q))
+        self._pump(t)
+
+    def _pump(self, t: float) -> None:
+        while self.q and self.free > 0:
+            dur, cb = self.q.popleft()
+            self.free -= 1
+            self.served += 1
+            self.busy_s += dur
+
+            def done(td, cb=cb):
+                self.free += 1
+                cb(td)
+                self._pump(td)
+
+            self.sched.at(t + dur, done)
+
+
+class LinkStage(Stage):
+    """Serializing egress link; delivery = tx occupancy + propagation + rx."""
+
+    name = "nic"
+
+    def __init__(self, sched: Sched, cost: CostModel):
+        super().__init__()
+        self.sched = sched
+        self.cost = cost
+        self.busy = 0.0
+        self.ends: deque = deque()   # tx-finish times of unfinished sends
+
+    def request(self, t: float, job: int, cb) -> None:
+        ends = self.ends
+        while ends and ends[0] <= t:
+            ends.popleft()
+        start = max(t, self.busy)
+        tx = self.cost.tx_s(job)
+        end = start + tx
+        self.busy = end
+        self.served += 1
+        self.busy_s += tx
+        ends.append(end)
+        self.max_q = max(self.max_q, len(ends))
+        self.sched.at(end + self.cost.propagation_s + self.cost.rx_s, cb)
+
+
+class SlotStage(Stage):
+    """Bounded resident-state pool with hand-off priority.
+
+    Hand-offs may take every slot; fresh admissions keep ``headroom`` free
+    for them (the engine's refill headroom).  ``job`` is the admission
+    class: ``"handoff"`` (strict priority) or ``"admit"``."""
+
+    name = "slots"
+
+    def __init__(self, capacity: int, headroom: int):
+        super().__init__()
+        self.capacity = capacity
+        self.free = capacity
+        self.headroom = min(headroom, capacity - 1)
+        self.handoffs: deque = deque()
+        self.admits: deque = deque()
+
+    def request(self, t: float, job: str, cb) -> None:
+        (self.handoffs if job == "handoff" else self.admits).append(cb)
+        self._pump(t)
+
+    def release(self, t: float) -> None:
+        self.free += 1
+        self._pump(t)
+
+    def in_use(self) -> int:
+        return self.capacity - self.free
+
+    def waiting(self) -> int:
+        return len(self.handoffs) + len(self.admits)
+
+    def _pump(self, t: float) -> None:
+        self.max_q = max(self.max_q, self.waiting())
+        while True:
+            if self.handoffs and self.free > 0:
+                self.free -= 1
+                self.served += 1
+                self.handoffs.popleft()(t)
+            elif self.admits and self.free > self.headroom:
+                self.free -= 1
+                self.served += 1
+                self.admits.popleft()(t)
+            else:
+                return
+
+
+class CacheTier(Stage):
+    """LRU memory-hierarchy tier over sector keys — intercepts reads before
+    the SSD channel queue (SPANN keeps its centroid tier fully in memory for
+    exactly this reason; CaGR-RAG schedules around cache reuse).
+
+    DRAM has no meaningful queue at these rates, so the tier is a zero-queue
+    stage: ``request`` resolves a batch of keys into (hits, misses)
+    *synchronously* and the ServerStack charges ``cache_hit_service_s`` for
+    the hit portion while only the misses enter the SSD queue.  Misses are
+    admitted at lookup time (deterministic, no completion race)."""
+
+    name = "cache"
+
+    def __init__(self, capacity: int):
+        super().__init__()
+        self.capacity = capacity
+        self.lru: OrderedDict = OrderedDict()
+        self.lookups = 0
+        self.hits = 0
+
+    def _touch(self, k) -> bool:
+        """The admission/eviction policy (one method, so a learned-cache
+        subclass overrides exactly this): LRU promote on hit, insert +
+        evict-oldest on miss.  Returns whether ``k`` was resident."""
+        lru = self.lru
+        if k in lru:
+            lru.move_to_end(k)
+            return True
+        lru[k] = True
+        if len(lru) > self.capacity:
+            lru.popitem(last=False)
+        return False
+
+    def access(self, keys) -> tuple[int, int]:
+        """Touch ``keys``; returns (hits, misses) and updates the LRU."""
+        h = sum(map(self._touch, keys))
+        self.lookups += len(keys)
+        self.served += 1
+        self.hits += h
+        return h, len(keys) - h
+
+    def warm(self, keys) -> None:
+        """Pre-populate (no hit accounting) — the warm-cache scenario."""
+        for k in keys:
+            self._touch(k)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> dict:
+        d = super().stats()
+        d.update(lookups=self.lookups, hits=self.hits,
+                 hit_rate=self.hit_rate)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# per-server composition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Per-server resource knobs (the straggler/caching scenario surface)."""
+
+    read_mult: float = 1.0      # SSD service-time multiplier (straggler)
+    compute_mult: float = 1.0   # CPU service-time multiplier (straggler)
+    cache_sectors: int = 0      # LRU cache capacity in sectors (0 = no tier)
+
+
+class ServerStack:
+    """One server's composed stage stack: cache → SSD → CPU → NIC → slots."""
+
+    __slots__ = ("sched", "cost", "sid", "config", "cache", "ssd", "cpu",
+                 "nic", "slots")
+
+    def __init__(self, sched: Sched, cost: CostModel, sid: int,
+                 config: ServerConfig, slot_capacity: int,
+                 admit_headroom: int):
+        self.sched = sched
+        self.cost = cost
+        self.sid = sid
+        self.config = config
+        self.cache = (CacheTier(config.cache_sectors)
+                      if config.cache_sectors > 0 else None)
+        self.ssd = ChannelStage(sched, cost.ssd_channels,
+                                cost.read_service_s * config.read_mult)
+        self.cpu = WorkerStage(sched, cost.threads_per_server)
+        self.nic = LinkStage(sched, cost)
+        self.slots = SlotStage(slot_capacity, admit_headroom)
+
+    # --- memory hierarchy: cache tier in front of the SSD channel queue ----
+    def read(self, t: float, keys, cb) -> None:
+        """Serve one hop's pipelined batch of sector reads.
+
+        ``keys`` is the hop's sector-key batch — or a bare int count on the
+        cache-less fast path (no point materializing per-read keys nobody
+        will look up).  Keys found in the cache tier cost one
+        ``cache_hit_service_s`` (DRAM, no queue); only the misses enter the
+        SSD channel queue, as a smaller atomic batch.  Completion is the
+        join of both paths."""
+        n = keys if isinstance(keys, int) else len(keys)
+        if n == 0:
+            cb(t)
+            return
+        if self.cache is None:
+            self.ssd.request(t, n, cb)
+            return
+        hits, misses = self.cache.access(keys)
+        if misses == 0:
+            self.sched.at(t + self.cost.cache_hit_service_s, cb)
+            return
+        if hits == 0:
+            self.ssd.request(t, misses, cb)
+            return
+        t_hit = t + self.cost.cache_hit_service_s
+
+        def join(td):
+            if td >= t_hit:
+                cb(td)
+            else:
+                self.sched.at(t_hit, cb)
+
+        self.ssd.request(t, misses, join)
+
+    def compute(self, t: float, base_s: float, cb) -> None:
+        self.cpu.request(t, base_s * self.config.compute_mult, cb)
+
+    def send(self, t: float, n_bytes: int, cb) -> None:
+        self.nic.request(t, n_bytes, cb)
+
+    def load(self) -> int:
+        """Instantaneous occupancy signal for least-loaded replica routing:
+        resident states plus states waiting for a slot."""
+        return self.slots.in_use() + self.slots.waiting()
+
+    def stats(self) -> dict:
+        out = {s.name: s.stats()
+               for s in (self.ssd, self.cpu, self.nic, self.slots)}
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# placement: partition -> replica server set
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Partition → candidate server tuple, least-loaded pick at acquire time.
+
+    ``replicas[p]`` lists the servers holding a copy of partition ``p``; the
+    first entry is the primary (ties in load break toward it, keeping the
+    no-replication case bit-identical to direct indexing)."""
+
+    replicas: tuple[tuple[int, ...], ...]
+
+    def __post_init__(self):
+        for p, srvs in enumerate(self.replicas):
+            if len(srvs) == 0:
+                raise ValueError(f"partition {p} has no replica servers")
+
+    @staticmethod
+    def identity(n_parts: int) -> "Placement":
+        return Placement(tuple((p,) for p in range(n_parts)))
+
+    @staticmethod
+    def ring(n_parts: int, n_servers: int, copies: int) -> "Placement":
+        """Partition p on servers p, p+1, … (mod n_servers) — `copies` deep."""
+        copies = max(1, min(copies, n_servers))
+        return Placement(tuple(
+            tuple((p + i) % n_servers for i in range(copies))
+            for p in range(n_parts)
+        ))
+
+    @property
+    def n_parts(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def copies_per_partition(self) -> float:
+        """Mean replica count — the DRAM/SSD footprint multiplier priced by
+        ``CostModel.replica_memory_bytes``."""
+        return sum(len(r) for r in self.replicas) / max(len(self.replicas), 1)
+
+    def select(self, part: int, load_fn) -> int:
+        """Least-loaded replica of ``part``; ties break by tuple position."""
+        srvs = self.replicas[part]
+        if len(srvs) == 1:
+            return srvs[0]
+        return min(srvs, key=load_fn)  # min is stable: ties -> first listed

@@ -22,13 +22,28 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    """One contiguous residency of a query on a server."""
+    """One contiguous residency of a query on a partition.
 
-    part: int         # server index
+    ``sectors`` is the segment's *distinct-sector footprint* — how many
+    unique sectors its ``reads`` touched (measured by the engine; the
+    explored-flag invariant makes every read of a query distinct, so today
+    ``sectors == reads``, but the schema keeps them separate for layouts
+    that pack several nodes per sector).  The simulator's cache tier derives
+    its per-segment sector-key stream from this, so cache-hit modeling is
+    trace-driven rather than a global scalar.  Defaults to ``reads`` when
+    omitted (back-compat with 5-column traces).
+    """
+
+    part: int         # partition index (Placement maps it to server(s))
     hops: int         # beam-search steps (each = one pipelined read round)
     reads: int        # sector reads issued during the segment
     dist_comps: int   # PQ + full-precision comparisons
     lut_builds: int   # LUT (re)builds charged to this segment
+    sectors: int = -1  # distinct sectors touched (-1 => same as reads)
+
+    def __post_init__(self):
+        if self.sectors < 0:
+            object.__setattr__(self, "sectors", self.reads)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +92,7 @@ class ScatterGatherTrace:
 
 
 # trace-column order must match state.TRACE_FIELDS
-_PART, _HOPS, _READS, _DCS, _LUTS = range(5)
+_PART, _HOPS, _READS, _DCS, _LUTS, _SECT = range(6)
 
 
 def from_baton_stats(stats: dict, envelope_bytes: int) -> list[BatonTrace]:
@@ -93,7 +108,8 @@ def from_baton_stats(stats: dict, envelope_bytes: int) -> list[BatonTrace]:
         segs = tuple(
             Segment(part=int(r[_PART]), hops=int(r[_HOPS]),
                     reads=int(r[_READS]), dist_comps=int(r[_DCS]),
-                    lut_builds=int(r[_LUTS]))
+                    lut_builds=int(r[_LUTS]),
+                    sectors=int(r[_SECT]) if len(r) > _SECT else -1)
             for r in rows if r[_PART] >= 0
         )
         if not segs:  # undelivered query (should not happen) — skip
@@ -115,18 +131,21 @@ def from_scatter_gather_stats(
 
     Every query fans out to all P partitions; each branch's exact work comes
     from the per-partition counters (``part_hops``/``part_reads``/
-    ``part_dist_comps``).  Homes are assigned round-robin (qid % p), matching
-    the baton driver's query placement.
+    ``part_dist_comps``; ``part_sectors`` — the distinct-sector footprint —
+    when present, else reads).  Homes are assigned round-robin (qid % p),
+    matching the baton driver's query placement.
     """
     ph = np.asarray(stats["part_hops"])        # (B, P)
     pr = np.asarray(stats["part_reads"])
     pd = np.asarray(stats["part_dist_comps"])
+    ps = np.asarray(stats["part_sectors"]) if "part_sectors" in stats else pr
     traces = []
     for qid in range(ph.shape[0]):
         branches = tuple(
             Segment(part=pi, hops=int(ph[qid, pi]), reads=int(pr[qid, pi]),
                     dist_comps=int(pd[qid, pi]),
-                    lut_builds=lut_builds_per_branch)
+                    lut_builds=lut_builds_per_branch,
+                    sectors=int(ps[qid, pi]))
             for pi in range(p)
         )
         traces.append(ScatterGatherTrace(

@@ -94,9 +94,16 @@ class BatonParams:
     ship_lut: bool = False   # §8: ship the LUT in the envelope (True) vs
     #                          rebuild on arrival (False — the paper's
     #                          4-8 KB envelope; +1 lut_build per hand-off)
-    lut_wire_dtype: str = "f32"  # §8 cont.: quantize the *shipped* LUT to
-    #                          "f16" — halves its wire bytes at a bounded
-    #                          distance-error cost (only used with ship_lut)
+    lut_wire_dtype: str = "f32"  # §8 cont.: quantize the *shipped* LUT —
+    #                          "f16" halves its wire bytes, "i8" (int8 codes
+    #                          + per-subspace f32 scales) quarters them, both
+    #                          at a bounded distance-error cost (only used
+    #                          with ship_lut)
+    lazy_queue_lut: bool = False  # build queued queries' LUTs at *refill*
+    #                          (S masked builds per super-step) instead of
+    #                          keeping a (Q, M, K) f32 array resident for the
+    #                          whole run (~24.6 KB/query at M=24, K=256);
+    #                          results and counters are identical
     trace_cap: int = 32      # residency segments recorded per query for the
     #                          cluster simulator (repro.cluster); overflow
     #                          folds into the last segment
@@ -108,9 +115,9 @@ class BatonParams:
             raise ValueError(
                 f"merge_impl must be lexsort|bitonic: {self.merge_impl}"
             )
-        if self.lut_wire_dtype not in ("f32", "f16"):
+        if self.lut_wire_dtype not in ("f32", "f16", "i8"):
             raise ValueError(
-                f"lut_wire_dtype must be f32|f16: {self.lut_wire_dtype}"
+                f"lut_wire_dtype must be f32|f16|i8: {self.lut_wire_dtype}"
             )
         if self.trace_cap < 1:
             raise ValueError(f"trace_cap must be >= 1: {self.trace_cap}")
@@ -249,7 +256,10 @@ class DeviceState(NamedTuple):
     queue_qid: jnp.ndarray     # (Q,)  -1 = padding
     queue_starts: jnp.ndarray  # (Q, n_starts) global entry ids
     queue_start_d: jnp.ndarray  # (Q, n_starts) head-index exact distances
-    queue_lut: jnp.ndarray     # (Q, M, K) per-query PQ LUTs, built once
+    queue_lut: jnp.ndarray     # (Q, M, K) per-query PQ LUTs, built once —
+    #                            or a (1, M, K) placeholder when
+    #                            BatonParams.lazy_queue_lut builds them at
+    #                            refill instead (ROADMAP memory follow-up)
     queue_head: jnp.ndarray    # () — next queue row to start
     out_ids: jnp.ndarray       # (Q, k)
     out_dists: jnp.ndarray     # (Q, k)
@@ -281,26 +291,35 @@ def _empty_results(cfg: BatonParams, shape) -> ResultMsg:
 def _batched_empty_states(
     d: int, cfg: BatonParams, shape, m: int | None = None,
     k_pq: int | None = None, lut_dtype=jnp.float32,
+    with_lut_scale: bool = False,
 ) -> QueryState:
     one = empty_state(d, cfg.L, cfg.pool, m=m, k_pq=k_pq,
-                      lut_dtype=lut_dtype, trace_cap=cfg.trace_cap)
+                      lut_dtype=lut_dtype, trace_cap=cfg.trace_cap,
+                      with_lut_scale=with_lut_scale)
     return jax.tree.map(lambda x: jnp.broadcast_to(x, shape + x.shape), one)
 
 
 def init_device_state(queries, qids, starts, start_d, cfg: BatonParams,
                       codebook) -> DeviceState:
     """Per-device state.  Builds every queued query's PQ LUT here — the one
-    and only ``build_lut`` on the query's lifetime (ship mode)."""
+    and only ``build_lut`` on the query's lifetime (ship mode).  With
+    ``cfg.lazy_queue_lut`` the (Q, M, K) array is replaced by a (1, M, K)
+    placeholder and LUTs are built at refill instead (same math, same
+    counters — the build is just deferred to slot-seed time)."""
     q, d = queries.shape
     codebook = jnp.asarray(codebook)
     m, k_pq = codebook.shape[0], codebook.shape[1]
+    if cfg.lazy_queue_lut:
+        queue_lut = jnp.zeros((1, m, k_pq), jnp.float32)
+    else:
+        queue_lut = pq.build_lut(codebook, jnp.asarray(queries, jnp.float32))
     return DeviceState(
         states=_batched_empty_states(d, cfg, (cfg.slots,), m=m, k_pq=k_pq),
         queue_emb=jnp.asarray(queries, jnp.float32),
         queue_qid=jnp.asarray(qids, jnp.int32),
         queue_starts=jnp.asarray(starts, jnp.int32),
         queue_start_d=jnp.asarray(start_d, jnp.float32),
-        queue_lut=pq.build_lut(codebook, jnp.asarray(queries, jnp.float32)),
+        queue_lut=queue_lut,
         queue_head=jnp.int32(0),
         out_ids=jnp.full((q, cfg.k), NO_ID, jnp.int32),
         out_dists=jnp.full((q, cfg.k), INF, jnp.float32),
@@ -315,12 +334,15 @@ def init_device_state(queries, qids, starts, start_d, cfg: BatonParams,
 # ---------------------------------------------------------------------------
 
 
-def refill(dev: DeviceState, cfg: BatonParams, my_part):
+def refill(dev: DeviceState, cfg: BatonParams, my_part, codebook=None):
     """Start queued queries in free slots (paper §5 fixed-count balancing).
 
     The seeded state adopts the query's precomputed LUT from the queue
-    (``lut_builds`` starts at 1 — the build at enqueue); no shard or
-    codebook access is needed here."""
+    (``lut_builds`` starts at 1 — the build at enqueue).  With
+    ``cfg.lazy_queue_lut`` the LUTs are built *here* instead — S masked
+    builds per super-step against the replicated codebook — trading a small
+    recurring compute cost for not keeping (Q, M, K) floats resident
+    (ROADMAP memory follow-up); the counter still reads 1 build/query."""
     q_total = dev.queue_qid.shape[0]
     free = ~dev.states.active                                   # (S,)
     n_active = jnp.sum(dev.states.active.astype(jnp.int32))
@@ -338,7 +360,11 @@ def refill(dev: DeviceState, cfg: BatonParams, my_part):
     emb = dev.queue_emb[row]                                    # (S, d)
     qid = dev.queue_qid[row]
     starts = dev.queue_starts[row]                              # (S, n_starts)
-    lut = dev.queue_lut[row]                                    # (S, M, K)
+    if cfg.lazy_queue_lut:
+        assert codebook is not None, "lazy_queue_lut needs the codebook"
+        lut = pq.build_lut(jnp.asarray(codebook), emb)          # (S, M, K)
+    else:
+        lut = dev.queue_lut[row]                                # (S, M, K)
     take = take & (qid >= 0)
     # entry-point distances come from the (full-precision, in-memory) head
     # index — no global PQ lookup needed, which keeps the sector-codes mode
@@ -559,6 +585,7 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
     # only shipped copies are active on arrival
     shipped = states._replace(active=states.active & granted)
     lut_dtype = jnp.float32
+    with_scale = False
     if cfg.ship_lut:
         m, k_pq = states.lut.shape[-2], states.lut.shape[-1]
         if cfg.lut_wire_dtype == "f16":
@@ -567,6 +594,14 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
             # back to f32 (bounded quantization error, tested).
             lut_dtype = jnp.float16
             shipped = shipped._replace(lut=shipped.lut.astype(jnp.float16))
+        elif cfg.lut_wire_dtype == "i8":
+            # §8 cont.: int8 LUT with per-subspace scales — the wire tree
+            # carries M·K bytes + M f32 scales (~4× less than f32); the
+            # receiver dequantizes (bounded per-subspace error, tested).
+            lut_dtype = jnp.int8
+            with_scale = True
+            q8, scale = pq.quantize_lut_i8(shipped.lut)
+            shipped = shipped._replace(lut=q8, lut_scale=scale)
     else:
         # §8 "Reducing Message Size": drop the LUT leaf from the send tree
         # entirely, so the all_to_all genuinely moves M·K·4 fewer bytes per
@@ -574,7 +609,8 @@ def pack_sends(dev: DeviceState, dest: jnp.ndarray, grant_row: jnp.ndarray,
         m = k_pq = None
         shipped = shipped._replace(lut=None)
     buf = _batched_empty_states(dev.queue_emb.shape[1], cfg, (n_parts, C),
-                                m=m, k_pq=k_pq, lut_dtype=lut_dtype)
+                                m=m, k_pq=k_pq, lut_dtype=lut_dtype,
+                                with_lut_scale=with_scale)
     buf = jax.tree.map(
         lambda b, leaf: b.at[d_idx, c_idx].set(leaf, mode="drop"), buf, shipped
     )
@@ -621,8 +657,16 @@ def merge_recv(dev: DeviceState, incoming: QueryState, cfg: BatonParams,
             lut=lut, trace=tr,
             counters=incoming.counters._replace(lut_builds=builds),
         )
+    elif incoming.lut.dtype == jnp.int8:
+        # quantized §8 int8 wire LUT: dequantize with the shipped
+        # per-subspace scales, then drop the scale leaf so the landed state
+        # matches the resident tree structure
+        incoming = incoming._replace(
+            lut=pq.dequantize_lut_i8(incoming.lut, incoming.lut_scale),
+            lut_scale=None,
+        )
     elif incoming.lut.dtype != jnp.float32:
-        # quantized §8 wire LUT: widen back to f32 for scoring
+        # quantized §8 f16 wire LUT: widen back to f32 for scoring
         incoming = incoming._replace(lut=incoming.lut.astype(jnp.float32))
     inc_rank = jnp.cumsum(inc_active.astype(jnp.int32)) - 1      # among active
     free = ~dev.states.active                                    # (S,)
@@ -652,16 +696,22 @@ def _trace_accumulate(dev: DeviceState, pre: Counters) -> DeviceState:
         hops=add(tr.hops, c.hops - pre.hops),
         reads=add(tr.reads, c.reads - pre.reads),
         dist_comps=add(tr.dist_comps, c.dist_comps - pre.dist_comps),
+        # distinct-sector footprint: every read of a query touches a fresh
+        # sector (explored-flag invariant), so the segment's footprint is
+        # its read count — recorded separately so sector-packed layouts can
+        # diverge, and so the cluster cache model is trace-driven
+        sectors=add(tr.sectors, c.reads - pre.reads),
     )
     return dev._replace(states=st._replace(trace=tr))
 
 
-def _superstep_local(dev, shard, cfg, my_part, n_parts):
+def _superstep_local(dev, shard, cfg, my_part, n_parts, codebook=None):
     """Phases 1-2 + route planning (everything before communication).
 
     No per-super-step LUT build: every resident state carries its own LUT
-    (seeded at refill from the once-per-query queue build)."""
-    dev = refill(dev, cfg, my_part)
+    (seeded at refill from the once-per-query queue build, or built at
+    refill under ``cfg.lazy_queue_lut``)."""
+    dev = refill(dev, cfg, my_part, codebook=codebook)
     pre = dev.states.counters
     dev = local_advance(dev, shard, cfg, my_part)
     dev = _trace_accumulate(dev, pre)
@@ -758,7 +808,8 @@ def run_simulated(index: BatonIndex, queries: np.ndarray, cfg: BatonParams,
 
     def superstep(devs):
         devs, res_buf, dest, want, free, remaining = jax.vmap(
-            lambda dv, sh, mp: _superstep_local(dv, sh, cfg, mp, P),
+            lambda dv, sh, mp: _superstep_local(dv, sh, cfg, mp, P,
+                                                codebook=codebook),
             in_axes=(0, shard_axes, 0),
         )(devs, shard, my_parts)
         grant = grant_matrix(want, free, cfg.pair_cap)           # (P, P)
@@ -816,7 +867,7 @@ def make_spmd_fn(cfg: BatonParams, n_parts: int, axis_name: str = "part"):
         def body(c):
             dev, it, _ = c
             dev, res_buf, dest, want, free, remaining = _superstep_local(
-                dev, shard, cfg, my_part, n_parts
+                dev, shard, cfg, my_part, n_parts, codebook=codebook
             )
             want_all = jax.lax.all_gather(want, axis_name)       # (P, P)
             free_all = jax.lax.all_gather(free, axis_name)       # (P,)

@@ -127,15 +127,19 @@ def merge_into_beam_fused(beam_ids, beam_dists, beam_expl, cand_ids,
     if impl == "bitonic":
         from repro.kernels.topk.ops import merge_topk
 
-        ids, dists = merge_topk(beam_ids, beam_dists, cand_ids, cand_dists, L)
-        # recover explored flags: an output id is explored iff its (unique)
-        # source entry was an explored beam entry; candidates are unexplored
-        expl = jnp.any(
-            (ids[:, :, None] == beam_ids[:, None, :])
-            & beam_expl[:, None, :] & (ids[:, :, None] != NO_ID),
-            axis=2,
-        )
-        return ids, dists, expl
+        # Carry the explored flag through the sort as a packed payload so
+        # recovery is O(L) unpacking instead of an O(L²) id match against
+        # the pre-merge beam (ROADMAP follow-up).  The flag rides in the
+        # LOW bit — ``id*2 + flag`` is strictly monotone in id for distinct
+        # ids, so the kernel's (dist, payload) tie order equals the lexsort
+        # path's (dist, id) order bit-for-bit (a high-bit flag would let an
+        # explored entry lose ties it should win).  Requires |id| < 2³⁰;
+        # NO_ID (-1) packs to -2 and arithmetic-shifts back to -1.
+        packed_beam = (beam_ids << 1) | beam_expl.astype(jnp.int32)
+        packed_cand = cand_ids << 1              # candidates are unexplored
+        packed, dists = merge_topk(packed_beam, beam_dists, packed_cand,
+                                   cand_dists, L)
+        return packed >> 1, dists, (packed & 1) == 1
     ids = jnp.concatenate([beam_ids, cand_ids], axis=1)
     dists = jnp.concatenate([beam_dists, cand_dists], axis=1)
     expl = jnp.concatenate(

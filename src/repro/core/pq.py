@@ -127,6 +127,26 @@ def build_lut(cb_centroids: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def quantize_lut_i8(lut: jnp.ndarray):
+    """Per-subspace symmetric int8 quantization of a (..., M, K) LUT.
+
+    The §8 "Reducing Message Size" wire variant: each subspace row is scaled
+    by its own ``max(|row|)/127`` so the quantization error is bounded by
+    ``scale/2`` per entry — ~4× fewer wire bytes than f32 at a distance
+    error of at most ``sum_m max_m(lut)/254`` (tested).  Returns
+    ``(codes (..., M, K) int8, scales (..., M) float32)``.
+    """
+    scale = jnp.max(jnp.abs(lut), axis=-1) / 127.0
+    scale = jnp.maximum(scale, jnp.float32(1e-12))
+    q = jnp.clip(jnp.round(lut / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_lut_i8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_lut_i8` (receiver side of the i8 wire)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
 def adc(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
     """Asymmetric distance computation.
 

@@ -166,4 +166,8 @@ def run_simulated(
         "part_hops": per_part[:, :, 0].T,
         "part_dist_comps": per_part[:, :, 2].T,
         "part_reads": per_part[:, :, 3].T,
+        # distinct-sector footprint per branch: every read of a query is a
+        # fresh sector (explored-flag invariant), so footprint == reads;
+        # kept separate so the simulator's cache tier stays trace-driven
+        "part_sectors": per_part[:, :, 3].T,
     }

@@ -31,7 +31,8 @@ STAT_FIELDS = ("hops", "inter_hops", "dist_comps", "reads", "lut_builds")
 N_STATS = len(STAT_FIELDS)
 
 # columns of one packed trace segment (DeviceState.out_trace, axis -1)
-TRACE_FIELDS = ("part", "hops", "reads", "dist_comps", "lut_builds")
+TRACE_FIELDS = ("part", "hops", "reads", "dist_comps", "lut_builds",
+                "sectors")
 N_TRACE = len(TRACE_FIELDS)
 
 
@@ -62,6 +63,12 @@ class HopTrace(NamedTuple):
     reads: jnp.ndarray       # (T,) int32 sector reads in the segment
     dist_comps: jnp.ndarray  # (T,) int32 PQ + exact comparisons
     lut_builds: jnp.ndarray  # (T,) int32 LUT (re)builds in the segment
+    sectors: jnp.ndarray     # (T,) int32 distinct-sector footprint of the
+    #                          segment (== reads under the explored-flag
+    #                          invariant: a query never re-reads a node; kept
+    #                          as its own counter so multi-node-per-sector
+    #                          layouts can diverge).  Drives the cluster
+    #                          simulator's trace-derived cache-hit model.
     seg: jnp.ndarray         # () int32 index of the open segment
 
     @staticmethod
@@ -69,7 +76,7 @@ class HopTrace(NamedTuple):
         z = jnp.zeros((t,), jnp.int32)
         return HopTrace(
             part=jnp.full((t,), -1, jnp.int32),
-            hops=z, reads=z, dist_comps=z, lut_builds=z,
+            hops=z, reads=z, dist_comps=z, lut_builds=z, sectors=z,
             seg=jnp.int32(0),
         )
 
@@ -119,7 +126,11 @@ class QueryState(NamedTuple):
     done: jnp.ndarray            # () bool — search converged
     home: jnp.ndarray            # () int32 — partition the client sent it to
     qid: jnp.ndarray             # () int32 — client-side query id
-    lut: jnp.ndarray | None = None  # (M, K) float32 PQ lookup table
+    lut: jnp.ndarray | None = None  # (M, K) PQ lookup table (f32 resident;
+    #                                 f16/i8 only transiently on the wire)
+    lut_scale: jnp.ndarray | None = None  # (M,) f32 per-subspace dequant
+    #                                 scales — present only while an i8 wire
+    #                                 LUT is in flight (§8 quantized ship)
     trace: HopTrace | None = None   # per-residency event record (baton only)
 
     @property
@@ -134,11 +145,15 @@ class QueryState(NamedTuple):
 def empty_state(
     d: int, L: int, P: int, m: int | None = None, k_pq: int | None = None,
     lut_dtype=jnp.float32, trace_cap: int | None = None,
+    with_lut_scale: bool = False,
 ) -> QueryState:
     lut = None
+    lut_scale = None
     if m is not None:
         assert k_pq is not None
         lut = jnp.zeros((m, k_pq), lut_dtype)
+        if with_lut_scale:
+            lut_scale = jnp.zeros((m,), jnp.float32)
     return QueryState(
         query=jnp.zeros((d,), jnp.float32),
         beam_ids=jnp.full((L,), NO_ID, jnp.int32),
@@ -152,6 +167,7 @@ def empty_state(
         home=jnp.int32(0),
         qid=jnp.int32(-1),
         lut=lut,
+        lut_scale=lut_scale,
         trace=HopTrace.empty(trace_cap) if trace_cap is not None else None,
     )
 
@@ -193,21 +209,26 @@ def envelope_bytes(
 ) -> int:
     """Wire size of one state (the paper's 4-8 KB envelope).
 
-    With ``ship_lut=True`` the per-query PQ LUT (M·K·4 bytes, or M·K·2 for
-    the ``lut_dtype="f16"`` quantized variant) rides in the envelope, trading
-    wire bytes for zero recompute on arrival — the §8 "Reducing Message Size"
-    knob.  Without it the receiver rebuilds the LUT from the (always-shipped)
-    query embedding and its replicated codebook.
+    With ``ship_lut=True`` the per-query PQ LUT rides in the envelope,
+    trading wire bytes for zero recompute on arrival — the §8 "Reducing
+    Message Size" knob: M·K·4 bytes for f32, M·K·2 for ``lut_dtype="f16"``,
+    or M·K + M·4 for ``lut_dtype="i8"`` (int8 entries + per-subspace f32
+    dequant scales, ~4× smaller than f32).  Without it the receiver rebuilds
+    the LUT from the (always-shipped) query embedding and its replicated
+    codebook.
 
     The ``HopTrace`` leaves the engine attaches to in-flight states are
     measurement instrumentation (see ``HopTrace``) and are not counted here.
     """
     if ship_lut and (m is None or k_pq is None):
         raise ValueError("ship_lut=True needs the PQ geometry (m, k_pq)")
-    if lut_dtype not in ("f32", "f16"):
-        raise ValueError(f"lut_dtype must be f32|f16: {lut_dtype}")
+    if lut_dtype not in ("f32", "f16", "i8"):
+        raise ValueError(f"lut_dtype must be f32|f16|i8: {lut_dtype}")
     s = empty_state(d, L, P)
     base = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s))
     if ship_lut:
-        base += m * k_pq * (2 if lut_dtype == "f16" else 4)
+        if lut_dtype == "i8":
+            base += m * k_pq + m * 4          # codes + per-subspace scales
+        else:
+            base += m * k_pq * (2 if lut_dtype == "f16" else 4)
     return base

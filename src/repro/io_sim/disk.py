@@ -51,6 +51,10 @@ class CostModel:
     #                                      the §8 ship-vs-recompute tradeoff
     threads_per_server: int = 8          # paper runs 8 search threads
     states_per_thread: int = 8           # fixed-count inter-query balancing
+    cache_hit_service_us: float = 1.0    # DRAM sector-cache hit (no SSD
+    #                                      queue) — the memory-hierarchy tier
+    #                                      SPANN keeps its centroid level in
+    sector_bytes: int = 4096             # one cached/read sector (4 KB)
 
     # ---- event-simulator service-time primitives (repro.cluster) ----------
     # The discrete-event cluster simulator replays per-query traces through
@@ -70,9 +74,30 @@ class CostModel:
         return max(1, int(round(self.ssd_iops * self.read_service_s)))
 
     @property
+    def cache_hit_service_s(self) -> float:
+        """Service time of a sector-cache hit (DRAM; bypasses the SSD
+        channel queue — the cluster simulator's cache tier charges this)."""
+        return self.cache_hit_service_us * 1e-6
+
+    @property
     def server_slots(self) -> int:
         """Resident query states per server (fixed-count balancing, §5)."""
         return self.threads_per_server * self.states_per_thread
+
+    def cache_memory_bytes(self, cache_sectors: int) -> int:
+        """DRAM held by a per-server sector cache of ``cache_sectors``."""
+        return cache_sectors * self.sector_bytes
+
+    def replica_memory_bytes(self, partition_bytes: float,
+                             copies_per_partition: float) -> float:
+        """Extra per-partition storage bought by replication.
+
+        ``copies_per_partition`` is ``Placement.copies_per_partition``; the
+        first copy is the baseline deployment, so only the additional
+        copies are priced.  Together with :meth:`cache_memory_bytes` this
+        keeps the DRAM side of the cache/replication scenarios priced
+        symmetrically with their wire/latency side (the §8 pattern)."""
+        return max(copies_per_partition - 1.0, 0.0) * partition_bytes
 
     def compute_s(self, dist_comps: float, lut_builds: float = 0.0) -> float:
         """CPU service time of one hop's scoring work."""
@@ -103,6 +128,7 @@ class CostModel:
         dist_comps: float,
         envelope_bytes: int,
         lut_builds: float = 0.0,
+        cache_hit_hops: float = 0.0,
     ) -> float:
         """End-to-end latency of one query (no queueing).
 
@@ -113,8 +139,14 @@ class CostModel:
         charges the recompute side of §8: pass the per-query LUT-build count
         so ship (bigger envelope, lut_builds~1) and recompute (small
         envelope, 1+inter_hops builds) are priced symmetrically.
+        ``cache_hit_hops`` counts read rounds served entirely from the DRAM
+        sector cache — they cost ``cache_hit_service_us`` instead of an SSD
+        round (the memory-hierarchy tier, priced symmetrically with the
+        DRAM it occupies via :meth:`cache_memory_bytes`).
         """
-        io = hops * self.ssd_read_latency_us
+        cache_hit_hops = min(cache_hit_hops, hops)
+        io = ((hops - cache_hit_hops) * self.ssd_read_latency_us
+              + cache_hit_hops * self.cache_hit_service_us)
         net = inter_hops * (
             self.tcp_one_way_us
             + 2 * self.serialize_us

@@ -34,6 +34,13 @@ def main():
                     help="§8 alternative: ship the PQ LUT inside the "
                          "hand-off envelope instead of rebuilding on arrival "
                          "(bigger wire, zero recompute)")
+    ap.add_argument("--lut-wire", default="f32",
+                    choices=["f32", "f16", "i8"],
+                    help="wire dtype of the shipped LUT (§8 quantized "
+                         "variants: f16 halves, i8 quarters the LUT bytes)")
+    ap.add_argument("--lazy-lut", action="store_true",
+                    help="build queued queries' PQ LUTs at refill instead "
+                         "of keeping a (Q, M, K) array resident")
     ap.add_argument("--partitioner", default="ldg",
                     choices=["ldg", "kmeans", "random"])
     ap.add_argument("--send-rate", type=float, default=0.0,
@@ -46,6 +53,23 @@ def main():
                     help="arrival process for --send-rate")
     ap.add_argument("--sim-arrivals", type=int, default=2000,
                     help="queries to simulate at --send-rate")
+    ap.add_argument("--cache-sectors", type=int, default=0,
+                    help="per-server LRU sector-cache capacity for the "
+                         "event simulator (0 = no cache tier)")
+    ap.add_argument("--warm-cache", action="store_true",
+                    help="pre-touch every trace's sector footprint before "
+                         "the simulated run")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica copies per partition (ring placement, "
+                         "least-loaded pick at slot-acquire time)")
+    ap.add_argument("--straggler", default="",
+                    help="per-server SSD service-time multipliers, e.g. "
+                         "'0:4.0,2:1.5' slows server 0 by 4x and 2 by 1.5x")
+    ap.add_argument("--sat-criterion", default="latency",
+                    choices=["latency", "backlog", "both"],
+                    help="saturation-knee criterion for the reported "
+                         "saturation QPS (backlog = horizon-independent "
+                         "queue-depth trend)")
     args = ap.parse_args()
 
     ds = synth.make_dataset("deep", n=args.n, n_queries=args.queries, seed=0)
@@ -64,7 +88,9 @@ def main():
           f"{'sector' if args.sector_codes else 'replicated'} codes)")
 
     cfg = baton.BatonParams(L=args.L, W=args.W, k=args.k, pool=256,
-                            slots=args.slots, ship_lut=args.ship_lut)
+                            slots=args.slots, ship_lut=args.ship_lut,
+                            lut_wire_dtype=args.lut_wire,
+                            lazy_queue_lut=args.lazy_lut)
     t0 = time.time()
     ids, dists, stats = baton.run_simulated(index, ds.queries, cfg,
                                             sector_codes=args.sector_codes)
@@ -74,7 +100,8 @@ def main():
     rec = ref.recall_at_k(ids, ds.gt, 10)
     pq_m, pq_k = index.codebook.shape[:2]
     env = envelope_bytes(ds.dim, cfg.L, cfg.pool, m=pq_m, k_pq=pq_k,
-                         ship_lut=cfg.ship_lut)
+                         ship_lut=cfg.ship_lut,
+                         lut_dtype=cfg.lut_wire_dtype)
     qps = COST.cluster_qps(args.servers, stats["reads"].mean(),
                            stats["dist_comps"].mean(),
                            stats["inter_hops"].mean(), env,
@@ -94,17 +121,40 @@ def main():
     if args.send_rate > 0:
         from repro import cluster
 
+        read_mult = None
+        if args.straggler:
+            mult = [1.0] * args.servers
+            for tok in args.straggler.split(","):
+                srv, m = tok.split(":")
+                if not 0 <= int(srv) < args.servers:
+                    raise SystemExit(
+                        f"--straggler server {srv} out of range "
+                        f"0..{args.servers - 1}")
+                mult[int(srv)] = float(m)
+            read_mult = tuple(mult)
+        params = cluster.SimParams(
+            cache_sectors=args.cache_sectors, warm_cache=args.warm_cache,
+            replicas=args.replicas, read_mult=read_mult)
         traces = cluster.from_baton_stats(stats, env)
-        sat = cluster.find_saturation_qps(traces, args.servers, seed=0)
+        sat = cluster.find_saturation_qps(traces, args.servers, params,
+                                          seed=0,
+                                          criterion=args.sat_criterion)
         wl = cluster.make_workload(
             len(traces), args.send_rate, args.sim_arrivals, args.arrival,
             seed=0, homes=cluster.trace_homes(traces))
-        res = cluster.simulate(traces, args.servers, wl)
+        res = cluster.simulate(traces, args.servers, wl, params)
+        scenario = (f"cache={args.cache_sectors}"
+                    f"{'(warm)' if args.warm_cache else ''} "
+                    f"replicas={args.replicas} "
+                    f"straggler={args.straggler or '-'}")
         print(f"  simulated @{args.send_rate:.0f} qps ({args.arrival}, "
-              f"{res.completed}/{res.offered} completed): "
+              f"{res.completed}/{res.offered} completed, {scenario}): "
               f"mean={res.mean_s*1e3:.2f}ms p50={res.p50_s*1e3:.2f}ms "
               f"p95={res.p95_s*1e3:.2f}ms p99={res.p99_s*1e3:.2f}ms "
-              f"(saturation~{sat:.0f} qps)")
+              f"(saturation~{sat:.0f} qps, {args.sat_criterion})")
+        if args.cache_sectors > 0:
+            print(f"  cache: hit_rate={res.cache_hit_rate:.3f} "
+                  f"dram={COST.cache_memory_bytes(args.cache_sectors)/1e6:.1f}MB")
 
 
 if __name__ == "__main__":

@@ -344,6 +344,81 @@ def test_f16_lut_distance_error_bounded(dataset, codebook, codes):
     assert rel.max() < 5e-3, rel.max()
 
 
+def test_i8_envelope_quarter_lut_bytes():
+    d, L, P, m, k = 96, 64, 256, 24, 256
+    base = envelope_bytes(d, L, P)
+    env32 = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=True)
+    env8 = envelope_bytes(d, L, P, m=m, k_pq=k, ship_lut=True,
+                          lut_dtype="i8")
+    assert env32 - base == m * k * 4
+    assert env8 - base == m * k + m * 4       # int8 codes + f32 scales
+    assert (env8 - base) < 0.3 * (env32 - base)
+
+
+def test_i8_lut_distance_error_bounded(dataset, codebook, codes):
+    """ADC with an i8-roundtripped LUT: per-subspace scale quantization
+    bounds the absolute distance error by sum_m max_m(lut)/254."""
+    lut = pq.build_lut(codebook.centroids,
+                       jnp.asarray(dataset.queries[:8]))
+    q8, scale = pq.quantize_lut_i8(lut)
+    deq = pq.dequantize_lut_i8(q8, scale)
+    assert q8.dtype == jnp.int8 and scale.shape == lut.shape[:-1]
+    bound = np.asarray(jnp.sum(jnp.max(jnp.abs(lut), -1) / 254.0, -1))
+    d32 = np.asarray(pq.adc(lut, jnp.asarray(codes[:512])))
+    d8 = np.asarray(pq.adc(deq, jnp.asarray(codes[:512])))
+    assert (np.abs(d8 - d32) <= bound[:, None] + 1e-5).all()
+    rel = np.abs(d8 - d32) / np.maximum(d32, 1e-6)
+    assert rel.max() < 0.05, rel.max()
+
+
+def test_i8_ship_recall_delta_small(baton_index, dataset):
+    """Engine-level: int8 wire LUT loses <2% recall@10 vs f32 shipping."""
+    kw = dict(L=32, W=8, k=10, pool=128, slots=16, n_starts=4, ship_lut=True)
+    ids32, _, st32 = baton.run_simulated(
+        baton_index, dataset.queries, baton.BatonParams(**kw))
+    ids8, _, st8 = baton.run_simulated(
+        baton_index, dataset.queries,
+        baton.BatonParams(**kw, lut_wire_dtype="i8"))
+    r32 = ref.recall_at_k(ids32, dataset.gt, 10)
+    r8 = ref.recall_at_k(ids8, dataset.gt, 10)
+    assert abs(r32 - r8) < 0.02, (r32, r8)
+    assert abs(st32["inter_hops"].mean() - st8["inter_hops"].mean()) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: lazy refill LUTs (ROADMAP memory follow-up)
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_queue_lut_bit_identical_and_saves_memory(baton_index, dataset):
+    """lazy_queue_lut builds LUTs at refill instead of keeping a (Q, M, K)
+    f32 array resident: results and counters bit-identical, queue memory
+    collapses to a placeholder."""
+    kw = dict(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    ids0, d0, st0 = baton.run_simulated(baton_index, dataset.queries,
+                                        baton.BatonParams(**kw))
+    ids1, d1, st1 = baton.run_simulated(
+        baton_index, dataset.queries,
+        baton.BatonParams(**kw, lazy_queue_lut=True))
+    np.testing.assert_array_equal(ids1, ids0)
+    np.testing.assert_array_equal(d1, d0)
+    for key in ("hops", "inter_hops", "dist_comps", "reads", "lut_builds"):
+        np.testing.assert_array_equal(st1[key], st0[key], err_msg=key)
+
+    q, d = 64, dataset.vectors.shape[1]
+    args = (np.zeros((q, d), np.float32), np.arange(q, dtype=np.int32),
+            np.zeros((q, 4), np.int32), np.zeros((q, 4), np.float32))
+    eager = baton.init_device_state(*args, baton.BatonParams(**kw),
+                                    baton_index.codebook)
+    lazy = baton.init_device_state(
+        *args, baton.BatonParams(**kw, lazy_queue_lut=True),
+        baton_index.codebook)
+    m, k_pq = baton_index.codebook.shape[:2]
+    assert eager.queue_lut.nbytes == q * m * k_pq * 4
+    assert lazy.queue_lut.nbytes == m * k_pq * 4      # (1, M, K) placeholder
+    assert lazy.queue_lut.nbytes <= eager.queue_lut.nbytes // q
+
+
 def test_f16_ship_recall_delta_small(baton_index, dataset):
     """Engine-level: fp16 wire LUT loses <2% recall@10 vs f32 shipping on
     the smoke dataset (distances only drift after a hand-off)."""

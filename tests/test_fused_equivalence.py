@@ -60,6 +60,48 @@ def test_search_disk_fused_matches_seed(dataset, graph, codebook, codes,
 
 
 # ---------------------------------------------------------------------------
+# bitonic merge: packed (id, explored) payload — O(L) flag recovery
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    L=st.sampled_from([8, 16]),
+    c=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_bitonic_merge_packed_flags_bit_identical(L, c, seed):
+    """The bitonic path carries explored flags as a packed low-bit payload;
+    output (ids, dists, expl) must match the lexsort path bitwise —
+    including distance ties between explored and unexplored entries, where
+    a high-bit packing would flip the tie order."""
+    from repro.core.state import INF, NO_ID
+
+    rng = np.random.default_rng(seed)
+    # beam: distinct ids, quantized dists (ties likely), random expl flags
+    bids = rng.choice(1000, size=L, replace=False).astype(np.int32)
+    n_pad = rng.integers(0, L // 2 + 1)
+    bids[L - n_pad:] = NO_ID
+    bdists = np.where(bids < 0, np.inf,
+                      rng.integers(0, 4, size=L) * 0.5).astype(np.float32)
+    bexpl = np.where(bids < 0, False, rng.random(L) < 0.5)
+    order = np.lexsort((bids, bdists))
+    bids, bdists, bexpl = bids[order], bdists[order], bexpl[order]
+    # candidates: distinct from beam and each other, same quantized dists
+    cids = (1000 + rng.choice(1000, size=c, replace=False)).astype(np.int32)
+    cdists = (rng.integers(0, 4, size=c) * 0.5).astype(np.float32)
+
+    args = (jnp.asarray(bids)[None], jnp.asarray(bdists)[None],
+            jnp.asarray(bexpl)[None], jnp.asarray(cids)[None],
+            jnp.asarray(cdists)[None])
+    want = beam_search.merge_into_beam_fused(*args, impl="lexsort")
+    got = beam_search.merge_into_beam_fused(*args, impl="bitonic")
+    for w, g, name in zip(want, got, ("ids", "dists", "expl")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
 # one batched super-step == vmapped per-slot seed steps
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,336 @@
+"""Pluggable server resource stack (ISSUE-3 acceptance battery).
+
+* With every scenario stage disabled the stage-stack simulator reproduces
+  PR 2 behaviour: same-seed identical event log, zero-load == closed-form
+  ``query_latency_s`` to <1%.
+* Determinism, query conservation and the zero-load lower bound also hold
+  with the cache / replication / straggler stages *enabled*.
+* Cold cache == no cache (bit-identical event log); a warm cache serves
+  sector reads from DRAM and cuts zero-load latency.
+* Replication relieves the skew tail; a straggler hurts scatter-gather
+  (max over branches) more than baton (pass-through).
+* The backlog-growth saturation criterion finds the same knee region as
+  the latency threshold but is decoupled from the horizon length.
+"""
+
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import baton, scatter_gather
+from repro.core.state import envelope_bytes
+from repro.io_sim.disk import DEFAULT as COST, CostModel
+
+
+@pytest.fixture(scope="module")
+def traced(baton_index, dataset):
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    _, _, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128)
+    return stats, cluster.from_baton_stats(stats, env), env
+
+
+@pytest.fixture(scope="module")
+def sg_traced(dataset, graph):
+    sg = scatter_gather.build_index(
+        dataset.vectors, p=4, r=20, l_build=40, pq_m=16, pq_k=128,
+        seed=0, global_graph=graph,
+    )
+    _, _, stats = scatter_gather.run_simulated(sg, dataset.queries, L=32,
+                                               W=8, k=10)
+    return cluster.from_scatter_gather_stats(stats, 4)
+
+
+ALL_ON = dict(cache_sectors=256, replicas=2,
+              read_mult=(2.0, 1.0, 1.0, 1.0),
+              compute_mult=(1.0, 1.0, 1.5, 1.0))
+
+
+def _closed_form(tr, env):
+    t = tr.totals()
+    return COST.query_latency_s(
+        hops=t["hops"], inter_hops=t["inter_hops"], reads=t["reads"],
+        dist_comps=t["dist_comps"], envelope_bytes=env,
+        lut_builds=t["lut_builds"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace schema: the distinct-sector footprint column
+# ---------------------------------------------------------------------------
+
+
+def test_trace_sector_footprint_emitted(traced):
+    """The engine records a per-segment distinct-sector footprint; under the
+    explored-flag invariant it equals the segment's reads, and it drives
+    the simulator's cache keys (not a global scalar)."""
+    stats, traces, _ = traced
+    assert stats["trace"].shape[-1] == 6      # part/hops/reads/dcs/luts/sect
+    for tr in traces:
+        for seg in tr.segments:
+            assert seg.sectors == seg.reads
+    assert sum(s.sectors for t in traces for s in t.segments) > 0
+
+
+def test_segment_sectors_default_backcompat():
+    seg = cluster.Segment(part=0, hops=2, reads=9, dist_comps=10,
+                          lut_builds=1)
+    assert seg.sectors == 9                   # -1 sentinel => reads
+    seg2 = cluster.Segment(part=0, hops=2, reads=9, dist_comps=10,
+                           lut_builds=1, sectors=4)
+    assert seg2.sectors == 4
+
+
+# ---------------------------------------------------------------------------
+# PR 2 parity with all scenario stages disabled / neutral
+# ---------------------------------------------------------------------------
+
+
+def test_zero_load_parity_stages_disabled(traced):
+    _, traces, env = traced
+    res = cluster.zero_load_result(traces, 4)
+    assert res.completed == len(traces)
+    for i, tr in enumerate(traces):
+        cf = _closed_form(tr, env)
+        assert abs(res.latencies_s[i] - cf) / cf < 0.01
+
+
+def test_zero_load_parity_neutral_stages(traced):
+    """Enabled-but-neutral stages (cold cache, 1 replica, unit multipliers)
+    do not perturb the zero-load limit: still <1% of closed form."""
+    _, traces, env = traced
+    params = cluster.SimParams(cache_sectors=4096, replicas=1,
+                               read_mult=(1.0,) * 4,
+                               compute_mult=(1.0,) * 4)
+    res = cluster.zero_load_result(traces, 4, params)
+    for i, tr in enumerate(traces):
+        cf = _closed_form(tr, env)
+        assert abs(res.latencies_s[i] - cf) / cf < 0.01
+
+
+def test_cold_cache_equals_no_cache(traced):
+    """Each trace replayed once touches only fresh sectors: a cold cache
+    produces zero hits and a bit-identical event log to no cache."""
+    _, traces, _ = traced
+    base = cluster.zero_load_result(
+        traces, 4, cluster.SimParams(record_events=True))
+    cached = cluster.zero_load_result(
+        traces, 4, cluster.SimParams(record_events=True, cache_sectors=512))
+    assert cached.diag["cache_hits"] == 0
+    assert cached.events == base.events
+    np.testing.assert_array_equal(cached.latencies_s, base.latencies_s)
+
+
+def test_identity_pipeline_event_log_unchanged(traced):
+    """Defaults vs explicitly-neutral stage config: identical event logs
+    (the stack refactor did not change the modeled pipeline)."""
+    _, traces, _ = traced
+    wl = cluster.make_workload(len(traces), 2000.0, 400, "poisson", seed=7)
+    r_def = cluster.simulate(traces, 4, wl,
+                             cluster.SimParams(record_events=True))
+    r_neu = cluster.simulate(
+        traces, 4, wl,
+        cluster.SimParams(record_events=True, replicas=1,
+                          read_mult=(1.0,) * 4, compute_mult=(1.0,) * 4))
+    assert r_def.events == r_neu.events
+
+
+# ---------------------------------------------------------------------------
+# determinism / conservation / lower bound with everything enabled
+# ---------------------------------------------------------------------------
+
+
+def test_deterministic_with_all_stages(traced):
+    _, traces, _ = traced
+    params = cluster.SimParams(record_events=True, **ALL_ON)
+    wl = cluster.make_workload(len(traces), 2500.0, 500, "poisson", seed=3)
+    r1 = cluster.simulate(traces, 4, wl, params)
+    r2 = cluster.simulate(traces, 4, wl, params)
+    assert r1.events == r2.events
+    np.testing.assert_array_equal(r1.latencies_s, r2.latencies_s)
+    wl2 = cluster.make_workload(len(traces), 2500.0, 500, "poisson", seed=4)
+    assert cluster.simulate(traces, 4, wl2, params).events != r1.events
+
+
+def test_conservation_with_all_stages(traced, sg_traced):
+    _, traces, _ = traced
+    params = cluster.SimParams(**ALL_ON)
+    for trs in (traces, sg_traced):
+        wl = cluster.make_workload(len(trs), 2000.0, 600, "burst", seed=5)
+        res = cluster.simulate(trs, 4, wl, params)
+        assert res.completed == res.offered == 600
+        assert not np.isnan(res.latencies_s).any()
+
+
+def test_straggler_latency_is_lower_bounded(traced):
+    """Slowing a server only adds latency: per-query >= closed form."""
+    _, traces, env = traced
+    params = cluster.SimParams(read_mult=(3.0, 1.0, 1.0, 1.0))
+    wl = cluster.make_workload(len(traces), 1500.0, 500, "poisson", seed=1)
+    res = cluster.simulate(traces, 4, wl, params)
+    lb = np.array([_closed_form(traces[i], env) for i in res.trace_idx])
+    assert (res.latencies_s >= lb - 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# cache tier
+# ---------------------------------------------------------------------------
+
+
+def test_warm_cache_cuts_zero_load_latency(traced):
+    _, traces, _ = traced
+    cold = cluster.zero_load_result(traces, 4)
+    warm = cluster.zero_load_result(
+        traces, 4,
+        cluster.SimParams(cache_sectors=1_000_000, warm_cache=True))
+    assert warm.diag["cache_hit_rate"] == 1.0
+    # every read round now costs cache_hit_service_s instead of an SSD round
+    assert warm.mean_s < 0.5 * cold.mean_s
+
+
+def test_cache_hit_rate_monotone_in_capacity(traced):
+    _, traces, _ = traced
+    wl = cluster.make_workload(len(traces), 2000.0, 800, "poisson", seed=2)
+    rates = []
+    for cap in (64, 512, 1_000_000):
+        r = cluster.simulate(traces, 4, wl,
+                             cluster.SimParams(cache_sectors=cap))
+        rates.append(r.diag["cache_hit_rate"])
+    assert rates[0] <= rates[1] <= rates[2]
+    assert rates[2] > 0.5          # repeated traces re-hit their sectors
+
+
+def test_cache_raises_saturation_qps(traced):
+    """The scenario the figure sweeps: a warm full-footprint cache lifts
+    the disk-bound saturation knee."""
+    _, traces, _ = traced
+    sat0 = cluster.find_saturation_qps(traces, 4, n_arrivals=300, seed=0,
+                                       criterion="both")
+    satc = cluster.find_saturation_qps(
+        traces, 4,
+        cluster.SimParams(cache_sectors=1_000_000, warm_cache=True),
+        n_arrivals=300, seed=0, criterion="both")
+    assert satc > 1.5 * sat0
+
+
+def test_lru_eviction_order():
+    c = cluster.CacheTier(2)
+    assert c.access(["a", "b"]) == (0, 2)
+    assert c.access(["a"]) == (1, 0)          # a is now most-recent
+    assert c.access(["c"]) == (0, 1)          # evicts b
+    assert c.access(["b"]) == (0, 1)          # b gone, evicts a
+    assert c.access(["c"]) == (1, 0)
+    assert c.lookups == 6 and c.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# placement / replication
+# ---------------------------------------------------------------------------
+
+
+def test_placement_ring_and_select():
+    pl = cluster.Placement.ring(4, 4, 2)
+    assert pl.replicas == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert pl.copies_per_partition == 2.0
+    load = {0: 5, 1: 2, 2: 2, 3: 9}
+    assert pl.select(0, load.get) == 1
+    assert pl.select(1, load.get) == 1        # tie -> first listed (primary)
+    assert cluster.Placement.identity(3).select(2, load.get) == 2
+
+
+def test_replication_relieves_skew_tail(traced):
+    _, traces, _ = traced
+    homes = cluster.trace_homes(traces)
+    sat = cluster.find_saturation_qps(traces, 4, n_arrivals=300, seed=0)
+    wl = cluster.make_workload(len(traces), 0.7 * sat, 1200, "skew", seed=1,
+                               homes=homes)
+    r1 = cluster.simulate(traces, 4, wl, cluster.SimParams(replicas=1))
+    r2 = cluster.simulate(traces, 4, wl, cluster.SimParams(replicas=2))
+    assert r2.completed == r1.completed == 1200
+    assert r2.p99_s < r1.p99_s                # tail relief
+    assert r2.mean_s < 1.05 * r1.mean_s       # and no mean regression
+
+
+# ---------------------------------------------------------------------------
+# stragglers: baton (pass-through) vs scatter-gather (max over branches)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_hurts_sg_more_than_baton(traced, sg_traced):
+    _, traces, _ = traced
+    slowdown = {}
+    for tag, trs in (("baton", traces), ("sg", sg_traced)):
+        sat = cluster.find_saturation_qps(trs, 4, n_arrivals=300, seed=0)
+        wl = cluster.make_workload(len(trs), 0.15 * sat, 800, "poisson",
+                                   seed=1)
+        base = cluster.simulate(trs, 4, wl)
+        slow = cluster.simulate(
+            trs, 4, wl, cluster.SimParams(read_mult=(4.0, 1.0, 1.0, 1.0)))
+        slowdown[tag] = slow.mean_s / base.mean_s
+    assert slowdown["sg"] > slowdown["baton"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: backlog-growth saturation criterion
+# ---------------------------------------------------------------------------
+
+
+def test_backlog_criterion_flags_overload(traced):
+    _, traces, _ = traced
+    sat = cluster.find_saturation_qps(traces, 4, n_arrivals=400, seed=0)
+    wl_lo = cluster.make_workload(len(traces), 0.5 * sat, 600, "poisson",
+                                  seed=2)
+    wl_hi = cluster.make_workload(len(traces), 4.0 * sat, 600, "poisson",
+                                  seed=2)
+    assert not cluster.backlog_growing(cluster.simulate(traces, 4, wl_lo))
+    assert cluster.backlog_growing(cluster.simulate(traces, 4, wl_hi))
+
+
+def test_backlog_criterion_near_latency_knee_and_horizon_free(traced):
+    """The backlog knee lands in the same region as the latency knee, and —
+    the point of the satellite — is stable when the horizon doubles."""
+    _, traces, _ = traced
+    sat_lat = cluster.find_saturation_qps(traces, 4, n_arrivals=400, seed=0)
+    sat_bk1 = cluster.find_saturation_qps(traces, 4, n_arrivals=400, seed=0,
+                                          criterion="backlog")
+    sat_bk2 = cluster.find_saturation_qps(traces, 4, n_arrivals=800, seed=0,
+                                          criterion="backlog")
+    assert 0.4 * sat_lat < sat_bk1 < 2.5 * sat_lat
+    assert abs(sat_bk2 - sat_bk1) / sat_bk1 < 0.35
+    with pytest.raises(ValueError):
+        cluster.find_saturation_qps(traces, 4, criterion="vibes")
+
+
+# ---------------------------------------------------------------------------
+# cost-model pricing symmetry (cache / replica DRAM side)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_cache_and_replica_pricing():
+    c = CostModel()
+    assert c.cache_hit_service_s == pytest.approx(1e-6)
+    assert c.cache_memory_bytes(1000) == 1000 * 4096
+    assert c.replica_memory_bytes(10_000, 2.0) == 10_000
+    assert c.replica_memory_bytes(10_000, 1.0) == 0.0
+    # cache-hit hops are cheaper than SSD hops, never negative
+    full = c.query_latency_s(30, 4, 60, 4000, 4096)
+    half = c.query_latency_s(30, 4, 60, 4000, 4096, cache_hit_hops=15)
+    allh = c.query_latency_s(30, 4, 60, 4000, 4096, cache_hit_hops=99)
+    assert allh < half < full
+    # symmetry: 15 hit hops save exactly 15 x (read - hit) service
+    want = full - 15 * (c.ssd_read_latency_us - c.cache_hit_service_us) * 1e-6
+    assert half == pytest.approx(want)
+
+
+def test_stage_stats_uniform(traced):
+    """Every stage reports the uniform stats surface (the Stage protocol)."""
+    _, traces, _ = traced
+    wl = cluster.make_workload(len(traces), 2000.0, 300, "poisson", seed=0)
+    r = cluster.simulate(traces, 4, wl,
+                         cluster.SimParams(cache_sectors=128))
+    for sid, st in r.diag["stages"].items():
+        assert {"ssd", "cpu", "nic", "slots", "cache"} <= set(st)
+        for stage_stats in st.values():
+            assert {"served", "busy_s", "max_q"} <= set(stage_stats)
+        assert st["ssd"]["served"] > 0
