@@ -1,9 +1,12 @@
-"""Shared benchmark substrate: cached index builds + modeled QPS/latency.
+"""Shared benchmark substrate: cached index builds + Deployment factories.
 
 Scale knobs via env: BENCH_N (points), BENCH_Q (queries), BENCH_P (servers).
 Indices are cached under artifacts/bench_cache keyed by their parameters;
 the global graph + PQ are shared between BatANN and ScatterGather (the
-paper builds both over the same partitioning method [12]).
+paper builds both over the same partitioning method [12]).  Index
+construction routes through the ``repro.api`` engines; the figure functions
+consume :func:`baton_deployment` / :func:`sg_deployment` — a cached index
+wrapped in a ``repro.api.Deployment`` under a per-variant ``ServeConfig``.
 """
 
 from __future__ import annotations
@@ -12,10 +15,9 @@ import os
 
 import numpy as np
 
-from repro.core import baton, partition as part_mod, pq, ref, scatter_gather, vamana
-from repro.core.state import envelope_bytes
+from repro import api
+from repro.core import baton, partition as part_mod, ref, scatter_gather, vamana
 from repro.data import synth
-from repro.io_sim.disk import DEFAULT as COST
 
 BENCH_N = int(os.environ.get("BENCH_N", 20000))
 BENCH_Q = int(os.environ.get("BENCH_Q", 256))
@@ -60,6 +62,11 @@ def assignment(g, p: int) -> np.ndarray:
 _INDEX_CACHE: dict = {}
 
 
+def _bench_index_spec(engine: str, p: int) -> api.IndexSpec:
+    return api.IndexSpec(engine=engine, p=p, r=R, knn_k=17, pq_m=24,
+                         pq_k=256, head_fraction=0.01, seed=0)
+
+
 def baton_index(p: int | None = None) -> baton.BatonIndex:
     p = p or BENCH_P
     key = ("baton", p)
@@ -67,10 +74,8 @@ def baton_index(p: int | None = None) -> baton.BatonIndex:
         ds = dataset()
         g = global_graph(ds)
         a = assignment(g, p)
-        idx = baton.build_index(
-            ds.vectors, p=p, pq_m=24, pq_k=256, head_fraction=0.01,
-            seed=0, graph=g, assign=a,
-        )
+        idx = api.BatonEngine().build(ds, _bench_index_spec("baton", p),
+                                      graph=g, assign=a)
         _INDEX_CACHE[key] = (ds, idx)
     return _INDEX_CACHE[key]
 
@@ -83,110 +88,53 @@ def sg_index(p: int | None = None) -> scatter_gather.ScatterGatherIndex:
         g = global_graph(ds)
         a = assignment(g, p)
         # per-partition graphs with the same fast builder (same quality)
-        node2part, node2local, local2global, _ = part_mod.build_maps(a, p)
-        npmax = local2global.shape[1]
-        d = ds.vectors.shape[1]
-        pv = np.zeros((p, npmax, d), np.float32)
-        pn = np.full((p, npmax, R), -1, np.int32)
-        pm = np.zeros((p,), np.int32)
-        cb = pq.train(ds.vectors, m=24, k=256, seed=0)
-        codes = pq.encode(cb, ds.vectors)
-        pc = np.zeros((p, npmax, 24), np.uint8)
-        for pi in range(p):
-            ids = local2global[pi]
-            ok = ids >= 0
-            sub = ds.vectors[ids[ok]]
-            knn = ref.brute_force_knn(sub, sub, 17)[:, 1:]
-            gi = vamana.build_from_knn(sub, knn, r=R, alpha=1.2)
-            pv[pi, ok] = sub
-            pn[pi, ok] = gi.neighbors
-            pm[pi] = gi.medoid
-            pc[pi, ok] = codes[ids[ok]]
-        idx = scatter_gather.ScatterGatherIndex(
-            n=ds.n, p=p, dim=d, part_vectors=pv, part_neighbors=pn,
-            part_codes=pc, part_medoid=pm, local2global=local2global,
-            codebook=np.asarray(cb.centroids), assign=a,
-        )
+        idx = api.ScatterGatherEngine().build(
+            ds, _bench_index_spec("scatter_gather", p), graph=g, assign=a)
         _INDEX_CACHE[key] = (ds, idx)
     return _INDEX_CACHE[key]
 
 
 # ---------------------------------------------------------------------------
-# modeled throughput / latency (io_sim cost model; counters are exact)
+# Deployment factories: cached index + per-variant ServeConfig
 # ---------------------------------------------------------------------------
 
 
-PQ_M, PQ_K = 24, 256    # the PQ geometry every bench index is built with
+def _bench_config(engine: str, p: int, **search) -> api.ServeConfig:
+    return api.ServeConfig(
+        name=f"bench-{engine}-p{p}",
+        data=api.DataSpec(name=DATASET, n=BENCH_N, n_queries=BENCH_Q),
+        index=_bench_index_spec(engine, p),
+        search=api.SearchParams(**search),
+    )
+
+
+def baton_deployment(p: int | None = None, **search) -> api.Deployment:
+    """The cached baton index under a ServeConfig search variant."""
+    p = p or BENCH_P
+    ds, idx = baton_index(p)
+    return api.Deployment.from_parts(
+        _bench_config("baton", p, **search), api.BatonEngine(index=idx), ds)
+
+
+def sg_deployment(p: int | None = None, **search) -> api.Deployment:
+    """The cached scatter-gather index under a ServeConfig search variant."""
+    p = p or BENCH_P
+    ds, idx = sg_index(p)
+    return api.Deployment.from_parts(
+        _bench_config("scatter_gather", p, **search),
+        api.ScatterGatherEngine(index=idx), ds)
+
+
+# ---------------------------------------------------------------------------
+# scale knobs + sweep helpers (the modeled-QPS/latency arithmetic lives in
+# repro.api.engine — Engine.model / Engine.cluster_traces — not here)
+# ---------------------------------------------------------------------------
+
 
 # event-simulator scale knobs (fig9_sim / fig13): arrivals per simulated
 # rate point and per saturation-search probe
 SIM_ARRIVALS = int(os.environ.get("BENCH_SIM_ARRIVALS", 5000))
 SIM_SAT_ARRIVALS = int(os.environ.get("BENCH_SIM_SAT_ARRIVALS", 800))
-
-
-def batann_model(stats: dict, p: int, L: int, pool: int, d: int,
-                 ship_lut: bool = False, lut_dtype: str = "f32"):
-    """Model QPS/latency from exact counters.  ``ship_lut`` prices the §8
-    envelope tradeoff: shipping the LUT grows every hand-off by M·K·4 bytes
-    (M·K·2 for the fp16-quantized wire variant); the default (recompute,
-    matching BatonParams) keeps the paper's 4-8 KB calibrated envelope for
-    all figure rows."""
-    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut,
-                         lut_dtype=lut_dtype)
-    luts = float(np.mean(stats.get("lut_builds", 0.0)))
-    qps = COST.cluster_qps(
-        n_servers=p,
-        reads_per_query=float(np.mean(stats["reads"])),
-        dist_comps_per_query=float(np.mean(stats["dist_comps"])),
-        inter_hops_per_query=float(np.mean(stats["inter_hops"])),
-        envelope_bytes=env,
-        lut_builds_per_query=luts,
-    )
-    lat = COST.query_latency_s(
-        hops=float(np.mean(stats["hops"])),
-        inter_hops=float(np.mean(stats["inter_hops"])),
-        reads=float(np.mean(stats["reads"])),
-        dist_comps=float(np.mean(stats["dist_comps"])),
-        envelope_bytes=env,
-        lut_builds=luts,
-    )
-    return qps, lat
-
-
-def sg_model(stats: dict, p: int):
-    qps = COST.cluster_qps(
-        n_servers=p,
-        reads_per_query=float(np.mean(stats["reads"])),
-        dist_comps_per_query=float(np.mean(stats["dist_comps"])),
-        inter_hops_per_query=2.0,          # scatter + gather messages
-        envelope_bytes=512,
-    )
-    # latency driven by the slowest partition (paper §6.5)
-    lat = COST.query_latency_s(
-        hops=float(np.mean(stats["max_part_hops"])),
-        inter_hops=2.0,
-        reads=float(np.mean(stats["reads"])),
-        dist_comps=float(np.mean(stats["dist_comps"])) /
-        max(COST.threads_per_server, 1),
-        envelope_bytes=512,
-    )
-    return qps, lat
-
-
-def batann_cluster_traces(stats: dict, d: int, L: int, pool: int = 256,
-                          ship_lut: bool = False, lut_dtype: str = "f32"):
-    """Per-query replay traces for the event simulator (repro.cluster)."""
-    from repro import cluster
-
-    env = envelope_bytes(d, L, pool, m=PQ_M, k_pq=PQ_K, ship_lut=ship_lut,
-                         lut_dtype=lut_dtype)
-    return cluster.from_baton_stats(stats, env)
-
-
-def sg_cluster_traces(stats: dict, p: int):
-    from repro import cluster
-
-    return cluster.from_scatter_gather_stats(stats, p)
 
 
 def recall_at_095(l_values, recalls, values):

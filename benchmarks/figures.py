@@ -4,16 +4,20 @@ Every function returns rows: (name, us_per_call, derived) where
 ``us_per_call`` is the modeled per-query latency in microseconds (from
 exactly-counted events through the calibrated io_sim cost model) and
 ``derived`` is the figure's headline quantity.
+
+Every run routes through ``repro.api.Deployment``: a figure is a small
+sweep over ``ServeConfig`` search variants (``common.baton_deployment`` /
+``common.sg_deployment`` wrap the cached bench indices), and the recall /
+counters / modeled-QPS arithmetic lives in the Deployment's Report — not
+re-derived here.  Row values are bit-identical to the pre-api harness
+(trajectory-checked in CI).
 """
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks import common
-from repro.core import baton, ref, scatter_gather
 
 L_SWEEP = [24, 32, 48, 64, 96, 128]
 L_DEFAULT = 64
@@ -30,38 +34,27 @@ def _memo(fn):
     return wrapped
 
 
+def _as_row_dict(dep, rep):
+    return {
+        "recall": rep.recall, "stats": rep.stats, "qps": rep.modeled_qps,
+        "lat_s": rep.modeled_latency_s, "wall_s": rep.wall_s,
+        "ds": dep.dataset, "dep": dep, "report": rep,
+    }
+
+
 @_memo
 def _run_batann(p: int, L: int, w: int, slots: int = 32,
                 ship_lut: bool = False, lut_dtype: str = "f32"):
-    ds, idx = common.baton_index(p)
-    cfg = baton.BatonParams(L=L, W=w, k=10, pool=256, slots=slots,
-                            pair_cap=4, n_starts=4, ship_lut=ship_lut,
-                            lut_wire_dtype=lut_dtype)
-    t0 = time.time()
-    ids, dists, stats = baton.run_simulated(idx, ds.queries, cfg)
-    wall = time.time() - t0
-    rec = ref.recall_at_k(ids, ds.gt, 10)
-    qps, lat = common.batann_model(stats, p, L, 256, ds.dim,
-                                   ship_lut=ship_lut, lut_dtype=lut_dtype)
-    return {
-        "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
-        "wall_s": wall, "ds": ds,
-    }
+    dep = common.baton_deployment(p, L=L, W=w, slots=slots,
+                                  ship_lut=ship_lut,
+                                  lut_wire_dtype=lut_dtype)
+    return _as_row_dict(dep, dep.run())
 
 
 @_memo
 def _run_sg(p: int, L: int, w: int):
-    ds, idx = common.sg_index(p)
-    t0 = time.time()
-    ids, dists, stats = scatter_gather.run_simulated(idx, ds.queries, L=L,
-                                                     W=w, k=10)
-    wall = time.time() - t0
-    rec = ref.recall_at_k(ids, ds.gt, 10)
-    qps, lat = common.sg_model(stats, p)
-    return {
-        "recall": rec, "stats": stats, "qps": qps, "lat_s": lat,
-        "wall_s": wall,
-    }
+    dep = common.sg_deployment(p, L=L, W=w)
+    return _as_row_dict(dep, dep.run())
 
 
 def fig3_inter_partition_hops():
@@ -125,18 +118,14 @@ def fig7_single_server():
     Wall-clock on CPU for the vectorized state batch (our analogue of 8
     states/thread) vs batch=1, same total queries.
     """
-    ds, idx = common.baton_index(1)
+    ds, _ = common.baton_index(1)
     rows = []
     for slots, tag in ((1, "seq"), (32, "balanced")):
-        cfg = baton.BatonParams(L=L_DEFAULT, W=8, k=10, pool=256,
-                                slots=slots, n_starts=4)
-        t0 = time.time()
-        ids, _, stats = baton.run_simulated(idx, ds.queries[:64], cfg)
-        wall = time.time() - t0
-        rec = ref.recall_at_k(ids, ds.gt[:64], 10)
+        dep = common.baton_deployment(1, L=L_DEFAULT, W=8, slots=slots)
+        rep = dep.run(queries=ds.queries[:64], gt=ds.gt[:64])
         rows.append((
-            f"fig7_{tag}", wall / 64 * 1e6,
-            f"recall={rec:.3f};wall_qps={64/wall:.0f}",
+            f"fig7_{tag}", rep.wall_s / 64 * 1e6,
+            f"recall={rep.recall:.3f};wall_qps={64/rep.wall_s:.0f}",
         ))
     return rows
 
@@ -232,13 +221,8 @@ def _sim_system(tag: str, p: int):
     Memoized: fig13 and fig9_sim share the (expensive) saturation search."""
     from repro import cluster
 
-    if tag == "batann":
-        r = _run_batann(p, L_DEFAULT, w=8)
-        traces = common.batann_cluster_traces(r["stats"], r["ds"].dim,
-                                              L_DEFAULT)
-    else:
-        r = _run_sg(p, L_DEFAULT, w=8)
-        traces = common.sg_cluster_traces(r["stats"], p)
+    r = (_run_batann if tag == "batann" else _run_sg)(p, L_DEFAULT, w=8)
+    traces = r["dep"].cluster_traces(r["stats"])
     sat = cluster.find_saturation_qps(
         traces, p, n_arrivals=common.SIM_SAT_ARRIVALS, seed=0)
     return traces, sat
@@ -331,11 +315,7 @@ def sec8_ship_vs_recompute():
         else:
             # identical memo key as the fig3-fig14 runs -> cache hit
             r = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
-        from repro.core.state import envelope_bytes
-
-        env = envelope_bytes(r["ds"].dim, L_DEFAULT, 256, m=common.PQ_M,
-                             k_pq=common.PQ_K, ship_lut=ship,
-                             lut_dtype=lut_dtype)
+        env = r["report"].envelope_bytes
         luts = float(np.mean(r["stats"]["lut_builds"]))
         inter = float(np.mean(r["stats"]["inter_hops"]))
         rows.append((
@@ -410,8 +390,9 @@ def fig16_replication_skew():
                                "skew", seed=1, homes=homes)
     rows, p99 = [], {}
     # per-partition sector + adjacency bytes (vectors f32 + neighbor ids)
-    dim = _run_batann(p, L_DEFAULT, w=8)["ds"].dim      # memoized: cache hit
-    part_bytes = common.BENCH_N / p * (dim * 4 + common.R * 4)
+    from repro.api import partition_bytes
+
+    part_bytes = partition_bytes(_run_batann(p, L_DEFAULT, w=8)["dep"].index)
     for reps in (1, 2):
         params = cluster.SimParams(replicas=reps)
         r = cluster.simulate(traces, p, wl, params)
@@ -424,9 +405,24 @@ def fig16_replication_skew():
             f"mean_ms={r.mean_s*1e3:.2f};p50_ms={r.p50_s*1e3:.2f};"
             f"p99_ms={r.p99_s*1e3:.2f};replica_mb={extra_mb:.1f}",
         ))
+    # hot-partition variant: replicate only the hottest partitions under a
+    # small extra-copy budget (Placement.for_skew) — most of r2's tail
+    # relief at a fraction of its replica storage
+    budget = max(1, p // 4)
+    pl_hot = cluster.hot_placement(homes, wl.trace_idx, p, budget)
+    r = cluster.simulate(traces, p, wl, cluster.SimParams(placement=pl_hot))
+    hot_mb = COST.replica_memory_bytes(
+        part_bytes, pl_hot.copies_per_partition) / 1e6
+    rows.append((
+        f"fig16_skew_hot{budget}", r.mean_s * 1e6,
+        f"mean_ms={r.mean_s*1e3:.2f};p50_ms={r.p50_s*1e3:.2f};"
+        f"p99_ms={r.p99_s*1e3:.2f};replica_mb={hot_mb:.1f};"
+        f"budget={budget}",
+    ))
     rows.append((
         "fig16_replication_relief", 0.0,
         f"p99_relief_r2={p99[1]/max(p99[2], 1e-12):.2f}x;"
+        f"p99_relief_hot={p99[1]/max(r.p99_s, 1e-12):.2f}x;"
         f"rate_frac_of_sat=0.70",
     ))
     return rows

@@ -4,10 +4,14 @@ Prints ``name,us_per_call,derived`` CSV and writes both
 ``artifacts/bench.csv`` and machine-readable ``artifacts/bench.json``
 (keyed by row name, so the BENCH_* trajectory is diffable across PRs).
 Scale via env: BENCH_N / BENCH_Q / BENCH_P (defaults 20000/256/8).
+
+``--only <suite>[,<suite>]`` runs a subset (``--list`` names them) — the
+bench-smoke CI job and local iteration don't need the full sweep.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -22,6 +26,13 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))  # repro package
 def main() -> None:
     from benchmarks import figures
     from benchmarks.bench_kernels import kernel_rows, superstep_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite tags to run (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the suite tags and exit")
+    args = ap.parse_args()
 
     suites = [
         ("fig3", figures.fig3_inter_partition_hops),
@@ -42,6 +53,17 @@ def main() -> None:
         ("kernels", kernel_rows),
         ("superstep", superstep_rows),
     ]
+    if args.list:
+        print("\n".join(tag for tag, _ in suites))
+        return
+    if args.only:
+        want = [t.strip() for t in args.only.split(",") if t.strip()]
+        known = {tag for tag, _ in suites}
+        unknown = [t for t in want if t not in known]
+        if unknown:
+            raise SystemExit(
+                f"unknown suite(s) {unknown}; known: {sorted(known)}")
+        suites = [(tag, fn) for tag, fn in suites if tag in want]
     all_rows = []
     print("name,us_per_call,derived")
     for tag, fn in suites:

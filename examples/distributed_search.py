@@ -2,6 +2,11 @@
 (shard_map + all_to_all) vs the single-host simulation — results must match
 bit-exactly — plus a failover demonstration.
 
+Deliberately drives the engine internals *below* the ``repro.api`` service
+layer (device states, shard pytrees, SPMD bodies): this is the one example
+about the execution substrate itself, not the serving pipeline — start from
+``examples/quickstart.py`` for the Deployment-level API.
+
     PYTHONPATH=src python examples/distributed_search.py
 """
 

@@ -1,61 +1,54 @@
-"""Quickstart: build a BatANN index and search it.
+"""Quickstart: build a BatANN index and search it — through ``repro.api``.
 
     PYTHONPATH=src python examples/quickstart.py [n_points]
 
-Builds a global Vamana graph over synthetic DEEP-like vectors, partitions it
-across 4 simulated servers, runs the distributed baton search, and reports
-recall@10 + the paper's efficiency counters.
+One config, one facade: the ``batann-quickstart`` :class:`ServeConfig`
+describes the whole scenario (synthetic DEEP-like vectors, a global Vamana
+graph partitioned across 4 simulated servers, the baton search params), and
+``Deployment.from_config(cfg).run()`` executes it — returning a Report with
+recall@10, the paper's efficiency counters, and modeled cluster QPS/latency.
+
+Swapping in the scatter-gather baseline (or the brute-force oracle) is a
+one-line config change: ``cfg.with_updates(index={"engine":
+"scatter_gather"})``.
 """
 
 import sys
 import time
 
-import numpy as np
-
-from repro.core import baton, ref
-from repro.data import synth
-from repro.io_sim.disk import DEFAULT as COST
-from repro.core.state import envelope_bytes
+from repro.api import Deployment
+from repro.configs.registry import get_serve_config
 
 
 def main():
-    n = int(sys.argv[1]) if len(sys.argv) > 1 else 4000
-    print(f"== BatANN quickstart: {n} points, 4 servers ==")
-    ds = synth.make_dataset("deep", n=n, n_queries=64, seed=0)
+    cfg = get_serve_config("batann-quickstart")
+    if len(sys.argv) > 1:
+        cfg = cfg.with_updates(data={"n": int(sys.argv[1])})
+    print(f"== BatANN quickstart: {cfg.data.n} points, "
+          f"{cfg.index.p} servers ==")
 
     t0 = time.time()
-    index = baton.build_index(ds.vectors, p=4, r=24, l_build=48, pq_m=24,
-                              pq_k=256, head_fraction=0.02)
+    dep = Deployment.from_config(cfg)
     print(f"index built in {time.time()-t0:.0f}s "
-          f"(global Vamana R=24, LDG partitioning, PQ-24, 1% head index)")
+          f"(global Vamana R={cfg.index.r}, LDG partitioning, "
+          f"PQ-{cfg.index.pq_m}, "
+          f"{cfg.index.head_fraction:.0%} head index)")
 
-    cfg = baton.BatonParams(L=48, W=8, k=10, pool=256, slots=32)
-    t0 = time.time()
-    ids, dists, stats = baton.run_simulated(index, ds.queries, cfg)
-    print(f"searched {len(ds.queries)} queries in {time.time()-t0:.1f}s "
-          f"(single-host simulation of 4 servers)")
+    rep = dep.run()
+    print(f"searched {rep.n_queries} queries in {rep.wall_s:.1f}s "
+          f"(single-host simulation of {cfg.index.p} servers)")
 
-    rec = ref.recall_at_k(ids, ds.gt, 10)
-    print(f"\nrecall@10          : {rec:.3f}")
-    print(f"hops/query         : {stats['hops'].mean():.1f}")
-    print(f"inter-partition    : {stats['inter_hops'].mean():.2f} "
-          f"({stats['inter_hops'].sum()/stats['hops'].sum():.1%} of hops)")
-    print(f"disk reads/query   : {stats['reads'].mean():.1f}")
-    print(f"dist comps/query   : {stats['dist_comps'].mean():.0f}")
-    pq_m, pq_k = index.codebook.shape[:2]
-    env = envelope_bytes(ds.dim, cfg.L, cfg.pool, m=pq_m, k_pq=pq_k,
-                         ship_lut=cfg.ship_lut)
-    qps = COST.cluster_qps(4, stats['reads'].mean(),
-                           stats['dist_comps'].mean(),
-                           stats['inter_hops'].mean(), env,
-                           lut_builds_per_query=stats['lut_builds'].mean())
-    lat = COST.query_latency_s(stats['hops'].mean(),
-                               stats['inter_hops'].mean(),
-                               stats['reads'].mean(),
-                               stats['dist_comps'].mean(), env,
-                               lut_builds=stats['lut_builds'].mean())
-    print(f"modeled cluster QPS: {qps:.0f} (paper's c6620 cost model)")
-    print(f"modeled latency    : {lat*1e3:.2f} ms")
+    c = rep.counters
+    s = rep.stats
+    print(f"\nrecall@{rep.k}          : {rep.recall:.3f}")
+    print(f"hops/query         : {c['hops']:.1f}")
+    print(f"inter-partition    : {c['inter_hops']:.2f} "
+          f"({s['inter_hops'].sum()/s['hops'].sum():.1%} of hops)")
+    print(f"disk reads/query   : {c['reads']:.1f}")
+    print(f"dist comps/query   : {c['dist_comps']:.0f}")
+    print(f"modeled cluster QPS: {rep.modeled_qps:.0f} "
+          f"(paper's c6620 cost model)")
+    print(f"modeled latency    : {rep.modeled_latency_s*1e3:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,11 @@ A RAG pipeline: BatANN retrieves document chunks from the distributed
 disk-based index; a small LM tenant generates continuations conditioned on
 the retrieved context — the deployment that motivates the paper (§1).
 
+Retrieval routes through the ``repro.api`` service layer: the system's
+retrieval tier is a ``Deployment`` (engine + index + search params), so the
+same RAG code serves the scatter-gather baseline or the brute-force oracle
+via a one-line engine swap in its ``ServeConfig``.
+
     PYTHONPATH=src python examples/rag_serve.py
 """
 
@@ -37,7 +42,8 @@ def main():
     tokens, retrieved, stats = system.answer(queries, prompts, max_new=8)
     dt = time.time() - t0
     hit = (retrieved[:, 0] == targets).mean()
-    print(f"\nserved 8 requests in {dt:.1f}s")
+    print(f"\nserved 8 requests in {dt:.1f}s "
+          f"({system.deployment.engine.name} retrieval engine)")
     print(f"retrieval rank-1 hit rate : {hit:.0%}")
     print(f"retrieval hops/query      : {stats['hops'].mean():.1f} "
           f"(inter-partition {stats['inter_hops'].mean():.2f})")

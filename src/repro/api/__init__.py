@@ -1,0 +1,25 @@
+"""``repro.api`` — the unified service layer over the BatANN reproduction.
+
+Three pieces (see ISSUE/README):
+
+* :class:`Engine` — one protocol over the baton engine, the scatter-gather
+  baseline, and the brute-force oracle (``BatonEngine`` /
+  ``ScatterGatherEngine`` / ``ExactEngine``), with uniform stats.
+* :class:`Deployment` — the facade owning index + search params + cost
+  model + cluster-sim scenario; ``Deployment.from_config(cfg).run(queries)``
+  returns a structured :class:`Report`.
+* :class:`ServeConfig` — the declarative config (dataset/index/search/sim
+  sections, JSON round-trip, named presets via
+  ``configs.registry.get_serve_config``).
+"""
+
+from repro.api.engine import (            # noqa: F401
+    ENGINES, BatonEngine, Engine, ExactEngine, ExactIndex,
+    ScatterGatherEngine, SearchResult, STAT_KEYS, get_engine,
+)
+from repro.api.deployment import (        # noqa: F401
+    Deployment, REPORT_FIELDS, Report, SIM_FIELDS, partition_bytes,
+)
+from repro.configs.batann_serve import (  # noqa: F401
+    DataSpec, IndexSpec, SearchParams, ServeConfig, SimSpec,
+)

@@ -1,0 +1,304 @@
+"""The ``Deployment`` facade: index + params + cost model + cluster scenario.
+
+``Deployment.from_config(ServeConfig(...)).run(queries)`` is the single
+pipeline every entry point routes through — it owns the dataset, the engine
+(and its index), the calibrated :class:`CostModel`, and the discrete-event
+cluster-simulator scenario, and returns a structured :class:`Report`:
+recall, the paper's per-query counters, envelope bytes, closed-form modeled
+QPS/latency, and (when ``sim.send_rate > 0``) simulated p50/p99 under load.
+
+Index builds are cacheable: :meth:`Deployment.save` / :meth:`Deployment.load`
+persist the engine's index through ``checkpoint/ckpt.py`` (atomic commit),
+keyed by ``ServeConfig.index_key()`` — the hash of the dataset+index
+sections, so a config change that affects the build invalidates the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+
+import numpy as np
+
+from repro.api.engine import SearchResult, get_engine
+from repro.checkpoint import ckpt
+from repro.configs.batann_serve import ServeConfig, parse_straggler
+from repro.core import ref
+from repro.data import synth
+from repro.io_sim.disk import DEFAULT as COST, CostModel
+
+# Report.to_dict() key schema — pinned by tests/test_api.py.  Grow-only:
+# removing or renaming a field is an API break for downstream consumers.
+REPORT_FIELDS = (
+    "config", "engine", "n_queries", "k", "recall", "counters",
+    "envelope_bytes", "modeled_qps", "modeled_latency_s", "bottleneck",
+    "wall_s", "sim",
+)
+SIM_FIELDS = (
+    "rate_qps", "arrival", "offered", "completed", "mean_s", "p50_s",
+    "p95_s", "p99_s", "saturation_qps", "sat_criterion", "cache_hit_rate",
+    "cache_memory_bytes", "replicas", "replica_memory_bytes", "scenario",
+)
+
+
+@dataclasses.dataclass
+class Report:
+    """Structured outcome of one ``Deployment.run`` — the numbers every
+    entry point used to recompute by hand, in one schema-stable place.
+
+    ``ids``/``dists``/``stats`` carry the raw per-query search output for
+    callers that post-process (the benchmark figures); they are not part of
+    the ``to_dict`` schema.
+    """
+
+    config: str
+    engine: str
+    n_queries: int
+    k: int
+    recall: float | None
+    counters: dict            # mean per-query STAT_KEYS counters
+    envelope_bytes: int
+    modeled_qps: float
+    modeled_latency_s: float
+    bottleneck: str
+    wall_s: float
+    sim: dict | None          # SIM_FIELDS when sim.send_rate > 0, else None
+    ids: np.ndarray = dataclasses.field(repr=False, default=None)
+    dists: np.ndarray = dataclasses.field(repr=False, default=None)
+    stats: dict = dataclasses.field(repr=False, default=None)
+
+    def to_dict(self) -> dict:
+        return {f: getattr(self, f) for f in REPORT_FIELDS}
+
+
+def _straggler_multipliers(spec: str, n_servers: int):
+    """'0:4.0,2:1.5' -> per-server read multipliers tuple (or None).
+    Format/range were validated at ServeConfig construction."""
+    pairs = parse_straggler(spec)
+    if not pairs:
+        return None
+    mult = [1.0] * n_servers
+    for srv, m in pairs:
+        if not 0 <= srv < n_servers:
+            raise ValueError(
+                f"straggler server {srv} out of range 0..{n_servers - 1}")
+        mult[srv] = m
+    return tuple(mult)
+
+
+@dataclasses.dataclass
+class Deployment:
+    """An engine + its index + search params + cluster scenario, composed."""
+
+    config: ServeConfig
+    engine: object                      # repro.api.engine.Engine
+    dataset: "synth.Dataset | None" = None
+    cost: CostModel = COST
+
+    # --- constructors ------------------------------------------------------
+    @classmethod
+    def from_config(cls, config: ServeConfig,
+                    index_cache: str | None = None,
+                    dataset: "synth.Dataset | None" = None) -> "Deployment":
+        """Build (or load from ``index_cache``) the configured deployment."""
+        ds = dataset if dataset is not None else synth.make_dataset(
+            config.data.name, n=config.data.n,
+            n_queries=config.data.n_queries, seed=config.data.seed)
+        dep = cls(config=config, engine=get_engine(config.index.engine),
+                  dataset=ds)
+        cache_dir = (os.path.join(index_cache, config.index_key())
+                     if index_cache else None)
+        if cache_dir and ckpt.latest_step(cache_dir) is not None:
+            tree, meta = _restore_index(cache_dir)
+            dep.engine.load_index(tree, meta)
+            return dep
+        dep.engine.build(ds, config.index)
+        if cache_dir:
+            dep.save(cache_dir)
+        return dep
+
+    @classmethod
+    def from_parts(cls, config: ServeConfig, engine,
+                   dataset: "synth.Dataset | None" = None,
+                   cost: CostModel = COST) -> "Deployment":
+        """Wrap a pre-built engine/index (e.g. the benchmarks' cached
+        indices) under a config — no build."""
+        return cls(config=config, engine=engine, dataset=dataset, cost=cost)
+
+    # --- convenience -------------------------------------------------------
+    @property
+    def index(self):
+        return self.engine.index
+
+    @property
+    def n_servers(self) -> int:
+        return self.engine.index.p
+
+    @property
+    def dim(self) -> int:
+        return self.engine.index.dim
+
+    def search(self, queries) -> SearchResult:
+        """Raw engine search under the config's search params."""
+        return self.engine.search(queries, self.config.search)
+
+    def cluster_traces(self, stats: dict) -> list:
+        """Replayable per-query traces for ``repro.cluster``."""
+        return self.engine.cluster_traces(stats, self.config.search, self.dim)
+
+    # --- the pipeline ------------------------------------------------------
+    def run(self, queries=None, gt=None) -> Report:
+        """Search -> recall -> counters -> cost model -> (optional) cluster
+        simulation, in one Report."""
+        if (self.config.sim.send_rate > 0
+                and not getattr(self.engine, "has_traces", True)):
+            # fail fast — before the (expensive) search, not after it
+            raise ValueError(
+                f"engine '{self.engine.name}' emits no cluster traces; "
+                f"set sim.send_rate=0 (drop --send-rate) or pick a "
+                f"trace-emitting engine")
+        if queries is None:
+            queries = self.dataset.queries
+            if gt is None:
+                gt = self.dataset.gt
+        res = self.search(queries)
+        sp = self.config.search
+        recall = (ref.recall_at_k(res.ids, gt, sp.k)
+                  if gt is not None else None)
+        qps, lat = self.engine.model(res.stats, sp, self.dim)
+        sim = (self._simulate(res.stats)
+               if self.config.sim.send_rate > 0 else None)
+        return Report(
+            config=self.config.name, engine=self.engine.name,
+            n_queries=len(queries), k=sp.k, recall=recall,
+            counters=res.counters(),
+            envelope_bytes=self.engine.envelope_bytes(self.dim, sp),
+            modeled_qps=qps, modeled_latency_s=lat,
+            bottleneck=self.engine.bottleneck(res.stats, sp, self.dim),
+            wall_s=res.wall_s, sim=sim,
+            ids=res.ids, dists=res.dists, stats=res.stats,
+        )
+
+    def sim_params(self, placement=None):
+        """The cluster-simulator ``SimParams`` of this scenario.  When the
+        config asks for hot-partition replication (``replicas="hot:<b>"``)
+        the caller supplies the load-derived ``placement`` (from
+        ``cluster.hot_placement`` — ``_simulate`` derives it from the
+        workload's arrivals)."""
+        from repro import cluster
+
+        sim = self.config.sim
+        replicas = 1
+        if placement is None:
+            if str(sim.replicas).startswith("hot"):
+                raise ValueError(
+                    f"replicas={sim.replicas!r} needs a load-derived "
+                    f"placement (cluster.hot_placement); refusing to fall "
+                    f"back to identity placement")
+            replicas = int(sim.replicas)
+        return cluster.SimParams(
+            cache_sectors=sim.cache_sectors, warm_cache=sim.warm_cache,
+            replicas=replicas, placement=placement,
+            read_mult=_straggler_multipliers(sim.straggler, self.n_servers),
+        )
+
+    def _simulate(self, stats: dict) -> dict:
+        """The serve launcher's event-simulator block, config-driven."""
+        from repro import cluster
+
+        sim = self.config.sim
+        p = self.n_servers
+        traces = self.cluster_traces(stats)
+        homes = cluster.trace_homes(traces)
+        wl = cluster.make_workload(len(traces), sim.send_rate,
+                                   sim.n_arrivals, sim.arrival,
+                                   seed=sim.seed, homes=homes)
+        placement = None
+        if str(sim.replicas).startswith("hot"):
+            budget = int(str(sim.replicas).split(":")[1])
+            placement = cluster.hot_placement(homes, wl.trace_idx, p, budget)
+        params = self.sim_params(placement)
+        sat = cluster.find_saturation_qps(traces, p, params, seed=sim.seed,
+                                          criterion=sim.sat_criterion)
+        res = cluster.simulate(traces, p, wl, params)
+        pl = params.resolve_placement(p, p)
+        part_bytes = partition_bytes(self.engine.index)
+        scenario = (f"cache={sim.cache_sectors}"
+                    f"{'(warm)' if sim.warm_cache else ''} "
+                    f"replicas={sim.replicas} "
+                    f"straggler={sim.straggler or '-'}")
+        return {
+            "rate_qps": sim.send_rate, "arrival": sim.arrival,
+            "offered": res.offered, "completed": res.completed,
+            "mean_s": res.mean_s, "p50_s": res.p50_s, "p95_s": res.p95_s,
+            "p99_s": res.p99_s, "saturation_qps": sat,
+            "sat_criterion": sim.sat_criterion,
+            "cache_hit_rate": res.cache_hit_rate,
+            "cache_memory_bytes":
+                self.cost.cache_memory_bytes(sim.cache_sectors),
+            "replicas": str(sim.replicas),
+            "replica_memory_bytes": self.cost.replica_memory_bytes(
+                part_bytes, pl.copies_per_partition),
+            "scenario": scenario,
+        }
+
+    # --- index persistence (checkpoint/ckpt.py) ----------------------------
+    def save(self, directory: str) -> str:
+        """Persist the engine's index (atomic commit; see ckpt.py)."""
+        tree, meta = self.engine.index_state()
+        return ckpt.save(directory, step=0, tree=tree, extra={
+            "engine": self.engine.name, "meta": meta,
+            "index_key": self.config.index_key(),
+            "config": self.config.to_dict(),
+        })
+
+    @classmethod
+    def load(cls, directory: str, config: ServeConfig | None = None,
+             dataset: "synth.Dataset | None" = None) -> "Deployment":
+        """Rebuild a Deployment from a saved index.  ``config`` defaults to
+        the one stored alongside the index."""
+        tree, extra = _restore_index(directory, with_extra=True)
+        cfg = config or ServeConfig.from_dict(extra["config"])
+        eng = get_engine(extra["engine"])
+        eng.load_index(tree, extra["meta"])
+        return cls(config=cfg, engine=eng, dataset=dataset)
+
+
+def partition_bytes(index) -> float:
+    """Per-partition storage footprint (f32 vectors + int32 neighbor ids) —
+    what one extra replica copy actually duplicates; the quantity
+    ``CostModel.replica_memory_bytes`` prices for the serve launcher's
+    replica scenarios and the fig16 benchmark rows alike."""
+    nbr = getattr(index, "part_neighbors", None)
+    return (index.n / index.p) * (
+        index.dim * 4 + (nbr.shape[-1] * 4 if nbr is not None else 0))
+
+
+# ckpt stores flat-dict trees; keystr renders each key as "['name']"
+_DICT_KEY_RE = re.compile(r"\['(.+)'\]")
+
+
+def _restore_index(directory: str, with_extra: bool = False):
+    """Restore a ckpt-saved index tree without knowing its leaves upfront:
+    the manifest lists every array's path/shape/dtype, so the ``tree_like``
+    that ``ckpt.restore`` wants is reconstructible from the manifest alone.
+    """
+    import json
+
+    step = ckpt.latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no committed index checkpoint in {directory}")
+    with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
+        manifest = json.load(f)
+    tree_like = {}
+    for meta in manifest["arrays"]:
+        m = _DICT_KEY_RE.fullmatch(meta["path"])
+        if m is None:
+            raise ValueError(f"unexpected ckpt leaf path: {meta['path']}")
+        tree_like[m.group(1)] = np.empty(meta["shape"],
+                                         np.dtype(meta["dtype"]))
+    tree, _, extra = ckpt.restore(directory, tree_like, step=step)
+    if with_extra:
+        return tree, extra
+    return tree, extra["meta"]

@@ -17,6 +17,6 @@ from repro.cluster.stages import (         # noqa: F401
 )
 from repro.cluster.sim import (            # noqa: F401
     SimParams, SimResult, backlog_growing, capacity_qps,
-    find_saturation_qps, latency_vs_rate, simulate, trace_homes,
-    zero_load_result,
+    find_saturation_qps, hot_placement, latency_vs_rate, simulate,
+    trace_homes, zero_load_result,
 )

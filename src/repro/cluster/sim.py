@@ -426,6 +426,18 @@ def trace_homes(traces) -> np.ndarray:
     return np.asarray([t.home for t in traces])
 
 
+def hot_placement(homes, trace_idx, n_servers: int,
+                  budget: int) -> Placement:
+    """Load-derived hot-partition replication: count a workload's arrivals
+    per home partition and replicate only the hottest under ``budget``
+    extra copies (``Placement.for_skew``).  The one derivation both the
+    serve launcher's ``--replicas hot:<budget>`` and the fig16 hot row use.
+    """
+    loads = np.bincount(np.asarray(homes)[np.asarray(trace_idx)],
+                        minlength=n_servers)
+    return Placement.for_skew(loads.tolist(), n_servers, budget)
+
+
 def capacity_qps(traces, n_servers: int,
                  params: "SimParams | None" = None) -> float:
     """Analytic throughput upper bound: 1 / max per-server resource demand.

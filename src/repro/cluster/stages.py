@@ -400,6 +400,34 @@ class Placement:
             for p in range(n_parts)
         ))
 
+    @staticmethod
+    def for_skew(loads, n_servers: int, budget: int) -> "Placement":
+        """Replicate only the *hottest* partitions under an extra-copy budget
+        (ROADMAP "smarter replication": ring-replicating everything pays
+        DRAM for partitions nobody is hammering).
+
+        ``loads[p]`` is the observed load of partition ``p`` (e.g. arrivals
+        homed there); ``budget`` is the total number of *extra* copies to
+        spend.  Copies are granted greedily to the partition with the
+        highest load-per-copy (ties break toward the lower partition index
+        — deterministic), each landing on the next ring server.  The DRAM
+        delta is priced via ``CostModel.replica_memory_bytes`` with this
+        placement's ``copies_per_partition``.
+        """
+        n_parts = len(loads)
+        copies = [[p % n_servers] for p in range(n_parts)]
+        for _ in range(max(0, int(budget))):
+            candidates = [p for p in range(n_parts)
+                          if len(copies[p]) < n_servers]
+            if not candidates:
+                break
+            best = max(candidates,
+                       key=lambda p: (loads[p] / len(copies[p]), -p))
+            if loads[best] <= 0:
+                break              # nothing hot left to relieve
+            copies[best].append((best + len(copies[best])) % n_servers)
+        return Placement(tuple(tuple(c) for c in copies))
+
     @property
     def n_parts(self) -> int:
         return len(self.replicas)

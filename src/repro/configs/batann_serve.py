@@ -1,9 +1,251 @@
-"""The paper's own workload: BatANN serving a partitioned billion-scale index.
+"""The paper's own workload as *configuration* — two surfaces:
 
-Not an LM config — this drives the vector-search serve_step in the dry-run
-(one super-step of the baton engine on the production mesh).
+* :class:`ServeConfig` — the declarative config of the ``repro.api`` service
+  layer: dataset / index / search / sim sections that fully describe a
+  deployment scenario.  ``Deployment.from_config(cfg).run(queries)`` is the
+  single pipeline every entry point (``launch/serve.py``, the examples, the
+  benchmark figures) routes through.  JSON round-trips losslessly
+  (``to_json``/``from_json``) and ``configs.registry.get_serve_config``
+  resolves named presets.
+
+* :class:`BatannServeConfig` — the production-mesh dry-run config (one
+  super-step of the baton engine on the 512-chip mesh; see
+  ``launch/dryrun.py``).  Kept as-is: the dry run shapes a 1B-point
+  deployment, not a host-simulated one.
 """
+
+from __future__ import annotations
+
 import dataclasses
+import hashlib
+import json
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig — the repro.api declarative deployment config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Dataset section: which synthetic workload to serve (``data.synth``)."""
+
+    name: str = "deep"          # synth.SPECS key (deep | bigann | msspacev)
+    n: int = 20000              # dataset points
+    n_queries: int = 256
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Index section: engine choice + everything the build needs.
+
+    ``graph_mode`` picks the global-graph construction: ``"knn"`` (exact
+    kNN candidates pruned by ``vamana.build_from_knn`` — the fast path the
+    serve launcher and benchmarks use) or ``"vamana"`` (full
+    ``vamana.build``, the quickstart path).
+    """
+
+    engine: str = "baton"       # baton | scatter_gather | exact
+    p: int = 8                  # partitions == simulated servers
+    graph_mode: str = "knn"     # "knn" | "vamana"
+    knn_k: int = 17             # kNN candidates per node for graph_mode=knn
+    r: int = 32                 # graph degree R
+    l_build: int = 64           # vamana build beam (graph_mode="vamana")
+    alpha: float = 1.2
+    pq_m: int = 24
+    pq_k: int = 256
+    head_fraction: float = 0.01
+    partitioner: str = "ldg"    # ldg | kmeans | random
+    codes_mode: str = "replicated"  # replicated | sector (AiSAQ layout)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Search section: mirrors ``baton.BatonParams`` (the scatter-gather and
+    exact engines consume the subset that applies to them)."""
+
+    L: int = 64
+    W: int = 8
+    k: int = 10
+    pool: int = 256
+    slots: int = 32
+    pair_cap: int = 4
+    result_cap: int = 8
+    n_starts: int = 4
+    ship_lut: bool = False
+    lut_wire_dtype: str = "f32"   # f32 | f16 | i8 (§8 wire-LUT variants)
+    lazy_queue_lut: bool = False
+    fused: bool = True
+    adc_impl: str = "gather"      # gather | mxu
+    merge_impl: str = "lexsort"   # lexsort | bitonic
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """Cluster-simulator section (``repro.cluster`` scenario knobs).
+
+    ``send_rate == 0`` disables the discrete-event replay; the Report then
+    carries only the closed-form modeled QPS/latency.  ``replicas`` is an
+    int (ring placement, every partition replicated) or ``"hot:<budget>"``
+    (replicate only the hottest partitions under an extra-copy budget —
+    ``Placement.for_skew``).
+    """
+
+    send_rate: float = 0.0
+    arrival: str = "poisson"     # poisson | burst | skew
+    n_arrivals: int = 2000
+    cache_sectors: int = 0
+    warm_cache: bool = False
+    replicas: str = "1"          # "<int>" or "hot:<extra-copy budget>"
+    straggler: str = ""          # e.g. "0:4.0,2:1.5" per-server SSD mult
+    sat_criterion: str = "latency"  # latency | backlog | both
+    seed: int = 0
+
+    def __post_init__(self):
+        # validate at construction (CLI overrides and JSON configs alike)
+        # instead of deep inside the simulator after the index build
+        r = str(self.replicas)
+        spec = r.split(":", 1)[1] if r.startswith("hot:") else r
+        try:
+            int(spec)
+        except ValueError:
+            raise ValueError(
+                f"replicas must be '<int>' or 'hot:<int>': {self.replicas!r}"
+            ) from None
+        parse_straggler(self.straggler)
+
+
+def parse_straggler(spec: str) -> list[tuple[int, float]]:
+    """'0:4.0,2:1.5' -> [(0, 4.0), (2, 1.5)].  The one parser every
+    consumer shares: SimSpec format validation, ServeConfig range
+    validation, and the deployment's SimParams assembly."""
+    if not spec:
+        return []
+    out = []
+    for tok in spec.split(","):
+        parts = tok.split(":")
+        try:
+            if len(parts) != 2:
+                raise ValueError
+            out.append((int(parts[0]), float(parts[1])))
+        except ValueError:
+            raise ValueError(
+                f"straggler must be '<server>:<mult>[,..]' (e.g. "
+                f"'0:4.0,2:1.5'): {spec!r}") from None
+    return out
+
+
+_SECTIONS = {"data": DataSpec, "index": IndexSpec, "search": SearchParams,
+             "sim": SimSpec}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One deployment scenario: dataset + index + search + sim, declaratively.
+
+    ``Deployment.from_config(ServeConfig(...))`` builds the whole pipeline;
+    every field overridable via :meth:`with_updates` (the serve launcher's
+    CLI flags are exactly such overrides).
+    """
+
+    name: str = "batann-serve"
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    index: IndexSpec = dataclasses.field(default_factory=IndexSpec)
+    search: SearchParams = dataclasses.field(default_factory=SearchParams)
+    sim: SimSpec = dataclasses.field(default_factory=SimSpec)
+
+    def __post_init__(self):
+        # cross-section check the sections can't do alone: straggler server
+        # indices must address real servers — caught here, at config
+        # construction, not after the (expensive) index build
+        for srv, _ in parse_straggler(self.sim.straggler):
+            if not 0 <= srv < self.index.p:
+                raise ValueError(
+                    f"straggler server {srv} out of range "
+                    f"0..{self.index.p - 1}")
+
+    # --- overrides ---------------------------------------------------------
+    def with_updates(self, name: str | None = None, **sections
+                     ) -> "ServeConfig":
+        """New config with per-section field updates:
+        ``cfg.with_updates(index={"p": 4}, search={"L": 32})``."""
+        out = self if name is None else dataclasses.replace(self, name=name)
+        for sec, updates in sections.items():
+            if sec not in _SECTIONS:
+                raise KeyError(
+                    f"unknown section '{sec}'; known: {sorted(_SECTIONS)}")
+            updates = {k: v for k, v in updates.items() if v is not None}
+            out = dataclasses.replace(
+                out, **{sec: dataclasses.replace(getattr(out, sec), **updates)}
+            )
+        return out
+
+    # --- JSON round-trip ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        kw = {"name": d.get("name", "batann-serve")}
+        for sec, typ in _SECTIONS.items():
+            kw[sec] = typ(**d.get(sec, {}))
+        return cls(**kw)
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServeConfig":
+        return cls.from_dict(json.loads(s))
+
+    # --- index-cache key ---------------------------------------------------
+    def index_key(self) -> str:
+        """Stable hash of the fields that determine the built index
+        (dataset + index sections) — the key of ``Deployment`` save/load
+        caching.  ``n_queries`` is excluded: the query batch rides beside
+        the index, so changing it must not invalidate the cache."""
+        data = dataclasses.asdict(self.data)
+        data.pop("n_queries")
+        payload = json.dumps(
+            {"data": data, "index": dataclasses.asdict(self.index)},
+            sort_keys=True,
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+# Named presets (configs.registry.get_serve_config resolves these).
+SERVE_CONFIGS = {
+    # the serve launcher's defaults (paper-shaped host simulation)
+    "batann-serve": ServeConfig(),
+    # the quickstart example: small index, full vamana build
+    "batann-quickstart": ServeConfig(
+        name="batann-quickstart",
+        data=DataSpec(n=4000, n_queries=64),
+        index=IndexSpec(p=4, graph_mode="vamana", r=24, l_build=48,
+                        head_fraction=0.02),
+        search=SearchParams(L=48),
+    ),
+    # CI / test scale: seconds, not minutes
+    "batann-serve-smoke": ServeConfig(
+        name="batann-serve-smoke",
+        data=DataSpec(n=1500, n_queries=32),
+        index=IndexSpec(p=4, r=20),
+        search=SearchParams(L=32, slots=16),
+        sim=SimSpec(n_arrivals=300),
+    ),
+    # one-line engine swap: the scatter-gather baseline at serve defaults
+    "batann-serve-sg": ServeConfig(
+        name="batann-serve-sg",
+        index=IndexSpec(engine="scatter_gather"),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# BatannServeConfig — the production-mesh dry-run workload (launch/dryrun.py)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,3 +31,23 @@ def get_config(arch_id: str):
 def get_smoke_config(arch_id: str):
     """Reduced same-family config for CPU smoke tests."""
     return importlib.import_module(_MODULES[arch_id]).smoke_config()
+
+
+# --- repro.api serve configs (deployment scenarios, not LM archs) ----------
+
+
+def serve_config_ids() -> list[str]:
+    from repro.configs.batann_serve import SERVE_CONFIGS
+
+    return sorted(SERVE_CONFIGS)
+
+
+def get_serve_config(name: str):
+    """``--config <name>`` of the serve launcher resolves here: a named
+    :class:`repro.configs.batann_serve.ServeConfig` preset."""
+    from repro.configs.batann_serve import SERVE_CONFIGS
+
+    if name not in SERVE_CONFIGS:
+        raise KeyError(
+            f"unknown serve config '{name}'; known: {sorted(SERVE_CONFIGS)}")
+    return SERVE_CONFIGS[name]

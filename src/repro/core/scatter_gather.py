@@ -51,10 +51,29 @@ def build_index(
     seed: int = 0,
     assign: np.ndarray | None = None,
     global_graph: "vamana.VamanaGraph | None" = None,
+    graph_mode: str = "vamana",
+    knn_k: int = 17,
 ) -> ScatterGatherIndex:
-    """Independent per-partition Vamana indices over a shared partitioning."""
+    """Independent per-partition graphs over a shared partitioning.
+
+    ``graph_mode`` picks the per-partition (and, for LDG partitioning, the
+    global) graph construction: ``"vamana"`` runs the full incremental
+    build; ``"knn"`` prunes exact kNN candidates (``knn_k`` per node) with
+    ``vamana.build_from_knn`` — the fast path the benchmarks use.
+    """
+    if graph_mode not in ("knn", "vamana"):
+        raise ValueError(f"graph_mode must be knn|vamana: {graph_mode}")
     vectors = np.ascontiguousarray(vectors, np.float32)
     n, d = vectors.shape
+
+    def build_graph(pts: np.ndarray, s: int) -> "vamana.VamanaGraph":
+        if graph_mode == "knn":
+            from repro.core import ref
+
+            knn = ref.brute_force_knn(pts, pts, knn_k)[:, 1:]
+            return vamana.build_from_knn(pts, knn, r=r, alpha=alpha)
+        return vamana.build(pts, r=r, l_build=l_build, alpha=alpha, seed=s)
+
     if assign is None:
         if partitioner == "kmeans":
             assign = part_mod.balanced_kmeans(vectors, p, seed=seed)
@@ -62,9 +81,8 @@ def build_index(
             assign = part_mod.random_partition(n, p, seed=seed)
         else:
             # paper: same partitioning method as BatANN [12] -> needs a graph
-            g = global_graph if global_graph is not None else vamana.build(
-                vectors, r=r, l_build=l_build, alpha=alpha, seed=seed
-            )
+            g = (global_graph if global_graph is not None
+                 else build_graph(vectors, seed))
             assign = part_mod.ldg_partition(g.neighbors, p, seed=seed)
 
     _, _, local2global, sizes = part_mod.build_maps(assign, p)
@@ -81,7 +99,7 @@ def build_index(
         ids = local2global[pi]
         ok = ids >= 0
         sub = vectors[ids[ok]]
-        g = vamana.build(sub, r=r, l_build=l_build, alpha=alpha, seed=seed + pi)
+        g = build_graph(sub, seed + pi)
         part_vectors[pi, ok] = sub
         part_neighbors[pi, ok] = g.neighbors
         part_codes[pi, ok] = codes[ids[ok]]

@@ -1,11 +1,19 @@
 """Serving launcher for the BatANN index (the paper's workload).
 
-    PYTHONPATH=src python -m repro.launch.serve --n 20000 --servers 8 \
-        --queries 256 --L 64 --W 8 [--sector-codes]
+    PYTHONPATH=src python -m repro.launch.serve --config batann-serve \
+        [--n 20000 --servers 8 --queries 256 --L 64 --W 8 ...]
+
+Config-driven: ``--config <name>`` picks a :class:`ServeConfig` preset
+(``configs.registry.get_serve_config``); every other flag is an *override*
+over that config.  The pipeline itself — dataset → index → search → cost
+model → cluster simulation — is ``repro.api.Deployment``, shared with the
+examples and the benchmark figures.
 
 Builds (or loads a cached) index over synthetic vectors and serves a batch
-of queries through the baton engine, reporting recall + the paper's
-efficiency counters + modeled cluster QPS/latency.
+of queries, reporting recall + the paper's efficiency counters + modeled
+cluster QPS/latency; ``--index-cache DIR`` persists the built index keyed
+by the config's dataset+index sections (``ServeConfig.index_key``), so
+re-runs with the same index config skip the build.
 """
 
 from __future__ import annotations
@@ -13,148 +21,159 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core import baton, ref
-from repro.core.state import envelope_bytes
-from repro.data import synth
-from repro.io_sim.disk import DEFAULT as COST
+from repro.api import Deployment
+from repro.configs.registry import get_serve_config, serve_config_ids
 
 
-def main():
+def build_argparser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=20000)
-    ap.add_argument("--servers", type=int, default=8)
-    ap.add_argument("--queries", type=int, default=256)
-    ap.add_argument("--L", type=int, default=64)
-    ap.add_argument("--W", type=int, default=8)
-    ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--slots", type=int, default=32)
-    ap.add_argument("--sector-codes", action="store_true",
+    ap.add_argument("--config", default="batann-serve",
+                    help=f"ServeConfig preset to start from "
+                         f"(known: {serve_config_ids()}); every other flag "
+                         f"overrides a config field")
+    ap.add_argument("--index-cache", default=None, metavar="DIR",
+                    help="load a cached index from DIR (keyed by the "
+                         "config's dataset+index sections) or build and "
+                         "save one there")
+    ap.add_argument("--engine", default=None,
+                    choices=["baton", "scatter_gather", "exact"],
+                    help="one-line engine swap: the baton engine (default), "
+                         "the scatter-gather baseline, or the brute-force "
+                         "oracle")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--servers", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--L", type=int, default=None)
+    ap.add_argument("--W", type=int, default=None)
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--sector-codes", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="AiSAQ sector layout (no replicated PQ array)")
-    ap.add_argument("--ship-lut", action="store_true",
+    ap.add_argument("--ship-lut", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="§8 alternative: ship the PQ LUT inside the "
                          "hand-off envelope instead of rebuilding on arrival "
                          "(bigger wire, zero recompute)")
-    ap.add_argument("--lut-wire", default="f32",
+    ap.add_argument("--lut-wire", default=None,
                     choices=["f32", "f16", "i8"],
                     help="wire dtype of the shipped LUT (§8 quantized "
                          "variants: f16 halves, i8 quarters the LUT bytes)")
-    ap.add_argument("--lazy-lut", action="store_true",
+    ap.add_argument("--lazy-lut", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="build queued queries' PQ LUTs at refill instead "
                          "of keeping a (Q, M, K) array resident")
-    ap.add_argument("--partitioner", default="ldg",
+    ap.add_argument("--partitioner", default=None,
                     choices=["ldg", "kmeans", "random"])
-    ap.add_argument("--send-rate", type=float, default=0.0,
+    ap.add_argument("--send-rate", type=float, default=None,
                     help="open-loop send rate (QPS) for the discrete-event "
                          "cluster simulator: replays the measured per-query "
                          "traces through per-server SSD/CPU/slot/NIC queues "
                          "and reports p50/p99 under load (0 = skip)")
-    ap.add_argument("--arrival", default="poisson",
+    ap.add_argument("--arrival", default=None,
                     choices=["poisson", "burst", "skew"],
                     help="arrival process for --send-rate")
-    ap.add_argument("--sim-arrivals", type=int, default=2000,
+    ap.add_argument("--sim-arrivals", type=int, default=None,
                     help="queries to simulate at --send-rate")
-    ap.add_argument("--cache-sectors", type=int, default=0,
+    ap.add_argument("--cache-sectors", type=int, default=None,
                     help="per-server LRU sector-cache capacity for the "
                          "event simulator (0 = no cache tier)")
-    ap.add_argument("--warm-cache", action="store_true",
+    ap.add_argument("--warm-cache", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="pre-touch every trace's sector footprint before "
                          "the simulated run")
-    ap.add_argument("--replicas", type=int, default=1,
-                    help="replica copies per partition (ring placement, "
-                         "least-loaded pick at slot-acquire time)")
-    ap.add_argument("--straggler", default="",
+    ap.add_argument("--replicas", default=None,
+                    help="replica copies per partition: an int (ring "
+                         "placement, least-loaded pick at slot-acquire "
+                         "time) or 'hot:<budget>' to replicate only the "
+                         "hottest partitions under an extra-copy budget")
+    ap.add_argument("--straggler", default=None,
                     help="per-server SSD service-time multipliers, e.g. "
                          "'0:4.0,2:1.5' slows server 0 by 4x and 2 by 1.5x")
-    ap.add_argument("--sat-criterion", default="latency",
+    ap.add_argument("--sat-criterion", default=None,
                     choices=["latency", "backlog", "both"],
                     help="saturation-knee criterion for the reported "
                          "saturation QPS (backlog = horizon-independent "
                          "queue-depth trend)")
-    args = ap.parse_args()
+    return ap
 
-    ds = synth.make_dataset("deep", n=args.n, n_queries=args.queries, seed=0)
-    t0 = time.time()
-    knn = ref.brute_force_knn(ds.vectors, ds.vectors, 17)[:, 1:]
-    from repro.core import vamana
 
-    graph = vamana.build_from_knn(ds.vectors, knn, r=32, alpha=1.2)
-    index = baton.build_index(
-        ds.vectors, p=args.servers, pq_m=24, pq_k=256, graph=graph,
-        partitioner=args.partitioner,
-        codes_mode="sector" if args.sector_codes else "replicated",
+def config_from_args(args):
+    """The preset named by ``--config`` with every passed flag overlaid."""
+    cfg = get_serve_config(args.config)
+    return cfg.with_updates(
+        data={"n": args.n, "n_queries": args.queries},
+        index={
+            "engine": args.engine,
+            "p": args.servers,
+            "partitioner": args.partitioner,
+            "codes_mode": (None if args.sector_codes is None
+                           else "sector" if args.sector_codes
+                           else "replicated"),
+        },
+        search={
+            "L": args.L, "W": args.W, "k": args.k, "slots": args.slots,
+            "ship_lut": args.ship_lut,
+            "lut_wire_dtype": args.lut_wire,
+            "lazy_queue_lut": args.lazy_lut,
+        },
+        sim={
+            "send_rate": args.send_rate, "arrival": args.arrival,
+            "n_arrivals": args.sim_arrivals,
+            "cache_sectors": args.cache_sectors,
+            "warm_cache": args.warm_cache,
+            "replicas": args.replicas, "straggler": args.straggler,
+            "sat_criterion": args.sat_criterion,
+        },
     )
-    print(f"[serve] index built in {time.time()-t0:.0f}s "
-          f"({args.n} pts, {args.servers} servers, "
-          f"{'sector' if args.sector_codes else 'replicated'} codes)")
 
-    cfg = baton.BatonParams(L=args.L, W=args.W, k=args.k, pool=256,
-                            slots=args.slots, ship_lut=args.ship_lut,
-                            lut_wire_dtype=args.lut_wire,
-                            lazy_queue_lut=args.lazy_lut)
+
+def main():
+    ap = build_argparser()
+    args = ap.parse_args()
+    try:
+        cfg = config_from_args(args)
+    except ValueError as e:           # bad override -> usage error, not a
+        ap.error(str(e))              # traceback after the index build
+
     t0 = time.time()
-    ids, dists, stats = baton.run_simulated(index, ds.queries, cfg,
-                                            sector_codes=args.sector_codes)
-    print(f"[serve] {args.queries} queries in {time.time()-t0:.1f}s "
-          f"(simulated {args.servers} servers)")
+    dep = Deployment.from_config(cfg, index_cache=args.index_cache)
+    # n_servers comes from the deployment, not the config: the exact
+    # oracle serves from one in-memory server whatever index.p says
+    print(f"[serve] index built in {time.time()-t0:.0f}s "
+          f"({cfg.data.n} pts, {dep.n_servers} servers, "
+          f"{'sector' if cfg.index.codes_mode == 'sector' else 'replicated'} "
+          f"codes)")
 
-    rec = ref.recall_at_k(ids, ds.gt, 10)
-    pq_m, pq_k = index.codebook.shape[:2]
-    env = envelope_bytes(ds.dim, cfg.L, cfg.pool, m=pq_m, k_pq=pq_k,
-                         ship_lut=cfg.ship_lut,
-                         lut_dtype=cfg.lut_wire_dtype)
-    qps = COST.cluster_qps(args.servers, stats["reads"].mean(),
-                           stats["dist_comps"].mean(),
-                           stats["inter_hops"].mean(), env,
-                           lut_builds_per_query=stats["lut_builds"].mean())
-    lat = COST.query_latency_s(stats["hops"].mean(),
-                               stats["inter_hops"].mean(),
-                               stats["reads"].mean(),
-                               stats["dist_comps"].mean(), env,
-                               lut_builds=stats["lut_builds"].mean())
-    print(f"  recall@10={rec:.3f} hops={stats['hops'].mean():.1f} "
-          f"inter={stats['inter_hops'].mean():.2f} "
-          f"reads={stats['reads'].mean():.1f} "
-          f"dcs={stats['dist_comps'].mean():.0f}")
-    print(f"  modeled: QPS={qps:.0f} latency={lat*1e3:.2f}ms "
-          f"bottleneck={COST.bottleneck(args.servers, stats['reads'].mean(), stats['dist_comps'].mean(), stats['inter_hops'].mean(), env)}")
+    rep = dep.run()
+    print(f"[serve] {cfg.data.n_queries} queries in {rep.wall_s:.1f}s "
+          f"(simulated {dep.n_servers} servers, {rep.engine} engine)")
 
-    if args.send_rate > 0:
-        from repro import cluster
+    c = rep.counters
+    print(f"  recall@{rep.k}={rep.recall:.3f} hops={c['hops']:.1f} "
+          f"inter={c['inter_hops']:.2f} "
+          f"reads={c['reads']:.1f} "
+          f"dcs={c['dist_comps']:.0f}")
+    print(f"  modeled: QPS={rep.modeled_qps:.0f} "
+          f"latency={rep.modeled_latency_s*1e3:.2f}ms "
+          f"bottleneck={rep.bottleneck}")
 
-        read_mult = None
-        if args.straggler:
-            mult = [1.0] * args.servers
-            for tok in args.straggler.split(","):
-                srv, m = tok.split(":")
-                if not 0 <= int(srv) < args.servers:
-                    raise SystemExit(
-                        f"--straggler server {srv} out of range "
-                        f"0..{args.servers - 1}")
-                mult[int(srv)] = float(m)
-            read_mult = tuple(mult)
-        params = cluster.SimParams(
-            cache_sectors=args.cache_sectors, warm_cache=args.warm_cache,
-            replicas=args.replicas, read_mult=read_mult)
-        traces = cluster.from_baton_stats(stats, env)
-        sat = cluster.find_saturation_qps(traces, args.servers, params,
-                                          seed=0,
-                                          criterion=args.sat_criterion)
-        wl = cluster.make_workload(
-            len(traces), args.send_rate, args.sim_arrivals, args.arrival,
-            seed=0, homes=cluster.trace_homes(traces))
-        res = cluster.simulate(traces, args.servers, wl, params)
-        scenario = (f"cache={args.cache_sectors}"
-                    f"{'(warm)' if args.warm_cache else ''} "
-                    f"replicas={args.replicas} "
-                    f"straggler={args.straggler or '-'}")
-        print(f"  simulated @{args.send_rate:.0f} qps ({args.arrival}, "
-              f"{res.completed}/{res.offered} completed, {scenario}): "
-              f"mean={res.mean_s*1e3:.2f}ms p50={res.p50_s*1e3:.2f}ms "
-              f"p95={res.p95_s*1e3:.2f}ms p99={res.p99_s*1e3:.2f}ms "
-              f"(saturation~{sat:.0f} qps, {args.sat_criterion})")
-        if args.cache_sectors > 0:
-            print(f"  cache: hit_rate={res.cache_hit_rate:.3f} "
-                  f"dram={COST.cache_memory_bytes(args.cache_sectors)/1e6:.1f}MB")
+    if rep.sim is not None:
+        s = rep.sim
+        print(f"  simulated @{s['rate_qps']:.0f} qps ({s['arrival']}, "
+              f"{s['completed']}/{s['offered']} completed, "
+              f"{s['scenario']}): "
+              f"mean={s['mean_s']*1e3:.2f}ms p50={s['p50_s']*1e3:.2f}ms "
+              f"p95={s['p95_s']*1e3:.2f}ms p99={s['p99_s']*1e3:.2f}ms "
+              f"(saturation~{s['saturation_qps']:.0f} qps, "
+              f"{s['sat_criterion']})")
+        if cfg.sim.cache_sectors > 0:
+            print(f"  cache: hit_rate={s['cache_hit_rate']:.3f} "
+                  f"dram={s['cache_memory_bytes']/1e6:.1f}MB")
+        if s["replica_memory_bytes"] > 0:
+            print(f"  replicas: {s['replicas']} "
+                  f"extra_storage={s['replica_memory_bytes']/1e6:.1f}MB"
+                  f"/partition-set")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """RAG serving pipeline — the paper's motivating deployment (§1).
 
-Documents are embedded into the vector index (BatANN over the partitioned
-global graph); a query retrieves the top-k nearest documents and their token
-chunks are prepended to the prompt served by the LM tenant.
+Documents are embedded into the vector index; a query retrieves the top-k
+nearest documents and their token chunks are prepended to the prompt served
+by the LM tenant.  Retrieval routes through a ``repro.api.Deployment``, so
+the RAG tenant composes with any engine (baton / scatter-gather / exact)
+and any deployment scenario the service layer can express.
 """
 
 from __future__ import annotations
@@ -12,7 +14,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baton
+from repro.api import DataSpec, Deployment, IndexSpec, SearchParams, ServeConfig, get_engine
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import decode
@@ -20,15 +22,23 @@ from repro.serving import decode
 
 @dataclasses.dataclass
 class RAGSystem:
-    index: baton.BatonIndex
-    search_cfg: baton.BatonParams
+    deployment: Deployment         # retrieval tier (engine + index + params)
     doc_tokens: np.ndarray         # (N_docs, chunk_len) int32
     lm_cfg: ModelConfig
     lm_params: T.Params
 
+    @property
+    def index(self):
+        return self.deployment.index
+
+    @property
+    def search_cfg(self):
+        return self.deployment.config.search
+
     def retrieve(self, query_embs: np.ndarray):
         """(B, d) query embeddings -> (ids, dists, stats)."""
-        return baton.run_simulated(self.index, query_embs, self.search_cfg)
+        res = self.deployment.search(query_embs)
+        return res.ids, res.dists, res.stats
 
     def answer(self, query_embs: np.ndarray, prompt_tokens: np.ndarray,
                max_new: int = 16):
@@ -53,8 +63,17 @@ def build_demo(n_docs: int = 2000, d: int = 64, p: int = 4, seed: int = 0,
 
     rng = np.random.default_rng(seed)
     doc_embs = rng.normal(size=(n_docs, d)).astype(np.float32)
-    index = baton.build_index(doc_embs, p=p, r=16, l_build=32, pq_m=16,
-                              pq_k=64, head_fraction=0.02, seed=seed)
+    cfg = ServeConfig(
+        name="rag-demo",
+        data=DataSpec(n=n_docs, n_queries=0, seed=seed),
+        index=IndexSpec(engine="baton", p=p, graph_mode="vamana", r=16,
+                        l_build=32, pq_m=16, pq_k=64, head_fraction=0.02,
+                        seed=seed),
+        search=SearchParams(L=32, W=4, k=10, pool=128, slots=16),
+    )
+    engine = get_engine(cfg.index.engine)
+    engine.build(doc_embs, cfg.index)
+    deployment = Deployment.from_parts(cfg, engine)
     lm_cfg = lm_cfg or get_smoke_config("qwen2-0.5b")
     import jax
 
@@ -63,7 +82,6 @@ def build_demo(n_docs: int = 2000, d: int = 64, p: int = 4, seed: int = 0,
         0, lm_cfg.vocab_size, size=(n_docs, 8)
     ).astype(np.int32)
     return RAGSystem(
-        index=index,
-        search_cfg=baton.BatonParams(L=32, W=4, k=10, pool=128, slots=16),
+        deployment=deployment,
         doc_tokens=doc_tokens, lm_cfg=lm_cfg, lm_params=lm_params,
     )

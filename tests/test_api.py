@@ -1,0 +1,336 @@
+"""repro.api service layer (ISSUE 4): engine-swap parity against the legacy
+paths, ServeConfig JSON round-trip + registry lookup, Report field-schema
+stability, Deployment save/load, and hot-partition replication placement."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (
+    Deployment, REPORT_FIELDS, SIM_FIELDS, STAT_KEYS, ServeConfig,
+)
+from repro.cluster.stages import Placement
+from repro.configs.registry import get_serve_config, serve_config_ids
+from repro.core import baton, ref, scatter_gather, vamana
+from repro.io_sim.disk import DEFAULT as COST
+
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    return get_serve_config("batann-serve-smoke").with_updates(
+        data={"n": 800, "n_queries": 16},
+        index={"p": 3, "r": 16, "knn_k": 9, "pq_m": 8, "pq_k": 64,
+               "head_fraction": 0.03},
+        search={"L": 16, "slots": 8},
+    )
+
+
+@pytest.fixture(scope="module")
+def smoke_dep(smoke_cfg):
+    return Deployment.from_config(smoke_cfg)
+
+
+# ---------------------------------------------------------------------------
+# engine-swap parity: adapters == legacy paths, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _legacy_baton_params(sp):
+    return baton.BatonParams(
+        L=sp.L, W=sp.W, k=sp.k, pool=sp.pool, slots=sp.slots,
+        pair_cap=sp.pair_cap, result_cap=sp.result_cap, n_starts=sp.n_starts,
+        ship_lut=sp.ship_lut, lut_wire_dtype=sp.lut_wire_dtype,
+        lazy_queue_lut=sp.lazy_queue_lut, fused=sp.fused,
+        adc_impl=sp.adc_impl, merge_impl=sp.merge_impl,
+    )
+
+
+def test_baton_engine_build_matches_legacy(smoke_cfg, smoke_dep):
+    """BatonEngine.build == the legacy serve.py build pipeline, array-equal."""
+    ds, spec = smoke_dep.dataset, smoke_cfg.index
+    knn = ref.brute_force_knn(ds.vectors, ds.vectors, spec.knn_k)[:, 1:]
+    g = vamana.build_from_knn(ds.vectors, knn, r=spec.r, alpha=spec.alpha)
+    legacy = baton.build_index(
+        ds.vectors, p=spec.p, pq_m=spec.pq_m, pq_k=spec.pq_k,
+        head_fraction=spec.head_fraction, partitioner=spec.partitioner,
+        seed=spec.seed, graph=g,
+    )
+    idx = smoke_dep.index
+    np.testing.assert_array_equal(idx.part_vectors, legacy.part_vectors)
+    np.testing.assert_array_equal(idx.part_neighbors, legacy.part_neighbors)
+    np.testing.assert_array_equal(idx.codes, legacy.codes)
+    np.testing.assert_array_equal(idx.codebook, legacy.codebook)
+    np.testing.assert_array_equal(idx.assign, legacy.assign)
+    np.testing.assert_array_equal(idx.head_vectors, legacy.head_vectors)
+
+
+def test_baton_engine_search_parity(smoke_cfg, smoke_dep):
+    """BatonEngine.search == legacy baton.run_simulated, bit for bit."""
+    ds = smoke_dep.dataset
+    res = smoke_dep.search(ds.queries)
+    ids, dists, stats = baton.run_simulated(
+        smoke_dep.index, ds.queries, _legacy_baton_params(smoke_cfg.search))
+    np.testing.assert_array_equal(res.ids, ids)
+    np.testing.assert_array_equal(res.dists, dists)
+    for k in STAT_KEYS + ("trace",):
+        np.testing.assert_array_equal(res.stats[k], stats[k])
+
+
+def test_baton_model_matches_legacy_arithmetic(smoke_cfg, smoke_dep):
+    """Engine.model == the arithmetic serve.py/figures.py used to inline."""
+    from repro.core.state import envelope_bytes
+
+    rep = smoke_dep.run()
+    sp = smoke_cfg.search
+    st = rep.stats
+    env = envelope_bytes(smoke_dep.dim, sp.L, sp.pool,
+                         m=smoke_cfg.index.pq_m, k_pq=smoke_cfg.index.pq_k,
+                         ship_lut=sp.ship_lut, lut_dtype=sp.lut_wire_dtype)
+    assert rep.envelope_bytes == env
+    qps = COST.cluster_qps(smoke_cfg.index.p, st["reads"].mean(),
+                           st["dist_comps"].mean(), st["inter_hops"].mean(),
+                           env,
+                           lut_builds_per_query=st["lut_builds"].mean())
+    lat = COST.query_latency_s(st["hops"].mean(), st["inter_hops"].mean(),
+                               st["reads"].mean(), st["dist_comps"].mean(),
+                               env, lut_builds=st["lut_builds"].mean())
+    assert rep.modeled_qps == pytest.approx(qps, rel=1e-12)
+    assert rep.modeled_latency_s == pytest.approx(lat, rel=1e-12)
+
+
+def test_sg_engine_search_parity(smoke_cfg, smoke_dep):
+    """ScatterGatherEngine == legacy scatter_gather.run_simulated."""
+    sg_cfg = smoke_cfg.with_updates(index={"engine": "scatter_gather"})
+    dep = Deployment.from_config(sg_cfg, dataset=smoke_dep.dataset)
+    ds = smoke_dep.dataset
+    res = dep.search(ds.queries)
+    sp = sg_cfg.search
+    ids, dists, stats = scatter_gather.run_simulated(
+        dep.index, ds.queries, L=sp.L, W=sp.W, k=sp.k, pool=sp.pool)
+    np.testing.assert_array_equal(res.ids, ids)
+    np.testing.assert_array_equal(res.dists, dists)
+    for k in ("hops", "inter_hops", "dist_comps", "reads", "max_part_hops"):
+        np.testing.assert_array_equal(res.stats[k], stats[k])
+    # uniform schema: the adapter adds the lut_builds counter (1/branch)
+    np.testing.assert_array_equal(
+        res.stats["lut_builds"], np.full(len(ds.queries), dep.index.p))
+    rep = dep.run()
+    assert rep.engine == "scatter_gather"
+    assert rep.recall > 0.5
+
+
+def test_exact_engine_is_the_oracle(smoke_cfg, smoke_dep):
+    dep = Deployment.from_config(
+        smoke_cfg.with_updates(index={"engine": "exact"}),
+        dataset=smoke_dep.dataset)
+    rep = dep.run()
+    assert rep.recall == 1.0
+    assert rep.counters["reads"] == 0.0
+    assert rep.counters["dist_comps"] == smoke_dep.dataset.n
+    # trace-less engine + event simulator: rejected up front (fail fast),
+    # not via a NotImplementedError after the search
+    dep_sim = Deployment.from_parts(
+        smoke_cfg.with_updates(index={"engine": "exact"},
+                               sim={"send_rate": 100.0}),
+        dep.engine, smoke_dep.dataset)
+    with pytest.raises(ValueError, match="no cluster traces"):
+        dep_sim.run()
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: JSON round-trip, registry, overrides, index key
+# ---------------------------------------------------------------------------
+
+
+def test_serve_config_json_roundtrip(smoke_cfg):
+    for cfg in [ServeConfig(), smoke_cfg,
+                get_serve_config("batann-quickstart")]:
+        assert ServeConfig.from_json(cfg.to_json()) == cfg
+    # dict round-trip too (what Deployment.save stores)
+    assert ServeConfig.from_dict(smoke_cfg.to_dict()) == smoke_cfg
+
+
+def test_registry_lookup():
+    ids = serve_config_ids()
+    assert "batann-serve" in ids and "batann-serve-smoke" in ids
+    cfg = get_serve_config("batann-serve")
+    assert cfg.index.engine == "baton" and cfg.index.p == 8
+    assert get_serve_config("batann-serve-sg").index.engine == \
+        "scatter_gather"
+    with pytest.raises(KeyError):
+        get_serve_config("nope")
+
+
+def test_with_updates_and_validation(smoke_cfg):
+    cfg = smoke_cfg.with_updates(search={"L": 99, "W": None})
+    assert cfg.search.L == 99
+    assert cfg.search.W == smoke_cfg.search.W     # None = keep
+    assert smoke_cfg.search.L == 16               # original untouched
+    with pytest.raises(KeyError):
+        smoke_cfg.with_updates(nosection={"x": 1})
+
+
+def test_index_key_tracks_build_inputs(smoke_cfg):
+    base = smoke_cfg.index_key()
+    assert smoke_cfg.with_updates(search={"L": 128}).index_key() == base
+    assert smoke_cfg.with_updates(sim={"send_rate": 9.0}).index_key() == base
+    # the query batch rides beside the index: must not invalidate the cache
+    assert smoke_cfg.with_updates(data={"n_queries": 5}).index_key() == base
+    assert smoke_cfg.with_updates(index={"p": 4}).index_key() != base
+    assert smoke_cfg.with_updates(data={"n": 900}).index_key() != base
+
+
+def test_sim_spec_validates_at_construction(smoke_cfg):
+    from repro.api import SimSpec
+
+    assert SimSpec(replicas="2").replicas == "2"
+    assert SimSpec(replicas=2)          # plain int accepted
+    assert SimSpec(replicas="hot:3", straggler="0:4.0,2:1.5")
+    for bad in ({"replicas": "two"}, {"replicas": "hot:x"},
+                {"straggler": "0"}, {"straggler": "0:fast"},
+                {"straggler": "9:2.0"}):   # server 9 of a 3-server config
+        with pytest.raises(ValueError):
+            smoke_cfg.with_updates(sim=bad)
+
+
+def test_sim_params_hot_requires_placement(smoke_cfg, smoke_dep):
+    dep = Deployment.from_parts(
+        smoke_cfg.with_updates(sim={"replicas": "hot:1"}),
+        smoke_dep.engine, smoke_dep.dataset)
+    with pytest.raises(ValueError, match="load-derived placement"):
+        dep.sim_params()          # no silent identity-placement fallback
+
+
+def test_sg_build_honors_partitioner(smoke_cfg, smoke_dep):
+    from repro.core import partition as part_mod
+
+    spec = dataclasses.replace(smoke_cfg.index, engine="scatter_gather",
+                               partitioner="random")
+    idx = api.ScatterGatherEngine().build(smoke_dep.dataset, spec)
+    np.testing.assert_array_equal(
+        idx.assign,
+        part_mod.random_partition(smoke_dep.dataset.n, spec.p,
+                                  seed=spec.seed))
+
+
+# ---------------------------------------------------------------------------
+# Report schema stability
+# ---------------------------------------------------------------------------
+
+
+def test_report_schema(smoke_cfg, smoke_dep):
+    rep = smoke_dep.run()
+    assert tuple(rep.to_dict().keys()) == REPORT_FIELDS
+    assert set(rep.counters.keys()) == set(STAT_KEYS)
+    assert rep.sim is None
+    sim_cfg = smoke_cfg.with_updates(
+        sim={"send_rate": 200.0, "n_arrivals": 100})
+    rep2 = Deployment.from_parts(sim_cfg, smoke_dep.engine,
+                                 smoke_dep.dataset).run()
+    assert set(rep2.sim.keys()) == set(SIM_FIELDS)
+    assert rep2.sim["completed"] == rep2.sim["offered"] == 100
+    assert rep2.sim["p99_s"] >= rep2.sim["p50_s"] > 0
+
+
+def test_hot_replica_scenario_reports_dram_price(smoke_cfg, smoke_dep):
+    cfg = smoke_cfg.with_updates(
+        sim={"send_rate": 200.0, "n_arrivals": 100, "arrival": "skew",
+             "replicas": "hot:1"})
+    rep = Deployment.from_parts(cfg, smoke_dep.engine,
+                                smoke_dep.dataset).run()
+    assert rep.sim["replicas"] == "hot:1"
+    assert rep.sim["replica_memory_bytes"] > 0
+    assert rep.sim["completed"] == 100
+
+
+# ---------------------------------------------------------------------------
+# save / load (checkpoint-backed index cache)
+# ---------------------------------------------------------------------------
+
+
+def test_save_load_identical_results(tmp_path, smoke_cfg, smoke_dep):
+    d = str(tmp_path / "idx")
+    smoke_dep.save(d)
+    dep2 = Deployment.load(d, dataset=smoke_dep.dataset)
+    assert dep2.config == smoke_cfg           # config stored alongside
+    np.testing.assert_array_equal(dep2.index.part_vectors,
+                                  smoke_dep.index.part_vectors)
+    np.testing.assert_array_equal(dep2.index.graph.neighbors,
+                                  smoke_dep.index.graph.neighbors)
+    q = smoke_dep.dataset.queries
+    a, b = smoke_dep.search(q), dep2.search(q)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+
+
+def test_from_config_index_cache_skips_rebuild(tmp_path, smoke_cfg,
+                                               smoke_dep, monkeypatch):
+    cache = str(tmp_path / "cache")
+    dep = Deployment.from_config(smoke_cfg, index_cache=cache,
+                                 dataset=smoke_dep.dataset)
+    # second construction must *load*: a rebuild would call Engine.build
+    def boom(self, *a, **kw):
+        raise AssertionError("index cache missed: build() was called")
+    monkeypatch.setattr(api.BatonEngine, "build", boom)
+    dep2 = Deployment.from_config(smoke_cfg, index_cache=cache,
+                                  dataset=smoke_dep.dataset)
+    q = smoke_dep.dataset.queries[:4]
+    np.testing.assert_array_equal(dep.search(q).ids, dep2.search(q).ids)
+
+
+def test_sg_save_load(tmp_path, smoke_cfg, smoke_dep):
+    sg_cfg = smoke_cfg.with_updates(index={"engine": "scatter_gather"})
+    dep = Deployment.from_config(sg_cfg, dataset=smoke_dep.dataset)
+    d = str(tmp_path / "sg")
+    dep.save(d)
+    dep2 = Deployment.load(d, dataset=smoke_dep.dataset)
+    q = smoke_dep.dataset.queries[:4]
+    np.testing.assert_array_equal(dep.search(q).ids, dep2.search(q).ids)
+
+
+# ---------------------------------------------------------------------------
+# hot-partition replication placement
+# ---------------------------------------------------------------------------
+
+
+def test_placement_for_skew_budget_and_ordering():
+    pl = Placement.for_skew([10, 0, 0, 0], n_servers=4, budget=2)
+    assert pl.replicas[0] == (0, 1, 2)        # both extra copies on the hot one
+    assert pl.replicas[1:] == ((1,), (2,), (3,))
+    assert pl.copies_per_partition == pytest.approx(6 / 4)
+    # load-per-copy greedy: second-hottest gets the next copy
+    pl2 = Placement.for_skew([10, 9, 0, 0], n_servers=4, budget=2)
+    assert pl2.replicas[0] == (0, 1) and pl2.replicas[1] == (1, 2)
+    # zero budget / cold loads => identity
+    assert Placement.for_skew([5, 5], 2, 0) == Placement.identity(2)
+    assert Placement.for_skew([0, 0], 2, 3) == Placement.identity(2)
+    # copies never exceed the server count
+    pl3 = Placement.for_skew([1, 0], n_servers=2, budget=9)
+    assert all(len(r) <= 2 for r in pl3.replicas)
+
+
+def test_for_skew_prices_less_dram_than_full_ring():
+    full = Placement.ring(8, 8, 2)
+    hot = Placement.for_skew([100] + [1] * 7, 8, 2)
+    part_bytes = 1e6
+    assert (COST.replica_memory_bytes(part_bytes, hot.copies_per_partition)
+            < COST.replica_memory_bytes(part_bytes,
+                                        full.copies_per_partition))
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+
+def test_get_engine_registry(smoke_dep):
+    eng = api.get_engine("baton", index=smoke_dep.index)
+    assert isinstance(eng, api.BatonEngine) and eng.index is smoke_dep.index
+    assert isinstance(api.get_engine("exact"), api.ExactEngine)
+    with pytest.raises(KeyError):
+        api.get_engine("hnsw")
+    # the structural protocol holds for every registered engine
+    for cls in api.ENGINES.values():
+        assert isinstance(cls(), api.Engine)
