@@ -62,11 +62,12 @@ def fig3_inter_partition_hops():
     rows = []
     for p in (2, 4, common.BENCH_P):
         r = _run_batann(p, L_DEFAULT, w=1)
-        hops = float(np.mean(r["stats"]["hops"]))
-        inter = float(np.mean(r["stats"]["inter_hops"]))
+        c = r["report"].counters
         rows.append((
             f"fig3_hops_p{p}", r["lat_s"] * 1e6,
-            f"hops={hops:.1f};inter={inter:.2f};frac={inter/hops:.3f}",
+            r["report"].to_row(
+                "hops", "inter",
+                frac=f"{c['inter_hops'] / c['hops']:.3f}"),
         ))
     return rows
 
@@ -77,17 +78,16 @@ def fig4_w_ablation_hops():
     base = None
     for w in (1, 8):
         r = _run_batann(common.BENCH_P, L_DEFAULT, w=w)
-        hops = float(np.mean(r["stats"]["hops"]))
-        inter = float(np.mean(r["stats"]["inter_hops"]))
         if w == 1:
-            base = (hops, inter)
+            base = r["report"].counters["hops"]
         rows.append((
             f"fig4_w{w}", r["lat_s"] * 1e6,
-            f"hops={hops:.1f};inter={inter:.2f}",
+            r["report"].to_row("hops", "inter"),
         ))
+    w8 = _run_batann(common.BENCH_P, L_DEFAULT, w=8)["report"].counters
     rows.append((
         "fig4_hop_reduction", 0.0,
-        f"hops_ratio={base[0]/max(float(np.mean(_run_batann(common.BENCH_P, L_DEFAULT, w=8)['stats']['hops'])),1e-9):.2f}",
+        f"hops_ratio={base/max(w8['hops'], 1e-9):.2f}",
     ))
     return rows
 
@@ -98,12 +98,11 @@ def fig5_w_efficiency():
     vals = {}
     for w in (1, 8):
         r = _run_batann(common.BENCH_P, L_DEFAULT, w=w)
-        dcs = float(np.mean(r["stats"]["dist_comps"]))
-        reads = float(np.mean(r["stats"]["reads"]))
-        vals[w] = (dcs, reads)
+        c = r["report"].counters
+        vals[w] = (c["dist_comps"], c["reads"])
         rows.append((
             f"fig5_w{w}", r["lat_s"] * 1e6,
-            f"dist_comps={dcs:.0f};reads={reads:.1f};recall={r['recall']:.3f}",
+            r["report"].to_row("dist_comps", "reads", "recall"),
         ))
     rows.append((
         "fig5_w8_vs_w1", 0.0,
@@ -125,7 +124,7 @@ def fig7_single_server():
         rep = dep.run(queries=ds.queries[:64], gt=ds.gt[:64])
         rows.append((
             f"fig7_{tag}", rep.wall_s / 64 * 1e6,
-            f"recall={rep.recall:.3f};wall_qps={64/rep.wall_s:.0f}",
+            rep.to_row("recall", wall_qps=f"{64/rep.wall_s:.0f}"),
         ))
     return rows
 
@@ -144,8 +143,8 @@ def fig9_throughput_qps_recall():
             s_qps.append(rs["qps"])
             rows.append((
                 f"fig9_p{p}_L{L}", rb["lat_s"] * 1e6,
-                f"batann_recall={rb['recall']:.3f};batann_qps={rb['qps']:.0f};"
-                f"sg_recall={rs['recall']:.3f};sg_qps={rs['qps']:.0f}",
+                rb["report"].to_row("recall", "qps", prefix="batann_")
+                + ";" + rs["report"].to_row("recall", "qps", prefix="sg_"),
             ))
         q_b = common.recall_at_095(L_SWEEP, b_rec, b_qps)
         q_s = common.recall_at_095(L_SWEEP, s_rec, s_qps)
@@ -315,14 +314,10 @@ def sec8_ship_vs_recompute():
         else:
             # identical memo key as the fig3-fig14 runs -> cache hit
             r = _run_batann(common.BENCH_P, L_DEFAULT, w=8)
-        env = r["report"].envelope_bytes
-        luts = float(np.mean(r["stats"]["lut_builds"]))
-        inter = float(np.mean(r["stats"]["inter_hops"]))
         rows.append((
             f"sec8_{tag}_lut", r["lat_s"] * 1e6,
-            f"envelope_bytes={env};qps={r['qps']:.0f};"
-            f"lut_builds={luts:.2f};inter={inter:.2f};"
-            f"recall={r['recall']:.3f}",
+            r["report"].to_row("envelope_bytes", "qps", "lut_builds",
+                               "inter", "recall"),
         ))
     return rows
 
@@ -464,6 +459,137 @@ def fig17_straggler():
         f"sg_mean_ratio={ratio['sg']:.2f};"
         f"baton_degrades_less={ratio['batann'] < ratio['sg']}",
     ))
+    return rows
+
+
+def fig18_elastic():
+    """Fig. 18 (elasticity): throughput/p99 through a scale-up and a
+    scale-down event under a time-varying ``PlacementSchedule``.
+
+    Scale-up: the cluster starts on P/2 servers, driven at the *full*
+    P-server tier's saturation rate (deliberately over-provisioned load),
+    and scales to P mid-run — moved partitions are re-homed (their bytes
+    streamed over the source NIC, priced via ``CostModel.tx_s``; dual-homed
+    until the copy lands, so in-flight batons drain without loss).  The
+    post-rescale window's throughput must recover to within 10% of the
+    static P-server saturation QPS.  Scale-down: P → P/2 at a rate the
+    shrunk tier sustains; the post-window tail must settle near the static
+    P/2 tier's.  The baton engine re-homes only the moved partitions'
+    in-flight state (pass-through residencies), while a scatter-gather
+    query fans to *every* partition — each re-home disrupts all of its
+    in-flight queries (the full re-scatter), which the sg row's transition
+    disruption shows."""
+    from repro import cluster
+    from repro.api import partition_bytes
+    from repro.ft import elastic as ftel
+    from repro.io_sim.disk import DEFAULT as COST
+
+    p = common.BENCH_P
+    half = max(2, p // 2)
+    n_arr = common.SIM_ARRIVALS
+
+    def win_stats(res, t0, t1):
+        """(mean_s, p99_s) of arrivals inside [t0, t1)."""
+        m = ((res.arrive_s >= t0) & (res.arrive_s < t1)
+             & ~np.isnan(res.latencies_s))
+        lat = res.latencies_s[m]
+        return float(np.mean(lat)), float(np.percentile(lat, 99))
+
+    def run_elastic(traces, rate, steps, seed=1):
+        """Simulate `traces` under an elastic schedule; returns the result
+        plus the mid-run step time."""
+        homes = cluster.trace_homes(traces)
+        wl = cluster.make_workload(len(traces), rate, n_arr, "poisson",
+                                   seed=seed, homes=homes)
+        t_mid = float(wl.times_s[n_arr // 2])
+        sched = ftel.elastic_schedule(
+            [(0.0, steps[0]), (t_mid, steps[1])], p)
+        params = cluster.SimParams(schedule=sched,
+                                   migration_bytes=part_bytes)
+        return cluster.simulate(traces, p, wl, params), t_mid
+
+    traces, sat_full = _sim_system("batann", p)
+    part_bytes = partition_bytes(_run_batann(p, L_DEFAULT, w=8)["dep"].index)
+    rows = []
+
+    # --- scale-up: P/2 -> P at the full tier's saturation rate -------------
+    res, t_mid = run_elastic(traces, sat_full, (half, p))
+    t_end = float(res.arrive_s[-1])
+    settle = 0.1 * (t_end - t_mid)            # let the re-homes land
+    t_done = float(np.max(res.completion_s()))
+    pre = res.throughput_in(0.0, t_mid)
+    post = res.throughput_in(t_mid + settle, t_done)
+    pre_mean, pre_p99 = win_stats(res, 0.0, t_mid)
+    post_mean, post_p99 = win_stats(res, t_mid + settle, t_end)
+    mig_mb = res.diag["migration_bytes_total"] / 1e6
+    mig_wire_ms = (res.diag["migration_bytes_total"] * 8.0
+                   / (COST.tcp_bandwidth_gbps * 1e9) * 1e3)
+    assert res.completed == res.offered       # conservation across re-homes
+    rows.append((
+        f"fig18_up_p{half}to{p}", post_mean * 1e6,
+        f"pre_tput_qps={pre:.0f};post_tput_qps={post:.0f};"
+        f"sat_qps={sat_full:.0f};pre_p99_ms={pre_p99*1e3:.2f};"
+        f"post_p99_ms={post_p99*1e3:.2f};rehomed={res.diag['rehome_events']};"
+        f"mig_mb={mig_mb:.1f};mig_wire_ms={mig_wire_ms:.2f}",
+    ))
+    recovery = post / max(sat_full, 1e-9)
+
+    # --- scale-down: P -> P/2 at a rate the shrunk tier sustains -----------
+    pl_half = cluster.Placement.fold(p, half)
+    sat_half = cluster.find_saturation_qps(
+        traces, half, cluster.SimParams(placement=pl_half),
+        n_arrivals=common.SIM_SAT_ARRIVALS, seed=0)
+    rate_dn = 0.6 * sat_half
+    res_dn, t_mid_dn = run_elastic(traces, rate_dn, (p, half))
+    t_end_dn = float(res_dn.arrive_s[-1])
+    settle_dn = 0.1 * (t_end_dn - t_mid_dn)
+    _, pre_p99_dn = win_stats(res_dn, 0.0, t_mid_dn)
+    dn_mean, post_p99_dn = win_stats(res_dn, t_mid_dn + settle_dn, t_end_dn)
+    # static P/2 yardstick under the identical workload tail
+    homes = cluster.trace_homes(traces)
+    wl_dn = cluster.make_workload(len(traces), rate_dn, n_arr, "poisson",
+                                  seed=1, homes=homes)
+    res_static = cluster.simulate(traces, half, wl_dn,
+                                  cluster.SimParams(placement=pl_half))
+    _, static_p99 = win_stats(res_static, t_mid_dn + settle_dn, t_end_dn)
+    assert res_dn.completed == res_dn.offered
+    rows.append((
+        f"fig18_down_p{p}to{half}", dn_mean * 1e6,
+        f"rate_qps={rate_dn:.0f};half_sat_qps={sat_half:.0f};"
+        f"pre_p99_ms={pre_p99_dn*1e3:.2f};post_p99_ms={post_p99_dn*1e3:.2f};"
+        f"static_half_p99_ms={static_p99*1e3:.2f};"
+        f"rehomed={res_dn.diag['rehome_events']};"
+        f"mig_mb={res_dn.diag['migration_bytes_total']/1e6:.1f}",
+    ))
+
+    # --- scatter-gather comparison: every query fans to all partitions, so
+    # a re-home disrupts *all* in-flight queries (the full re-scatter) ------
+    sg_traces, sg_sat = _sim_system("sg", p)
+    res_sg, t_mid_sg = run_elastic(sg_traces, sg_sat, (half, p))
+    trans = 0.1 * (float(res_sg.arrive_s[-1]) - t_mid_sg)
+    _, sg_pre_p99 = win_stats(res_sg, 0.0, t_mid_sg)
+    _, sg_trans_p99 = win_stats(res_sg, t_mid_sg, t_mid_sg + trans)
+    _, bat_trans_p99 = win_stats(res, t_mid, t_mid + settle)
+    rows.append((
+        f"fig18_sg_up_p{half}to{p}", 0.0,
+        f"pre_p99_ms={sg_pre_p99*1e3:.2f};"
+        f"trans_p99_ms={sg_trans_p99*1e3:.2f};"
+        f"rehomed={res_sg.diag['rehome_events']};"
+        f"mig_mb={res_sg.diag['migration_bytes_total']/1e6:.1f}",
+    ))
+
+    # --- headline: recovery to steady state --------------------------------
+    recovered = recovery >= 0.9
+    rows.append((
+        "fig18_elastic", 0.0,
+        f"recovered={recovered};recovery_frac={recovery:.2f};"
+        f"post_tput_qps={post:.0f};sat_qps={sat_full:.0f};"
+        f"baton_trans_p99_ms={bat_trans_p99*1e3:.2f};"
+        f"sg_trans_p99_ms={sg_trans_p99*1e3:.2f};mig_mb={mig_mb:.1f}",
+    ))
+    assert recovered, (
+        f"post-rescale throughput {post:.0f} qps did not recover to within "
+        f"10% of the static {p}-server saturation {sat_full:.0f} qps")
     return rows
 
 

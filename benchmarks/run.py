@@ -12,6 +12,7 @@ bench-smoke CI job and local iteration don't need the full sweep.
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
 import sys
@@ -22,11 +23,38 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, _ROOT)                       # benchmarks package
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # repro package
 
+# suite tag -> "module.function" within the benchmarks package.  Module-
+# level (with lazy resolution in main) so `--list`, tools/check_docs.py's
+# PAPER_MAP coverage check, and tests can read the tags without importing
+# jax; docs/PAPER_MAP.md must cover every tag here (CI-checked).
+SUITES = (
+    ("fig3", "figures.fig3_inter_partition_hops"),
+    ("fig4", "figures.fig4_w_ablation_hops"),
+    ("fig5", "figures.fig5_w_efficiency"),
+    ("fig7", "figures.fig7_single_server"),
+    ("fig9", "figures.fig9_throughput_qps_recall"),
+    ("fig9sim", "figures.fig9_sim_scaling"),
+    ("fig10", "figures.fig10_efficiency"),
+    ("fig11", "figures.fig11_scalability"),
+    ("fig12", "figures.fig12_latency_recall"),
+    ("fig13", "figures.fig13_latency_vs_send_rate"),
+    ("fig14", "figures.fig14_w_throughput"),
+    ("fig15cache", "figures.fig15_cache_hit_sweep"),
+    ("fig16repl", "figures.fig16_replication_skew"),
+    ("fig17strag", "figures.fig17_straggler"),
+    ("fig18elastic", "figures.fig18_elastic"),
+    ("sec8", "figures.sec8_ship_vs_recompute"),
+    ("kernels", "bench_kernels.kernel_rows"),
+    ("superstep", "bench_kernels.superstep_rows"),
+)
+
+
+def _resolve(spec: str):
+    mod, fn = spec.rsplit(".", 1)
+    return getattr(importlib.import_module(f"benchmarks.{mod}"), fn)
+
 
 def main() -> None:
-    from benchmarks import figures
-    from benchmarks.bench_kernels import kernel_rows, superstep_rows
-
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated suite tags to run (default: all)")
@@ -34,28 +62,10 @@ def main() -> None:
                     help="print the suite tags and exit")
     args = ap.parse_args()
 
-    suites = [
-        ("fig3", figures.fig3_inter_partition_hops),
-        ("fig4", figures.fig4_w_ablation_hops),
-        ("fig5", figures.fig5_w_efficiency),
-        ("fig7", figures.fig7_single_server),
-        ("fig9", figures.fig9_throughput_qps_recall),
-        ("fig9sim", figures.fig9_sim_scaling),
-        ("fig10", figures.fig10_efficiency),
-        ("fig11", figures.fig11_scalability),
-        ("fig12", figures.fig12_latency_recall),
-        ("fig13", figures.fig13_latency_vs_send_rate),
-        ("fig14", figures.fig14_w_throughput),
-        ("fig15cache", figures.fig15_cache_hit_sweep),
-        ("fig16repl", figures.fig16_replication_skew),
-        ("fig17strag", figures.fig17_straggler),
-        ("sec8", figures.sec8_ship_vs_recompute),
-        ("kernels", kernel_rows),
-        ("superstep", superstep_rows),
-    ]
     if args.list:
-        print("\n".join(tag for tag, _ in suites))
+        print("\n".join(tag for tag, _ in SUITES))
         return
+    suites = [(tag, _resolve(spec)) for tag, spec in SUITES]
     if args.only:
         want = [t.strip() for t in args.only.split(",") if t.strip()]
         known = {tag for tag, _ in suites}

@@ -2,10 +2,13 @@
 (shard_map + all_to_all) vs the single-host simulation — results must match
 bit-exactly — plus a failover demonstration.
 
-Deliberately drives the engine internals *below* the ``repro.api`` service
-layer (device states, shard pytrees, SPMD bodies): this is the one example
-about the execution substrate itself, not the serving pipeline — start from
-``examples/quickstart.py`` for the Deployment-level API.
+Setup routes through the documented ``repro.api`` service layer
+(``Deployment.from_config`` builds the dataset + index; failover re-wraps
+the rescaled index with ``Deployment.from_parts``).  The SPMD execution
+itself still drives engine internals (device states, shard pytrees,
+``make_spmd_fn``) *below* the API — the one remaining entry point the
+``Engine`` protocol does not cover; see docs/ARCHITECTURE.md "Known gap".
+Start from ``examples/quickstart.py`` for the pure Deployment-level API.
 
     PYTHONPATH=src python examples/distributed_search.py
 """
@@ -18,22 +21,34 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import baton, ref
+from repro.api import (
+    DataSpec, Deployment, IndexSpec, SearchParams, ServeConfig,
+)
+from repro.api.engine import BatonEngine
+from repro.core import baton
 from repro.core.beam_search import Shard
-from repro.data import synth
 from repro.ft.elastic import rescale_assignment
 
 
+CONFIG = ServeConfig(
+    name="distributed-search-demo",
+    data=DataSpec(n=3000, n_queries=48, seed=0),
+    index=IndexSpec(p=8, graph_mode="vamana", r=20, l_build=40, pq_m=24,
+                    pq_k=128, head_fraction=0.02),
+    search=SearchParams(L=40, W=8, k=10, pool=256, slots=24),
+)
+
+
 def main():
-    ds = synth.make_dataset("deep", n=3000, n_queries=48, seed=0)
-    index = baton.build_index(ds.vectors, p=8, r=20, l_build=40, pq_m=24,
-                              pq_k=128, head_fraction=0.02)
-    cfg = baton.BatonParams(L=40, W=8, k=10, pool=256, slots=24)
+    dep = Deployment.from_config(CONFIG)
+    ds, index = dep.dataset, dep.index
+    cfg = dep.engine.baton_params(CONFIG.search)
 
     print("== single-host simulation (8 partitions, vmapped) ==")
-    ids_sim, _, st = baton.run_simulated(index, ds.queries, cfg)
-    print(f"recall@10={ref.recall_at_k(ids_sim, ds.gt, 10):.3f} "
-          f"hops={st['hops'].mean():.1f} inter={st['inter_hops'].mean():.2f}")
+    rep = dep.run()
+    ids_sim = rep.ids
+    print(f"recall@10={rep.recall:.3f} hops={rep.counters['hops']:.1f} "
+          f"inter={rep.counters['inter_hops']:.2f}")
 
     print("\n== SPMD: shard_map over 8 devices, all_to_all state routing ==")
     mesh = jax.make_mesh((8,), ("part",))
@@ -64,6 +79,7 @@ def main():
     ))(devs, shard, codebook)
     ids_spmd, _, st2 = baton._collect(out, qid_dev, cfg, B, Bp, 8, per, 0)
     match = np.array_equal(ids_sim, ids_spmd)
+    from repro.core import ref
     print(f"recall@10={ref.recall_at_k(ids_spmd, ds.gt, 10):.3f} "
           f"delivered={st2['delivered']:.0%}  bit-identical to sim: {match}")
     assert match
@@ -73,9 +89,12 @@ def main():
     idx6 = baton.build_index(ds.vectors, p=6, pq_m=24, pq_k=128,
                              head_fraction=0.02, graph=index.graph,
                              assign=new_assign)
-    ids6, _, st6 = baton.run_simulated(idx6, ds.queries, cfg)
-    print(f"recall@10={ref.recall_at_k(ids6, ds.gt, 10):.3f} "
-          f"delivered={st6['delivered']:.0%} (search survives rescale)")
+    dep6 = Deployment.from_parts(CONFIG.with_updates(index={"p": 6}),
+                                 BatonEngine(index=idx6), dataset=ds)
+    rep6 = dep6.run()
+    delivered = rep6.stats["delivered"]
+    print(f"recall@10={rep6.recall:.3f} "
+          f"delivered={delivered:.0%} (search survives rescale)")
 
 
 if __name__ == "__main__":

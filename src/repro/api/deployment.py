@@ -23,7 +23,9 @@ import numpy as np
 
 from repro.api.engine import SearchResult, get_engine
 from repro.checkpoint import ckpt
-from repro.configs.batann_serve import ServeConfig, parse_straggler
+from repro.configs.batann_serve import (
+    ServeConfig, parse_elastic, parse_straggler,
+)
 from repro.core import ref
 from repro.data import synth
 from repro.io_sim.disk import DEFAULT as COST, CostModel
@@ -39,7 +41,30 @@ SIM_FIELDS = (
     "rate_qps", "arrival", "offered", "completed", "mean_s", "p50_s",
     "p95_s", "p99_s", "saturation_qps", "sat_criterion", "cache_hit_rate",
     "cache_memory_bytes", "replicas", "replica_memory_bytes", "scenario",
+    "elastic", "rehome_events", "migration_bytes",
 )
+
+# ``Report.to_row`` field formatters: row key -> (getter, format spec).
+# Schema-stable on purpose: benchmark ``derived`` strings are diffed across
+# PRs by benchmarks/trajectory_check.py, so renaming a key or changing a
+# format is a trajectory break — grow, don't mutate.
+ROW_FORMATS = {
+    "recall": (lambda r: r.recall, ".3f"),
+    "qps": (lambda r: r.modeled_qps, ".0f"),
+    "lat_ms": (lambda r: r.modeled_latency_s * 1e3, ".2f"),
+    "hops": (lambda r: r.counters["hops"], ".1f"),
+    "inter": (lambda r: r.counters["inter_hops"], ".2f"),
+    "reads": (lambda r: r.counters["reads"], ".1f"),
+    "dist_comps": (lambda r: r.counters["dist_comps"], ".0f"),
+    "lut_builds": (lambda r: r.counters["lut_builds"], ".2f"),
+    "envelope_bytes": (lambda r: r.envelope_bytes, "d"),
+    "wall_s": (lambda r: r.wall_s, ".1f"),
+    # sim-section fields — valid when the report carries a sim block
+    "mean_ms": (lambda r: r.sim["mean_s"] * 1e3, ".2f"),
+    "p50_ms": (lambda r: r.sim["p50_s"] * 1e3, ".2f"),
+    "p99_ms": (lambda r: r.sim["p99_s"] * 1e3, ".2f"),
+    "sat_qps": (lambda r: r.sim["saturation_qps"], ".0f"),
+}
 
 
 @dataclasses.dataclass
@@ -69,20 +94,60 @@ class Report:
     stats: dict = dataclasses.field(repr=False, default=None)
 
     def to_dict(self) -> dict:
+        """The schema-stable report dict (exactly ``REPORT_FIELDS`` keys;
+        raw ``ids``/``dists``/``stats`` arrays are deliberately excluded)."""
         return {f: getattr(self, f) for f in REPORT_FIELDS}
+
+    def to_row(self, *fields: str, prefix: str = "", **extra) -> str:
+        """Render report fields as a bench ``derived`` string
+        (``key=value;key=value``) with schema-stable formatting.
+
+        The one serializer behind ``benchmarks/figures.py`` rows — figure
+        functions pick fields instead of hand-formatting them (ROADMAP
+        ``Report.to_row`` follow-up), so a format lives in exactly one
+        place and the cross-PR trajectory check keeps diffing stable keys.
+
+        Args:
+            *fields: keys from :data:`ROW_FORMATS` (e.g. ``"recall"``,
+                ``"qps"``, ``"hops"``; sim-block keys like ``"p99_ms"``
+                need ``sim.send_rate > 0``).  Rendered in argument order.
+            prefix: prepended to every key — ``to_row("qps",
+                prefix="batann_")`` -> ``"batann_qps=…"`` (the two-engine
+                comparison rows).
+            **extra: pre-formatted figure-specific values appended verbatim
+                after the standard fields, in keyword order.
+
+        Returns:
+            The ``;``-joined ``derived`` string.
+
+        Raises:
+            KeyError: for a field name outside :data:`ROW_FORMATS`.
+        """
+        parts = []
+        for f in fields:
+            if f not in ROW_FORMATS:
+                raise KeyError(
+                    f"unknown row field {f!r}; known: {sorted(ROW_FORMATS)}")
+            getter, spec = ROW_FORMATS[f]
+            parts.append(f"{prefix}{f}={getter(self):{spec}}")
+        parts += [f"{prefix}{k}={v}" for k, v in extra.items()]
+        return ";".join(parts)
 
 
 def _straggler_multipliers(spec: str, n_servers: int):
     """'0:4.0,2:1.5' -> per-server read multipliers tuple (or None).
-    Format/range were validated at ServeConfig construction."""
-    pairs = parse_straggler(spec)
+
+    Format/range were validated at ServeConfig construction against the
+    *largest* tier the config can reach; an elastic scenario also prices
+    smaller tiers (the static saturation run, pre-scale-up epochs), so
+    entries addressing servers beyond ``n_servers`` are ignored here —
+    they only apply at epochs where those servers exist."""
+    pairs = [(srv, m) for srv, m in parse_straggler(spec)
+             if srv < n_servers]
     if not pairs:
         return None
     mult = [1.0] * n_servers
     for srv, m in pairs:
-        if not 0 <= srv < n_servers:
-            raise ValueError(
-                f"straggler server {srv} out of range 0..{n_servers - 1}")
         mult[srv] = m
     return tuple(mult)
 
@@ -150,7 +215,26 @@ class Deployment:
     # --- the pipeline ------------------------------------------------------
     def run(self, queries=None, gt=None) -> Report:
         """Search -> recall -> counters -> cost model -> (optional) cluster
-        simulation, in one Report."""
+        simulation, in one Report.
+
+        Args:
+            queries: (B, dim) float32 query batch; defaults to the
+                dataset's own queries (then ``gt`` defaults to its ground
+                truth too).
+            gt: (B, >=k) ground-truth neighbor ids for recall@k; ``None``
+                leaves ``Report.recall`` as ``None``.
+
+        Returns:
+            A :class:`Report` — recall, mean per-query counters, envelope
+            bytes, closed-form modeled QPS / latency (seconds) /
+            bottleneck, and (iff ``sim.send_rate > 0``) the simulated
+            ``SIM_FIELDS`` block.
+
+        Raises:
+            ValueError: before searching, if the config asks for the event
+                simulator but the engine emits no replayable traces
+                (``ExactEngine``).
+        """
         if (self.config.sim.send_rate > 0
                 and not getattr(self.engine, "has_traces", True)):
             # fail fast — before the (expensive) search, not after it
@@ -180,12 +264,24 @@ class Deployment:
             ids=res.ids, dists=res.dists, stats=res.stats,
         )
 
-    def sim_params(self, placement=None):
-        """The cluster-simulator ``SimParams`` of this scenario.  When the
-        config asks for hot-partition replication (``replicas="hot:<b>"``)
-        the caller supplies the load-derived ``placement`` (from
-        ``cluster.hot_placement`` — ``_simulate`` derives it from the
-        workload's arrivals)."""
+    def sim_params(self, placement=None, n_servers: int | None = None):
+        """The cluster-simulator ``SimParams`` of this scenario (static —
+        the elastic schedule, when configured, is layered on by
+        ``_simulate`` so saturation search still prices the static tier).
+
+        Args:
+            placement: load-derived ``cluster.Placement``, required when
+                the config asks for hot-partition replication
+                (``replicas="hot:<b>"``; from ``cluster.hot_placement`` —
+                ``_simulate`` derives it from the workload's arrivals).
+            n_servers: server count the straggler multiplier tuple must
+                cover (defaults to the deployment's ``n_servers``; the
+                elastic path passes the schedule's maximum).
+
+        Returns:
+            ``cluster.SimParams`` with the cache / replication / straggler
+            scenario stages of the config's ``sim`` section.
+        """
         from repro import cluster
 
         sim = self.config.sim
@@ -200,12 +296,23 @@ class Deployment:
         return cluster.SimParams(
             cache_sectors=sim.cache_sectors, warm_cache=sim.warm_cache,
             replicas=replicas, placement=placement,
-            read_mult=_straggler_multipliers(sim.straggler, self.n_servers),
+            read_mult=_straggler_multipliers(
+                sim.straggler, n_servers or self.n_servers),
         )
 
     def _simulate(self, stats: dict) -> dict:
-        """The serve launcher's event-simulator block, config-driven."""
+        """The serve launcher's event-simulator block, config-driven.
+
+        Returns the ``Report.sim`` dict (exactly ``SIM_FIELDS`` keys).
+        With ``sim.elastic`` configured, the replay runs under the
+        time-varying ``PlacementSchedule`` (minimal-move rescales chained
+        by ``ft.elastic.elastic_schedule``) with per-copy migration bytes
+        charged over the source NIC; ``saturation_qps`` still refers to
+        the *static* ``index.p``-server tier so the elastic run has a
+        fixed yardstick.
+        """
         from repro import cluster
+        from repro.ft import elastic as ft_elastic
 
         sim = self.config.sim
         p = self.n_servers
@@ -221,13 +328,22 @@ class Deployment:
         params = self.sim_params(placement)
         sat = cluster.find_saturation_qps(traces, p, params, seed=sim.seed,
                                           criterion=sim.sat_criterion)
-        res = cluster.simulate(traces, p, wl, params)
-        pl = params.resolve_placement(p, p)
         part_bytes = partition_bytes(self.engine.index)
+        run_params, n_srv = params, p
+        steps = parse_elastic(sim.elastic)
+        if steps:
+            schedule = ft_elastic.elastic_schedule(steps, n_parts=p)
+            n_srv = schedule.max_server + 1
+            run_params = dataclasses.replace(
+                params, schedule=schedule, migration_bytes=part_bytes,
+                read_mult=_straggler_multipliers(sim.straggler, n_srv))
+        res = cluster.simulate(traces, n_srv, wl, run_params)
+        pl = params.resolve_placement(p, p)
         scenario = (f"cache={sim.cache_sectors}"
                     f"{'(warm)' if sim.warm_cache else ''} "
                     f"replicas={sim.replicas} "
-                    f"straggler={sim.straggler or '-'}")
+                    f"straggler={sim.straggler or '-'}"
+                    f"{' elastic=' + sim.elastic if sim.elastic else ''}")
         return {
             "rate_qps": sim.send_rate, "arrival": sim.arrival,
             "offered": res.offered, "completed": res.completed,
@@ -241,6 +357,9 @@ class Deployment:
             "replica_memory_bytes": self.cost.replica_memory_bytes(
                 part_bytes, pl.copies_per_partition),
             "scenario": scenario,
+            "elastic": sim.elastic,
+            "rehome_events": res.diag.get("rehome_events", 0),
+            "migration_bytes": res.diag.get("migration_bytes_total", 0.0),
         }
 
     # --- index persistence (checkpoint/ckpt.py) ----------------------------

@@ -13,7 +13,8 @@ from repro.cluster.trace import (          # noqa: F401
 )
 from repro.cluster.workload import Workload, make_workload  # noqa: F401
 from repro.cluster.stages import (         # noqa: F401
-    CacheTier, Placement, ServerConfig, ServerStack, Stage,
+    CacheTier, Placement, PlacementSchedule, ServerConfig, ServerStack,
+    Stage,
 )
 from repro.cluster.sim import (            # noqa: F401
     SimParams, SimResult, backlog_growing, capacity_qps,

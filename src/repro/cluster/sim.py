@@ -27,6 +27,16 @@ least-loaded replica is picked at slot-acquire time (``SimParams.replicas``
 or an explicit map).  Per-server straggler multipliers
 (``SimParams.read_mult`` / ``compute_mult``) scale SSD/CPU service times.
 
+A :class:`stages.PlacementSchedule` (``SimParams.schedule``) makes the
+placement *time-varying* — the elasticity scenario.  At each epoch boundary
+the simulator diffs consecutive placements and starts one **re-home job**
+per gained partition copy: ``SimParams.migration_bytes`` are streamed from
+the old primary's NIC in ``migration_chunk_bytes`` chunks (regular envelope
+traffic interleaves between chunks), priced via ``CostModel.tx_s`` like any
+other transfer.  Until a partition's stream completes it stays
+**dual-homed**: routing keeps using the old replica set, so in-flight
+batons drain without loss and conservation holds across epochs.
+
 With every scenario stage disabled (no cache, identity placement, unit
 multipliers — the defaults) the zero-load limit of this machine is exactly
 the closed-form ``CostModel.query_latency_s`` (tested to <1%) and the event
@@ -40,7 +50,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.cluster.stages import Placement, Sched, ServerConfig, ServerStack
+from repro.cluster.stages import (
+    Placement, PlacementSchedule, Sched, ServerConfig, ServerStack,
+)
 from repro.cluster.trace import BatonTrace, ScatterGatherTrace, Segment
 from repro.cluster.workload import Workload, make_workload
 from repro.io_sim.disk import DEFAULT, CostModel
@@ -67,6 +79,10 @@ class SimParams:
     placement: Placement | None = None   # explicit map (overrides replicas)
     read_mult: tuple[float, ...] | None = None     # per-server straggler
     compute_mult: tuple[float, ...] | None = None  # multipliers
+    # --- elasticity: time-varying placement with trace re-homing -----------
+    schedule: PlacementSchedule | None = None   # overrides placement/replicas
+    migration_bytes: float = 0.0         # bytes streamed per re-homed copy
+    migration_chunk_bytes: int = 256 * 1024  # NIC chunk (envelopes interleave)
 
     def server_config(self, sid: int) -> ServerConfig:
         return ServerConfig(
@@ -85,6 +101,33 @@ class SimParams:
                     f"servers — need one multiplier per server")
 
     def resolve_placement(self, n_parts: int, n_servers: int) -> Placement:
+        """The static placement of this scenario (with a ``schedule``, its
+        initial epoch — what ``capacity_qps`` brackets against).
+
+        Args:
+            n_parts: partitions the traces reference (``_max_part``).
+            n_servers: server stacks the caller will build.
+
+        Returns:
+            The explicit ``placement`` if set, else a ring map when
+            ``replicas > 1``, else the identity map.  A ``schedule``
+            excludes both (the epochs *are* the placements).
+        """
+        if self.schedule is not None:
+            if self.placement is not None or self.replicas > 1:
+                raise ValueError(
+                    "schedule and placement/replicas are mutually "
+                    "exclusive — encode replication in the schedule's "
+                    "epoch placements")
+            if self.schedule.n_parts < n_parts:
+                raise ValueError(
+                    f"schedule covers {self.schedule.n_parts} partitions, "
+                    f"traces reference {n_parts}")
+            if self.schedule.max_server >= n_servers:
+                raise ValueError(
+                    f"schedule routes to server {self.schedule.max_server} "
+                    f"but only {n_servers} servers exist")
+            return self.schedule.epochs[0][1]
         if self.placement is not None:
             if self.placement.n_parts < n_parts:
                 raise ValueError(
@@ -138,13 +181,24 @@ class SimResult:
     def cache_hit_rate(self) -> float:
         return self.diag.get("cache_hit_rate", 0.0)
 
+    def completion_s(self) -> np.ndarray:
+        """Per-arrival completion time (seconds; ``+inf`` if lost)."""
+        return self.arrive_s + np.where(np.isnan(self.latencies_s),
+                                        np.inf, self.latencies_s)
+
+    def throughput_in(self, t0: float, t1: float) -> float:
+        """Completed queries per second inside the window ``[t0, t1)`` —
+        the windowed view the elastic scenario reads recovery off (overall
+        ``throughput_qps`` averages across placement epochs)."""
+        done = self.completion_s()
+        n = int(np.count_nonzero((done >= t0) & (done < t1)))
+        return n / max(t1 - t0, 1e-12)
+
     def backlog_at(self, times_s) -> np.ndarray:
         """In-flight query count at each time: #arrived − #completed."""
         times_s = np.asarray(times_s, float)
-        done = self.arrive_s + np.where(np.isnan(self.latencies_s),
-                                        np.inf, self.latencies_s)
         arr = np.sort(self.arrive_s)
-        fin = np.sort(done)
+        fin = np.sort(self.completion_s())
         return (np.searchsorted(arr, times_s, side="right")
                 - np.searchsorted(fin, times_s, side="right"))
 
@@ -205,14 +259,85 @@ def simulate(traces, n_servers: int, workload: Workload,
     lat = np.full(n, np.nan)
     arrive = np.asarray(workload.times_s, float)
     completed = 0
+    last_done = 0.0
     events: "list | None" = [] if params.record_events else None
 
     def log(t, kind, aid, srv):
         if events is not None:
             events.append((t, kind, aid, srv))
 
-    def pick(part: int) -> int:
-        return placement.select(part, lambda s: servers[s].load())
+    # --- routing: static placement, or a schedule with re-homing -----------
+    schedule = params.schedule
+    rehomes: list = []
+    if schedule is None:
+
+        def pick(part: int) -> int:
+            return placement.select(part, lambda s: servers[s].load())
+
+    else:
+        # `serving[p]` is who can serve p *right now*; it lags the scheduled
+        # placement while p's copy streams (dual-homing), so in-flight and
+        # newly arriving batons always route to a server that holds the data
+        serving = [tuple(r) for r in schedule.epochs[0][1].replicas]
+        latest = list(serving)            # most recent scheduled target
+        migrating: set = set()
+
+        def start_move(p: int, t: float) -> None:
+            tgt = latest[p]
+            cur = serving[p]
+            gains = tuple(s for s in tgt if s not in cur)
+            if not gains:
+                serving[p] = tgt          # pure drop/reorder: free, instant
+                return
+            migrating.add(p)
+            src = cur[0]
+            per = max(0.0, params.migration_bytes)
+            chunk = max(1, params.migration_chunk_bytes)
+            plan = []                     # chunked stream, one copy per gain
+            for dst in gains:
+                left = per
+                while left > chunk:
+                    plan.append((chunk, dst))
+                    left -= chunk
+                plan.append((left, dst))
+            total = per * len(gains)
+            t0 = t
+            log(t, "rehome_start", p, src)
+
+            def send_next(i, tn):
+                if i >= len(plan):
+                    migrating.discard(p)
+                    serving[p] = tgt
+                    rehomes.append((t0, tn, p, src, gains, total))
+                    log(tn, "rehome_done", p, gains[-1])
+                    if latest[p] != tgt:  # superseded by a newer epoch
+                        start_move(p, tn)
+                    return
+                nb, dst = plan[i]
+                servers[src].send(tn, nb, lambda ta: send_next(i + 1, ta))
+
+            send_next(0, t)
+
+        def apply_epoch(k: int):
+            def fire(t):
+                pl = schedule.epochs[k][1]
+                for p in range(len(latest)):
+                    tgt = tuple(pl.replicas[p])
+                    if tgt == latest[p]:
+                        continue
+                    latest[p] = tgt
+                    if p not in migrating:  # else: chained at stream end
+                        start_move(p, t)
+            return fire
+
+        for k in range(1, schedule.n_epochs):
+            sched.at(schedule.epochs[k][0], apply_epoch(k))
+
+        def pick(part: int) -> int:
+            srvs = serving[part]
+            if len(srvs) == 1:
+                return srvs[0]
+            return min(srvs, key=lambda s: servers[s].load())
 
     def hop_plan(tr, seg_index: int, seg: Segment):
         """Split a segment into per-hop (sector reads, cpu_seconds) phases.
@@ -245,9 +370,10 @@ def simulate(traces, n_servers: int, workload: Workload,
 
     def finish(aid, t0, t, last_srv, home_srv):
         def complete(tc):
-            nonlocal completed
+            nonlocal completed, last_done
             lat[aid] = tc - t0
             completed += 1
+            last_done = max(last_done, tc)
             log(tc, "complete", aid, home_srv)
 
         if params.charge_result_return and last_srv != home_srv:
@@ -396,7 +522,12 @@ def simulate(traces, n_servers: int, workload: Workload,
 
     sched.run()
 
-    makespan = float(sched.now - arrive[0]) if n else 0.0
+    # statically-placed runs drain exactly at the last completion; under a
+    # schedule the heap can outlive the workload (a late epoch event and
+    # its migration streams), so makespan tracks the last *query* — else a
+    # post-drain epoch would inflate makespan/deflate throughput_qps
+    t_end = sched.now if schedule is None else last_done
+    makespan = float(t_end - arrive[0]) if n else 0.0
     diag = {
         "max_ssd_queue": max(s.ssd.max_q for s in servers),
         "max_cpu_queue": max(s.cpu.max_q for s in servers),
@@ -409,6 +540,13 @@ def simulate(traces, n_servers: int, workload: Workload,
         diag["cache_lookups"] = lookups
         diag["cache_hits"] = hits
         diag["cache_hit_rate"] = hits / lookups if lookups else 0.0
+    if schedule is not None:
+        # one record per re-homed partition: (t_start, t_done, part, src,
+        # gained-server tuple, bytes streamed)
+        diag["rehomes"] = rehomes
+        diag["rehome_events"] = len(rehomes)
+        diag["migration_bytes_total"] = float(sum(r[5] for r in rehomes))
+        diag["epochs"] = schedule.n_epochs
     return SimResult(
         latencies_s=lat, arrive_s=arrive,
         trace_idx=np.asarray(workload.trace_idx),

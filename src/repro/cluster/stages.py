@@ -15,7 +15,12 @@ stages behind one small protocol:
   — under a per-server :class:`ServerConfig` (straggler service-time
   multipliers, cache capacity);
 * :class:`Placement` maps partitions to *sets* of servers (replication) with
-  deterministic least-loaded selection at slot-acquire time.
+  deterministic least-loaded selection at slot-acquire time;
+* :class:`PlacementSchedule` makes the placement *time-varying* (the
+  elasticity scenario): a sorted sequence of ``(start_s, Placement)`` epochs
+  the simulator consults at slot-acquire / hand-off / scatter time, with
+  partition re-homing charged over the NIC at each epoch boundary
+  (``sim.SimParams.migration_bytes``).
 
 Everything is deterministic: ties in replica selection break by position in
 the replica tuple, the scheduler orders simultaneous events FIFO by
@@ -34,7 +39,12 @@ from repro.io_sim.disk import CostModel
 
 
 class Sched:
-    """Event heap keyed (time, seq): FIFO among simultaneous events."""
+    """Event heap keyed (time, seq): FIFO among simultaneous events.
+
+    ``now`` is the time (seconds) of the event currently being dispatched;
+    it only moves forward.  Determinism rests on the ``seq`` tiebreaker:
+    two events scheduled for the same instant fire in insertion order.
+    """
 
     __slots__ = ("heap", "seq", "now")
 
@@ -44,10 +54,13 @@ class Sched:
         self.now = 0.0
 
     def at(self, t: float, fn) -> None:
+        """Schedule ``fn(t)`` at absolute time ``t`` (seconds)."""
         heapq.heappush(self.heap, (t, self.seq, fn))
         self.seq += 1
 
     def run(self) -> None:
+        """Dispatch events in (time, insertion) order until the heap drains
+        (events may schedule further events)."""
         heap = self.heap
         while heap:
             t, _, fn = heapq.heappop(heap)
@@ -75,9 +88,14 @@ class Stage:
         self.max_q = 0
 
     def request(self, t: float, job, cb) -> None:  # pragma: no cover
+        """Enqueue ``job`` at time ``t`` (seconds); call ``cb(t_done)``
+        exactly once when service completes.  Never blocks; completion is
+        delivered through the scheduler."""
         raise NotImplementedError
 
     def stats(self) -> dict:
+        """Uniform counters: ``served`` (jobs), ``busy_s`` (resource-seconds
+        of service), ``max_q`` (peak queue depth, jobs)."""
         return {"served": self.served, "busy_s": self.busy_s,
                 "max_q": self.max_q}
 
@@ -99,6 +117,8 @@ class ChannelStage(Stage):
         self.q: deque = deque()
 
     def request(self, t: float, job: int, cb) -> None:
+        """``job`` = batch size in service units (reads); clamped to
+        ``capacity`` so an oversized batch can still be granted."""
         self.q.append((min(job, self.capacity), cb))
         self.max_q = max(self.max_q, len(self.q))
         self._pump(t)
@@ -130,6 +150,7 @@ class WorkerStage(Stage):
         self.q: deque = deque()
 
     def request(self, t: float, job: float, cb) -> None:
+        """``job`` = service duration in seconds for one worker."""
         self.q.append((job, cb))
         self.max_q = max(self.max_q, len(self.q))
         self._pump(t)
@@ -162,6 +183,8 @@ class LinkStage(Stage):
         self.ends: deque = deque()   # tx-finish times of unfinished sends
 
     def request(self, t: float, job: int, cb) -> None:
+        """``job`` = message size in bytes; ``cb`` fires at receiver-side
+        delivery (tx occupancy + propagation + deserialize)."""
         ends = self.ends
         while ends and ends[0] <= t:
             ends.popleft()
@@ -194,17 +217,23 @@ class SlotStage(Stage):
         self.admits: deque = deque()
 
     def request(self, t: float, job: str, cb) -> None:
+        """``job`` = admission class: ``"handoff"`` (strict priority, may
+        take every slot) or ``"admit"`` (keeps ``headroom`` slots free);
+        ``cb(t)`` fires when a slot is granted."""
         (self.handoffs if job == "handoff" else self.admits).append(cb)
         self._pump(t)
 
     def release(self, t: float) -> None:
+        """Return one slot at time ``t`` and grant it to the next waiter."""
         self.free += 1
         self._pump(t)
 
     def in_use(self) -> int:
+        """Slots currently held (resident query states)."""
         return self.capacity - self.free
 
     def waiting(self) -> int:
+        """States queued for a slot (both admission classes)."""
         return len(self.handoffs) + len(self.admits)
 
     def _pump(self, t: float) -> None:
@@ -349,9 +378,13 @@ class ServerStack:
         self.ssd.request(t, misses, join)
 
     def compute(self, t: float, base_s: float, cb) -> None:
+        """Queue one hop's scoring job: ``base_s`` seconds of CPU, scaled
+        by this server's straggler ``compute_mult``."""
         self.cpu.request(t, base_s * self.config.compute_mult, cb)
 
     def send(self, t: float, n_bytes: int, cb) -> None:
+        """Queue ``n_bytes`` on this server's egress NIC; ``cb`` fires at
+        receiver-side delivery."""
         self.nic.request(t, n_bytes, cb)
 
     def load(self) -> int:
@@ -360,6 +393,8 @@ class ServerStack:
         return self.slots.in_use() + self.slots.waiting()
 
     def stats(self) -> dict:
+        """Per-stage uniform counters keyed by stage name (``ssd`` / ``cpu``
+        / ``nic`` / ``slots``, plus ``cache`` when the tier is enabled)."""
         out = {s.name: s.stats()
                for s in (self.ssd, self.cpu, self.nic, self.slots)}
         if self.cache is not None:
@@ -389,7 +424,18 @@ class Placement:
 
     @staticmethod
     def identity(n_parts: int) -> "Placement":
+        """Partition p on server p, one copy (needs n_servers >= n_parts)."""
         return Placement(tuple((p,) for p in range(n_parts)))
+
+    @staticmethod
+    def fold(n_parts: int, n_servers: int) -> "Placement":
+        """Partition p on server ``p % n_servers``, one copy — the modular
+        fold that maps a fixed partition set onto fewer servers (the same
+        warm start ``ft.elastic.rescale_assignment`` uses for node
+        assignments).  Identity when ``n_servers >= n_parts``."""
+        if n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1: {n_servers}")
+        return Placement(tuple((p % n_servers,) for p in range(n_parts)))
 
     @staticmethod
     def ring(n_parts: int, n_servers: int, copies: int) -> "Placement":
@@ -439,8 +485,115 @@ class Placement:
         return sum(len(r) for r in self.replicas) / max(len(self.replicas), 1)
 
     def select(self, part: int, load_fn) -> int:
-        """Least-loaded replica of ``part``; ties break by tuple position."""
+        """Pick the serving replica of partition ``part``.
+
+        Args:
+            part: partition index (``0 <= part < n_parts``).
+            load_fn: ``server_id -> load`` (any comparable; the simulator
+                passes ``ServerStack.load`` — resident + waiting states).
+
+        Returns:
+            The least-loaded server id holding a copy of ``part``; ties
+            break by position in the replica tuple (``min`` is stable), so
+            the no-replication case is bit-identical to direct indexing.
+        """
         srvs = self.replicas[part]
         if len(srvs) == 1:
             return srvs[0]
         return min(srvs, key=load_fn)  # min is stable: ties -> first listed
+
+
+# ---------------------------------------------------------------------------
+# placement schedule: time -> Placement (the elasticity scenario)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSchedule:
+    """Time-varying placement: a sorted tuple of ``(start_s, Placement)``
+    epochs over the *same* partition set.
+
+    Epoch ``k`` governs routing from ``epochs[k][0]`` (seconds, simulation
+    time) until the next epoch starts.  The first epoch must start at 0.0
+    so every instant has a defined placement.  Between epochs the simulator
+    *re-homes* moved partitions: each copy a server gains is streamed from
+    the old primary over its NIC (``SimParams.migration_bytes`` per copy,
+    priced via ``CostModel.tx_s``), and until that stream completes the
+    partition stays **dual-homed** — the old replica set keeps serving, so
+    in-flight batons drain without loss.
+
+    A single-epoch schedule is exactly a static :class:`Placement`
+    (``PlacementSchedule.static``) and produces a bit-identical event log.
+    """
+
+    epochs: tuple[tuple[float, "Placement"], ...]
+
+    def __post_init__(self):
+        if not self.epochs:
+            raise ValueError("schedule needs at least one (t, Placement)")
+        times = [t for t, _ in self.epochs]
+        if times[0] != 0.0:
+            raise ValueError(
+                f"first epoch must start at t=0.0 (got {times[0]}): every "
+                f"instant needs a defined placement")
+        if any(b <= a for a, b in zip(times, times[1:])):
+            raise ValueError(
+                f"epoch start times must be strictly increasing: {times}")
+        n0 = self.epochs[0][1].n_parts
+        for t, pl in self.epochs[1:]:
+            if pl.n_parts != n0:
+                raise ValueError(
+                    f"epoch at t={t} covers {pl.n_parts} partitions, "
+                    f"epoch 0 covers {n0} — the partition set is fixed; "
+                    f"only its server homes move")
+
+    @staticmethod
+    def static(placement: "Placement") -> "PlacementSchedule":
+        """The degenerate one-epoch schedule (== a static placement)."""
+        return PlacementSchedule(((0.0, placement),))
+
+    @property
+    def n_parts(self) -> int:
+        return self.epochs[0][1].n_parts
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def max_server(self) -> int:
+        """Highest server id any epoch routes to (the simulator must build
+        ``max_server + 1`` server stacks so every epoch's targets exist)."""
+        return max(s for _, pl in self.epochs
+                   for r in pl.replicas for s in r)
+
+    def at(self, t: float) -> "Placement":
+        """The placement governing simulation time ``t`` (seconds) — the
+        *scheduled* one; the simulator's effective routing additionally
+        dual-homes partitions whose migration is still streaming."""
+        pl = self.epochs[0][1]
+        for start, nxt in self.epochs[1:]:
+            if t < start:
+                break
+            pl = nxt
+        return pl
+
+    def moves(self, k: int) -> tuple[tuple[int, int, int], ...]:
+        """Copy gains of epoch ``k`` relative to epoch ``k-1``.
+
+        Returns ``(part, src, dst)`` per gained copy — ``dst`` is a server
+        that holds ``part`` in epoch ``k`` but not in ``k-1``; ``src`` is
+        the old primary (first replica) that streams the copy.  Pure drops
+        and reorders produce no moves (dropping a copy is free).  Order is
+        deterministic: by partition, then by position in the new tuple.
+        """
+        if not 1 <= k < len(self.epochs):
+            raise IndexError(f"epoch {k} of {len(self.epochs)} has no "
+                             f"predecessor to diff against")
+        old = self.epochs[k - 1][1].replicas
+        new = self.epochs[k][1].replicas
+        return tuple(
+            (p, old[p][0], dst)
+            for p in range(len(new))
+            for dst in new[p] if dst not in old[p]
+        )

@@ -90,7 +90,11 @@ class SimSpec:
     carries only the closed-form modeled QPS/latency.  ``replicas`` is an
     int (ring placement, every partition replicated) or ``"hot:<budget>"``
     (replicate only the hottest partitions under an extra-copy budget —
-    ``Placement.for_skew``).
+    ``Placement.for_skew``).  ``elastic`` is a placement *schedule*
+    ``"t0:n0,t1:n1,..."`` (seconds:servers — e.g. ``"0:4,0.5:8"`` starts on
+    4 servers and scales to 8 at t=0.5 s): the simulator re-homes moved
+    partitions at each step, streaming each copy's bytes over the NIC and
+    dual-homing it until the stream lands (``ft.elastic.elastic_schedule``).
     """
 
     send_rate: float = 0.0
@@ -101,6 +105,7 @@ class SimSpec:
     replicas: str = "1"          # "<int>" or "hot:<extra-copy budget>"
     straggler: str = ""          # e.g. "0:4.0,2:1.5" per-server SSD mult
     sat_criterion: str = "latency"  # latency | backlog | both
+    elastic: str = ""            # "t0:n0,t1:n1" placement schedule (seconds)
     seed: int = 0
 
     def __post_init__(self):
@@ -115,6 +120,15 @@ class SimSpec:
                 f"replicas must be '<int>' or 'hot:<int>': {self.replicas!r}"
             ) from None
         parse_straggler(self.straggler)
+        steps = parse_elastic(self.elastic)
+        if steps:
+            if self.send_rate <= 0:
+                raise ValueError(
+                    "elastic needs the event simulator: set send_rate > 0")
+            if r != "1":
+                raise ValueError(
+                    "elastic and replicas are mutually exclusive — the "
+                    "schedule's epoch placements define the copies")
 
 
 def parse_straggler(spec: str) -> list[tuple[int, float]]:
@@ -134,6 +148,42 @@ def parse_straggler(spec: str) -> list[tuple[int, float]]:
             raise ValueError(
                 f"straggler must be '<server>:<mult>[,..]' (e.g. "
                 f"'0:4.0,2:1.5'): {spec!r}") from None
+    return out
+
+
+def parse_elastic(spec: str) -> list[tuple[float, int]]:
+    """``'0:4,0.5:8'`` -> ``[(0.0, 4), (0.5, 8)]`` — the serve launcher's
+    ``--elastic`` / ``SimSpec.elastic`` placement-schedule format.
+
+    Each token is ``<t_seconds>:<n_servers>``; times must start at 0 and
+    strictly increase, server counts must be >= 1.  Empty spec -> ``[]``
+    (no schedule).  The one parser shared by SimSpec validation and the
+    deployment's schedule assembly.
+    """
+    if not spec:
+        return []
+    out = []
+    for tok in spec.split(","):
+        parts = tok.split(":")
+        try:
+            if len(parts) != 2:
+                raise ValueError
+            t, n = float(parts[0]), int(parts[1])
+        except ValueError:
+            raise ValueError(
+                f"elastic must be '<t_s>:<n_servers>[,..]' (e.g. "
+                f"'0:4,0.5:8'): {spec!r}") from None
+        if n < 1:
+            raise ValueError(f"elastic server count must be >= 1: {spec!r}")
+        out.append((t, n))
+    if out[0][0] != 0.0:
+        raise ValueError(
+            f"elastic schedule must start at t=0 (every instant needs a "
+            f"server count): {spec!r}")
+    times = [t for t, _ in out]
+    if any(b <= a for a, b in zip(times, times[1:])):
+        raise ValueError(
+            f"elastic step times must be strictly increasing: {spec!r}")
     return out
 
 
@@ -159,12 +209,16 @@ class ServeConfig:
     def __post_init__(self):
         # cross-section check the sections can't do alone: straggler server
         # indices must address real servers — caught here, at config
-        # construction, not after the (expensive) index build
+        # construction, not after the (expensive) index build.  An elastic
+        # schedule can raise the server count above index.p (idle servers
+        # pre-scale-up), so the range covers its maximum too.
+        n_srv = max([self.index.p]
+                    + [n for _, n in parse_elastic(self.sim.elastic)])
         for srv, _ in parse_straggler(self.sim.straggler):
-            if not 0 <= srv < self.index.p:
+            if not 0 <= srv < n_srv:
                 raise ValueError(
                     f"straggler server {srv} out of range "
-                    f"0..{self.index.p - 1}")
+                    f"0..{n_srv - 1}")
 
     # --- overrides ---------------------------------------------------------
     def with_updates(self, name: str | None = None, **sections

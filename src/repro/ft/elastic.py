@@ -18,6 +18,12 @@ Mechanisms (DESIGN.md §7):
 * **Elastic rescale** — rebuild the partition maps for a new device count
   from the persisted assignment (cheap: LDG re-streams from the previous
   assignment as warm start).
+* **Elastic placement** — for the cluster simulator's elasticity scenario,
+  :func:`rescale_placement` produces the *minimal-move* target
+  ``Placement`` for an N→N±k server change (only forced + rebalancing
+  copies move; everything else stays home), and :func:`elastic_schedule`
+  chains such rescales into a ``cluster.PlacementSchedule`` the simulator
+  replays with per-move migration costs.
 """
 
 from __future__ import annotations
@@ -109,6 +115,110 @@ class ReissueTracker:
             pending = pending[~ok]
             attempts += 1
         return ids, dists, agg_stats, pending
+
+
+def rescale_placement(placement, n_servers: int):
+    """Minimal-move target :class:`cluster.Placement` for N→N±k servers.
+
+    Args:
+        placement: the current ``cluster.Placement`` (partition → replica
+            server tuple; first entry is the primary).
+        n_servers: the new server count.  Servers ``>= n_servers`` are
+            being decommissioned; new ids below it are empty and absorb
+            moved copies.
+
+    Returns:
+        A ``Placement`` over the same partitions whose per-server copy
+        counts are balanced to within one copy of the mean, reached with
+        the minimum number of copy moves: copies on decommissioned servers
+        *must* move (forced), and beyond that only the excess over each
+        server's balanced target moves.  Untouched partitions keep their
+        exact replica tuples, so the simulator re-homes (and charges
+        migration for) moved partitions only.  Deterministic: donors are
+        drained most-loaded-first, receivers filled emptiest-first, ties
+        break toward the lower server / partition index.
+    """
+    from repro.cluster.stages import Placement
+
+    if n_servers < 1:
+        raise ValueError(f"n_servers must be >= 1: {n_servers}")
+    reps = [list(r) for r in placement.replicas]
+    total = sum(len(r) for r in reps)
+    cnt = [0] * n_servers
+    for r in reps:
+        for s in r:
+            if s < n_servers:
+                cnt[s] += 1
+    # balanced per-server targets: ceil for the currently-fullest servers
+    # (minimizes moves), floor for the rest
+    base, extra = divmod(total, n_servers)
+    target = [base] * n_servers
+    for s in sorted(range(n_servers), key=lambda x: (-cnt[x], x))[:extra]:
+        target[s] += 1
+
+    def receiver(exclude) -> int:
+        """Emptiest server below target not already holding the partition."""
+        cands = [s for s in range(n_servers)
+                 if cnt[s] < target[s] and s not in exclude]
+        if not cands:  # replica constraint blocks all deficit servers
+            cands = [s for s in range(n_servers) if s not in exclude]
+        return min(cands, key=lambda s: (cnt[s] - target[s], s))
+
+    # 1) forced moves: copies on decommissioned servers
+    for r in reps:
+        for i, s in enumerate(r):
+            if s >= n_servers:
+                d = receiver(set(r) - {s})
+                r[i] = d
+                cnt[d] += 1
+    # 2) rebalance: drain servers above target into servers below it
+    while True:
+        donors = [s for s in range(n_servers) if cnt[s] > target[s]]
+        if not donors:
+            break
+        s = min(donors, key=lambda x: (-(cnt[x] - target[x]), x))
+        for p, r in enumerate(reps):  # lowest partition index on the donor
+            if s in r:
+                cands = [d for d in range(n_servers)
+                         if cnt[d] < target[d] and d not in r]
+                if cands:
+                    d = min(cands, key=lambda x: (cnt[x] - target[x], x))
+                    r[r.index(s)] = d
+                    cnt[s] -= 1
+                    cnt[d] += 1
+                    break
+        else:  # replica constraints block every move off this donor
+            break
+    return Placement(tuple(tuple(r) for r in reps))
+
+
+def elastic_schedule(steps, n_parts: int):
+    """Chain minimal-move rescales into a ``cluster.PlacementSchedule``.
+
+    Args:
+        steps: ``[(t0_s, n0), (t1_s, n1), ...]`` — at simulation time
+            ``tk_s`` (seconds) the serving tier scales to ``nk`` servers.
+            ``t0_s`` must be 0.0 (every instant needs a placement).
+        n_parts: size of the fixed partition set being re-homed.
+
+    Returns:
+        A ``PlacementSchedule`` whose first epoch is the modular fold of
+        ``n_parts`` partitions onto ``n0`` servers and whose every later
+        epoch is :func:`rescale_placement` of its predecessor — so each
+        boundary moves (and the simulator charges migration for) the
+        minimal set of partition copies.
+    """
+    from repro.cluster.stages import Placement, PlacementSchedule
+
+    if not steps:
+        raise ValueError("elastic schedule needs at least one (t, n) step")
+    epochs = []
+    pl = Placement.fold(n_parts, int(steps[0][1]))
+    epochs.append((float(steps[0][0]), pl))
+    for t, n in steps[1:]:
+        pl = rescale_placement(pl, int(n))
+        epochs.append((float(t), pl))
+    return PlacementSchedule(tuple(epochs))
 
 
 def rescale_assignment(neighbors: np.ndarray, old_assign: np.ndarray,

@@ -95,6 +95,13 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="saturation-knee criterion for the reported "
                          "saturation QPS (backlog = horizon-independent "
                          "queue-depth trend)")
+    ap.add_argument("--elastic", default=None, metavar="t0:n0,t1:n1",
+                    help="elastic placement schedule for the event "
+                         "simulator: at time t (seconds) the serving tier "
+                         "scales to n servers, e.g. '0:4,0.5:8' starts on "
+                         "4 servers and scales to 8 at t=0.5s; moved "
+                         "partitions are re-homed (bytes streamed over the "
+                         "source NIC, dual-homed until the copy lands)")
     return ap
 
 
@@ -124,6 +131,7 @@ def config_from_args(args):
             "warm_cache": args.warm_cache,
             "replicas": args.replicas, "straggler": args.straggler,
             "sat_criterion": args.sat_criterion,
+            "elastic": args.elastic,
         },
     )
 
@@ -174,6 +182,10 @@ def main():
             print(f"  replicas: {s['replicas']} "
                   f"extra_storage={s['replica_memory_bytes']/1e6:.1f}MB"
                   f"/partition-set")
+        if s["elastic"]:
+            print(f"  elastic: {s['elastic']} "
+                  f"rehomed={s['rehome_events']} partitions "
+                  f"migrated={s['migration_bytes']/1e6:.1f}MB over NIC")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Docs-as-tests (cheap tier-1 half; CI additionally *executes* the
+README snippet via tools/check_docs.py).
+
+* The README quickstart snippet extracts, parses, and imports only names
+  the package really exports — the documented API cannot silently drift.
+* docs/PAPER_MAP.md covers every benchmark suite tag.
+"""
+
+import ast
+import importlib
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, ROOT)  # the benchmarks namespace package
+
+
+@pytest.fixture(scope="module")
+def snippet():
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    from check_docs import extract_snippet
+
+    return extract_snippet()
+
+
+def test_readme_snippet_parses(snippet):
+    tree = ast.parse(snippet)          # SyntaxError -> fail
+    assert any(isinstance(n, (ast.Import, ast.ImportFrom)) for n in tree.body)
+
+
+def test_readme_snippet_imports_resolve(snippet):
+    """Every `from X import Y` in the snippet resolves against the real
+    package — without executing the (slower) pipeline itself."""
+    for node in ast.parse(snippet).body:
+        if isinstance(node, ast.ImportFrom):
+            mod = importlib.import_module(node.module)
+            for alias in node.names:
+                assert hasattr(mod, alias.name), (node.module, alias.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                importlib.import_module(alias.name)
+
+
+def test_paper_map_covers_every_bench_suite():
+    from benchmarks.run import SUITES
+
+    with open(os.path.join(ROOT, "docs", "PAPER_MAP.md")) as f:
+        doc = f.read()
+    missing = [tag for tag, _ in SUITES if f"`{tag}`" not in doc]
+    assert not missing, (
+        f"docs/PAPER_MAP.md misses suites {missing}; every "
+        f"`benchmarks/run.py --list` tag needs a row")
+
+
+def test_readme_links_docs():
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    assert "docs/PAPER_MAP.md" in readme
+    assert "docs/ARCHITECTURE.md" in readme

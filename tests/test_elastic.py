@@ -1,0 +1,351 @@
+"""Elastic placement schedules with trace re-homing (ISSUE-5 battery).
+
+* ``ft.elastic.rescale_placement`` produces the minimal-move target
+  placement for N→N±k servers (forced + rebalancing copies only; N→N is a
+  no-op), with balanced per-server copy counts.
+* ``PlacementSchedule`` validates at construction; ``SimSpec.elastic``
+  round-trips through JSON and rejects malformed schedules at config
+  construction time.
+* With no schedule configured (or a degenerate single-epoch schedule) the
+  simulator's event log is bit-identical to the static path — PR 4 parity.
+* Under a mid-run rescale: same seed ⇒ identical event log, every offered
+  query completes exactly once (conservation across the re-home epoch),
+  migration bytes are charged over the source NIC, and scaling up while
+  overloaded genuinely raises the post-event service rate.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.api import Deployment, ServeConfig, SimSpec
+from repro.api.engine import BatonEngine
+from repro.configs.batann_serve import parse_elastic
+from repro.core import baton
+from repro.core.state import envelope_bytes
+from repro.ft import elastic as ftel
+
+
+@pytest.fixture(scope="module")
+def traced(baton_index, dataset):
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    _, _, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128)
+    return cluster.from_baton_stats(stats, env)
+
+
+# ---------------------------------------------------------------------------
+# rescale_placement: minimal-move property
+# ---------------------------------------------------------------------------
+
+
+def _moves(old, new):
+    """Copies whose server changed between two placements."""
+    return sum(1 for a, b in zip(old.replicas, new.replicas) if a != b)
+
+
+def _min_moves(old, n_servers):
+    """Independent lower bound on copy moves for a single-copy placement:
+    forced moves (copies on decommissioned servers) plus the excess over
+    the balanced per-server targets (ceil targets granted to the fullest
+    servers, which is the assignment that minimizes excess)."""
+    total = old.n_parts
+    cnt = [0] * n_servers
+    forced = 0
+    for (s,) in old.replicas:
+        if s < n_servers:
+            cnt[s] += 1
+        else:
+            forced += 1
+    base, extra = divmod(total, n_servers)
+    target = [base] * n_servers
+    for s in sorted(range(n_servers), key=lambda x: (-cnt[x], x))[:extra]:
+        target[s] += 1
+    return forced + sum(max(0, cnt[s] - target[s]) for s in range(n_servers))
+
+
+@pytest.mark.parametrize("n_parts,n_old,n_new", [
+    (8, 4, 6),     # scale up
+    (8, 4, 8),     # scale up to one partition per server
+    (8, 8, 5),     # scale down (forced moves)
+    (12, 5, 3),    # scale down, uneven
+    (8, 4, 4),     # no-op rescale
+])
+def test_rescale_placement_minimal_moves(n_parts, n_old, n_new):
+    old = cluster.Placement.fold(n_parts, n_old)
+    new = ftel.rescale_placement(old, n_new)
+    # every copy lands on a live server, counts balanced to within one
+    cnt = np.zeros(n_new, int)
+    for r in new.replicas:
+        assert len(r) == 1 and 0 <= r[0] < n_new
+        cnt[r[0]] += 1
+    assert cnt.max() - cnt.min() <= 1
+    # minimality: exactly the independent lower bound, nothing gratuitous
+    assert _moves(old, new) == _min_moves(old, n_new)
+    if n_new == n_old:
+        assert new.replicas == old.replicas      # N→N moves nothing
+
+
+def test_rescale_placement_preserves_replica_sets():
+    """Replicated partitions never get two copies on one server."""
+    old = cluster.Placement.ring(6, 4, 2)
+    new = ftel.rescale_placement(old, 3)
+    for r in new.replicas:
+        assert len(set(r)) == len(r)
+        assert all(0 <= s < 3 for s in r)
+    assert sum(len(r) for r in new.replicas) == 12   # copies conserved
+
+
+def test_elastic_schedule_chains_minimal_rescales():
+    sched = ftel.elastic_schedule([(0.0, 2), (0.5, 4), (1.0, 3)], 8)
+    assert sched.n_epochs == 3
+    assert sched.epochs[0][1].replicas == cluster.Placement.fold(8, 2).replicas
+    assert sched.max_server == 3
+    # each boundary's moves == the minimal-move diff of its endpoints
+    for k in (1, 2):
+        old, new = sched.epochs[k - 1][1], sched.epochs[k][1]
+        assert len(sched.moves(k)) == _moves(old, new)
+
+
+# ---------------------------------------------------------------------------
+# schedule construction / validation
+# ---------------------------------------------------------------------------
+
+
+def test_placement_schedule_validation():
+    pl = cluster.Placement.identity(4)
+    with pytest.raises(ValueError):
+        cluster.PlacementSchedule(())                      # empty
+    with pytest.raises(ValueError):
+        cluster.PlacementSchedule(((0.5, pl),))            # must start at 0
+    with pytest.raises(ValueError):
+        cluster.PlacementSchedule(((0.0, pl), (0.0, pl)))  # not increasing
+    with pytest.raises(ValueError):                        # partition set fixed
+        cluster.PlacementSchedule(
+            ((0.0, pl), (1.0, cluster.Placement.identity(5))))
+    sched = cluster.PlacementSchedule.static(pl)
+    assert sched.n_epochs == 1 and sched.at(99.0) is pl
+
+
+def test_schedule_excludes_static_placement_knobs(traced):
+    sched = ftel.elastic_schedule([(0.0, 2), (0.1, 4)], 4)
+    for bad in (cluster.SimParams(schedule=sched, replicas=2),
+                cluster.SimParams(schedule=sched,
+                                  placement=cluster.Placement.identity(4))):
+        with pytest.raises(ValueError):
+            cluster.zero_load_result(traced, 4, bad)
+    # and the schedule must fit the built server stacks
+    with pytest.raises(ValueError):
+        cluster.zero_load_result(
+            traced, 2, cluster.SimParams(schedule=sched))
+
+
+# ---------------------------------------------------------------------------
+# parity: no schedule (and the degenerate schedule) == the static path
+# ---------------------------------------------------------------------------
+
+
+def test_empty_schedule_is_pr4_parity(traced):
+    """The acceptance pin: with no elastic schedule configured the event
+    log is bit-identical to the static simulator — and a single-epoch
+    schedule of the same placement changes nothing either."""
+    wl = cluster.make_workload(len(traced), 2000.0, 400, "poisson", seed=7)
+    base = cluster.simulate(traced, 4, wl,
+                            cluster.SimParams(record_events=True))
+    static = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(record_events=True,
+                          schedule=cluster.PlacementSchedule.static(
+                              cluster.Placement.identity(4)),
+                          migration_bytes=1e9))
+    assert static.events == base.events
+    np.testing.assert_array_equal(static.latencies_s, base.latencies_s)
+    assert static.diag["rehome_events"] == 0
+
+
+def test_rehoming_deterministic(traced):
+    wl = cluster.make_workload(len(traced), 2500.0, 500, "poisson", seed=3)
+    t_mid = float(wl.times_s[250])
+    params = cluster.SimParams(
+        record_events=True, migration_bytes=2e5,
+        schedule=ftel.elastic_schedule([(0.0, 2), (t_mid, 4)], 4))
+    r1 = cluster.simulate(traced, 4, wl, params)
+    r2 = cluster.simulate(traced, 4, wl, params)
+    assert r1.events == r2.events
+    np.testing.assert_array_equal(r1.latencies_s, r2.latencies_s)
+    assert r1.diag["rehomes"] == r2.diag["rehomes"]
+    wl2 = cluster.make_workload(len(traced), 2500.0, 500, "poisson", seed=4)
+    assert cluster.simulate(traced, 4, wl2, params).events != r1.events
+
+
+# ---------------------------------------------------------------------------
+# conservation + migration accounting across a re-home epoch
+# ---------------------------------------------------------------------------
+
+
+def test_conservation_across_rehome_epoch(traced):
+    wl = cluster.make_workload(len(traced), 2500.0, 600, "burst", seed=5)
+    t_mid = float(wl.times_s[300])
+    sched = ftel.elastic_schedule([(0.0, 2), (t_mid, 4)], 4)
+    params = cluster.SimParams(schedule=sched, migration_bytes=3e5)
+    res = cluster.simulate(traced, 4, wl, params)
+    # no lost or duplicated queries: every arrival completes exactly once
+    assert res.completed == res.offered == 600
+    assert not np.isnan(res.latencies_s).any()
+    # exactly the scheduled moves were re-homed, bytes charged per copy
+    n_moves = len(sched.moves(1))
+    assert res.diag["rehome_events"] == n_moves > 0
+    assert res.diag["migration_bytes_total"] == pytest.approx(3e5 * n_moves)
+    for t0, t_done, part, src, gains, nbytes in res.diag["rehomes"]:
+        assert t_mid <= t0 < t_done            # streamed, not teleported
+        assert nbytes == pytest.approx(3e5 * len(gains))
+        assert src not in gains
+
+
+def test_scale_up_raises_post_event_service_rate(traced):
+    """Driving above the 2-server knee: after the 2→4 scale-up the
+    windowed completion rate exceeds the pre-event rate (the fig18
+    recovery shape), and the run outperforms staying at 2 servers."""
+    sat2 = cluster.find_saturation_qps(
+        traced, 2, cluster.SimParams(placement=cluster.Placement.fold(4, 2)),
+        n_arrivals=300, seed=0)
+    rate = 2.0 * sat2
+    wl = cluster.make_workload(len(traced), rate, 800, "poisson", seed=1)
+    t_mid = float(wl.times_s[400])
+    el = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(
+            schedule=ftel.elastic_schedule([(0.0, 2), (t_mid, 4)], 4),
+            migration_bytes=1e5))
+    static2 = cluster.simulate(
+        traced, 2, wl,
+        cluster.SimParams(placement=cluster.Placement.fold(4, 2)))
+    t_done = float(np.max(el.completion_s()))
+    post = el.throughput_in(t_mid, t_done)
+    pre = el.throughput_in(0.0, t_mid)
+    assert post > 1.3 * pre
+    # the elastic run drains the same workload sooner than the static tier
+    assert np.max(el.completion_s()) < np.max(static2.completion_s())
+    assert el.mean_s < static2.mean_s
+
+
+# ---------------------------------------------------------------------------
+# config surface: parse/round-trip/validation + deployment report
+# ---------------------------------------------------------------------------
+
+
+def test_late_epoch_does_not_inflate_makespan(traced):
+    """A scheduled epoch (and its migration streams) after the workload
+    drains must not stretch makespan / deflate throughput_qps — makespan
+    tracks the last *query* completion under a schedule."""
+    wl = cluster.make_workload(len(traced), 1500.0, 100, "poisson", seed=2)
+    base = cluster.simulate(traced, 4, wl)
+    late = float(np.max(base.completion_s())) + 30.0
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(
+            schedule=ftel.elastic_schedule([(0.0, 4), (late, 2)], 4),
+            migration_bytes=1e6))
+    assert res.makespan_s == pytest.approx(base.makespan_s)
+    assert res.throughput_qps == pytest.approx(base.throughput_qps)
+    assert res.diag["rehome_events"] == 2      # the move still happened
+
+
+def test_straggler_beyond_current_tier_is_inert(baton_index, dataset):
+    """A straggler index valid only for the schedule's larger tier must
+    not crash the static saturation pricing or pre-scale-up epochs — the
+    config constructs AND runs (the construction-time guarantee)."""
+    cfg = ServeConfig(
+        name="elastic-straggler",
+        sim=SimSpec(send_rate=2000.0, n_arrivals=200,
+                    elastic="0:2,0.05:6", straggler="5:2.0"))
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset=dataset)
+    rep = dep.run(queries=dataset.queries, gt=dataset.gt)
+    assert rep.sim["completed"] == rep.sim["offered"] == 200
+
+
+def test_parse_elastic():
+    assert parse_elastic("") == []
+    assert parse_elastic("0:4,0.5:8") == [(0.0, 4), (0.5, 8)]
+    for bad in ("0:4,0.5", "x:4", "0:0", "0.5:8", "0:4,0.4:8,0.4:2", "0:4:8"):
+        with pytest.raises(ValueError):
+            parse_elastic(bad)
+
+
+def test_simspec_elastic_validation_and_roundtrip():
+    sim = SimSpec(send_rate=1000.0, elastic="0:2,0.5:4")
+    cfg = ServeConfig(sim=sim)
+    assert ServeConfig.from_json(cfg.to_json()) == cfg
+    with pytest.raises(ValueError):        # simulator required
+        SimSpec(elastic="0:2,0.5:4")
+    with pytest.raises(ValueError):        # schedule encodes the copies
+        SimSpec(send_rate=1000.0, elastic="0:2,0.5:4", replicas="2")
+    with pytest.raises(ValueError):        # malformed schedule
+        SimSpec(send_rate=1000.0, elastic="0:2,oops")
+    # straggler range covers the schedule's maximum server count (which
+    # may exceed index.p — idle servers pre-scale-up)
+    from repro.api import IndexSpec
+    idx4 = IndexSpec(p=4)
+    ServeConfig(index=idx4,
+                sim=SimSpec(send_rate=1000.0, elastic="0:2,0.5:6",
+                            straggler="5:2.0"))
+    with pytest.raises(ValueError):
+        ServeConfig(index=idx4,
+                    sim=SimSpec(send_rate=1000.0, elastic="0:2,0.5:6",
+                                straggler="6:2.0"))
+
+
+def test_deployment_elastic_report(baton_index, dataset):
+    """End-to-end: an elastic ServeConfig through the Deployment facade
+    produces a sim block with re-home accounting, and the same config
+    without the schedule reports none."""
+    cfg = ServeConfig(
+        name="elastic-test",
+        sim=SimSpec(send_rate=2000.0, n_arrivals=300,
+                    elastic="0:2,0.05:4"))
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset=dataset)
+    rep = dep.run(queries=dataset.queries, gt=dataset.gt)
+    s = rep.sim
+    assert s["elastic"] == "0:2,0.05:4"
+    assert s["rehome_events"] > 0
+    assert s["migration_bytes"] > 0
+    assert s["completed"] == s["offered"] == 300
+    static = dataclasses.replace(cfg, sim=SimSpec(send_rate=2000.0,
+                                                  n_arrivals=300))
+    rep0 = Deployment.from_parts(static, BatonEngine(index=baton_index),
+                                 dataset=dataset).run(
+        queries=dataset.queries, gt=dataset.gt)
+    assert rep0.sim["elastic"] == "" and rep0.sim["rehome_events"] == 0
+    assert rep0.sim["migration_bytes"] == 0.0
+    # the sim dict stays on the pinned schema either way
+    from repro.api import SIM_FIELDS
+    assert set(s) == set(rep0.sim) == set(SIM_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# Report.to_row (ROADMAP follow-up satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_report_to_row_formats(baton_index, dataset):
+    dep = Deployment.from_parts(ServeConfig(name="row-test"),
+                                BatonEngine(index=baton_index),
+                                dataset=dataset)
+    rep = dep.run(queries=dataset.queries, gt=dataset.gt)
+    c = rep.counters
+    assert rep.to_row("recall", "qps") == (
+        f"recall={rep.recall:.3f};qps={rep.modeled_qps:.0f}")
+    assert rep.to_row("hops", "inter") == (
+        f"hops={c['hops']:.1f};inter={c['inter_hops']:.2f}")
+    # prefix + extras, in order, extras verbatim
+    assert rep.to_row("qps", prefix="batann_", note="x") == (
+        f"batann_qps={rep.modeled_qps:.0f};batann_note=x")
+    assert rep.to_row("envelope_bytes").startswith("envelope_bytes=")
+    with pytest.raises(KeyError):
+        rep.to_row("nope")

@@ -1,0 +1,78 @@
+"""Docs-as-tests: keep the documentation executable and complete.
+
+Two checks (both run by default; select with flags):
+
+* ``--snippet`` — extract the README quickstart's ```python fence and
+  ``exec`` it **verbatim**.  The snippet is written at smoke scale, so CI
+  runs the exact code a reader would copy; if the documented API drifts
+  from the real one, the job fails here instead of in a user's shell.
+* ``--paper-map`` — every benchmark suite tag (``benchmarks/run.py
+  --list``) must appear in ``docs/PAPER_MAP.md``, so the paper-to-code map
+  can never silently fall behind the harness.
+
+    PYTHONPATH=src python tools/check_docs.py [--snippet] [--paper-map]
+
+Exit code 1 on any failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, ROOT)                       # benchmarks package
+sys.path.insert(0, os.path.join(ROOT, "src"))  # repro package
+
+
+def extract_snippet() -> str:
+    """The first ```python fenced block of README.md, verbatim."""
+    with open(os.path.join(ROOT, "README.md")) as f:
+        text = f.read()
+    m = re.search(r"```python\n(.*?)```", text, re.S)
+    if m is None:
+        raise SystemExit("README.md has no ```python fenced block")
+    return m.group(1)
+
+
+def check_snippet() -> None:
+    code = extract_snippet()
+    print("-- running README quickstart snippet verbatim --")
+    print(code)
+    exec(compile(code, "README.md:quickstart", "exec"),  # noqa: S102
+         {"__name__": "__readme_quickstart__"})
+    print("-- snippet OK --")
+
+
+def check_paper_map() -> None:
+    from benchmarks.run import SUITES
+
+    with open(os.path.join(ROOT, "docs", "PAPER_MAP.md")) as f:
+        doc = f.read()
+    missing = [tag for tag, _ in SUITES if f"`{tag}`" not in doc]
+    if missing:
+        raise SystemExit(
+            f"docs/PAPER_MAP.md does not cover suite(s): {missing} — add a "
+            f"row per `benchmarks/run.py --list` tag")
+    print(f"-- PAPER_MAP covers all {len(SUITES)} bench suites --")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snippet", action="store_true",
+                    help="run only the README snippet check")
+    ap.add_argument("--paper-map", action="store_true",
+                    help="run only the PAPER_MAP coverage check")
+    args = ap.parse_args()
+    run_all = not (args.snippet or args.paper_map)
+    if args.paper_map or run_all:
+        check_paper_map()
+    if args.snippet or run_all:
+        check_snippet()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
