@@ -593,6 +593,129 @@ def fig18_elastic():
     return rows
 
 
+def fig19_fault_recovery():
+    """Fig. 19 (robustness): single-server crash + recovery under load.
+
+    A crash *loses the baton* — the query's full state lived in the dead
+    server's DRAM — so recovery is client-side: deadline detection,
+    re-issue routed around the failed replica, optional hedged duplicates
+    (``ft.faults``).  With R=2 ring replication a mid-run crash at 0.7×
+    the replicated tier's saturation must lose **zero** queries (every
+    dropped baton re-issues onto the surviving replica) and windowed
+    throughput must recover to >= 0.9× the pre-crash rate once the server
+    returns.  With R=1 the crashed partitions are simply gone until
+    recovery: queries route nowhere, retries exhaust, and the tier degrades
+    gracefully (lost > 0, conservation still exact).  The scatter-gather
+    comparison crashes the same server: an SG query fans to *every*
+    partition, so the crash kills every in-flight query (total drops >>
+    baton's resident-only drops)."""
+    from repro import cluster
+
+    p = common.BENCH_P
+    n_arr = common.SIM_ARRIVALS
+    rows = []
+
+    traces, _ = _sim_system("batann", p)
+    homes = cluster.trace_homes(traces)
+    params_r2 = cluster.SimParams(replicas=2)
+    sat_r2 = cluster.find_saturation_qps(
+        traces, p, params_r2, n_arrivals=common.SIM_SAT_ARRIVALS, seed=0)
+    rate = 0.7 * sat_r2
+    wl = cluster.make_workload(len(traces), rate, n_arr, "poisson",
+                               seed=1, homes=homes)
+    t_crash = float(wl.times_s[n_arr // 3])
+    t_rec = float(wl.times_s[2 * n_arr // 3])
+    faults = cluster.FaultSchedule(((t_crash, "crash", 1),
+                                    (t_rec, "recover", 1)))
+
+    # --- R=2: the surviving replica absorbs the crash, zero lost -----------
+    res = cluster.simulate(traces, p, wl,
+                           cluster.SimParams(replicas=2, faults=faults))
+    f = res.diag["faults"]
+    t_done = float(np.max(res.completion_s()))
+    settle = 0.1 * (t_done - t_rec)           # let the re-issues drain
+    pre = res.throughput_in(0.0, t_crash)
+    post = res.throughput_in(t_rec + settle, t_done)
+    recovery = post / max(pre, 1e-9)
+    assert res.lost == 0, (
+        f"R=2 crash lost {res.lost} queries — replicas must absorb a "
+        f"single-server failure")
+    rows.append((
+        "fig19_crash_r2", res.mean_s * 1e6,
+        f"lost={res.lost};dropped={f['dropped']};reissued={f['reissued']};"
+        f"failover_hops={f['failovers']};rate_qps={rate:.0f};"
+        f"pre_tput_qps={pre:.0f};post_tput_qps={post:.0f};"
+        f"p99_ms={res.p99_s*1e3:.2f}",
+    ))
+
+    # --- R=1: no replicas — graceful degradation, honest loss accounting ---
+    res1 = cluster.simulate(
+        traces, p, wl,
+        cluster.SimParams(faults=faults, max_retries=2))
+    f1 = res1.diag["faults"]
+    assert res1.lost > 0 and res1.completed + res1.lost == res1.offered
+    rows.append((
+        "fig19_crash_r1", 0.0,
+        f"lost={res1.lost};no_replica={f1['no_replica']};"
+        f"reissued={f1['reissued']};completed={res1.completed};"
+        f"lost_frac={res1.lost/res1.offered:.3f}",
+    ))
+
+    # --- hedging: flaky NIC drops kill instances silently; the hedged
+    # duplicate beats the (backed-off) deadline re-issue to the result -----
+    flaky = cluster.FaultSchedule(((t_crash, "flaky_nic:0.3", 1),
+                                   (t_rec, "flaky_nic:0.0", 1)))
+    res_h = cluster.simulate(
+        traces, p, wl,
+        cluster.SimParams(replicas=2, faults=flaky,
+                          hedge_s=4.0 * res.percentile_s(50)))
+    fh = res_h.diag["faults"]
+    assert res_h.lost == 0
+    rows.append((
+        "fig19_hedge", 0.0,
+        f"nic_drops={fh['nic_drops']};hedged={fh['hedged']};"
+        f"hedge_wins={fh['hedge_wins']};dups={fh['dup_results']};"
+        f"reissued={fh['reissued']};lost={res_h.lost};"
+        f"p99_ms={res_h.p99_s*1e3:.2f}",
+    ))
+
+    # --- scatter-gather comparison: same crash, every in-flight query dies -
+    sg_traces, _ = _sim_system("sg", p)
+    sg_params = cluster.SimParams(replicas=2)
+    sg_sat = cluster.find_saturation_qps(
+        sg_traces, p, sg_params, n_arrivals=common.SIM_SAT_ARRIVALS, seed=0)
+    wl_sg = cluster.make_workload(len(sg_traces), 0.7 * sg_sat, n_arr,
+                                  "poisson", seed=1,
+                                  homes=cluster.trace_homes(sg_traces))
+    sg_faults = cluster.FaultSchedule(
+        ((float(wl_sg.times_s[n_arr // 3]), "crash", 1),
+         (float(wl_sg.times_s[2 * n_arr // 3]), "recover", 1)))
+    res_sg = cluster.simulate(
+        sg_traces, p, wl_sg,
+        cluster.SimParams(replicas=2, faults=sg_faults))
+    fsg = res_sg.diag["faults"]
+    rows.append((
+        "fig19_sg_crash_r2", 0.0,
+        f"lost={res_sg.lost};dropped={fsg['dropped']};"
+        f"reissued={fsg['reissued']};failover_hops={fsg['failovers']};"
+        f"baton_dropped={f['dropped']}",
+    ))
+
+    # --- headline: recovery to the pre-crash rate --------------------------
+    recovered = recovery >= 0.9
+    rows.append((
+        "fig19_fault_recovery", 0.0,
+        f"recovered={recovered};recovery_frac={recovery:.2f};"
+        f"pre_tput_qps={pre:.0f};post_tput_qps={post:.0f};"
+        f"lost={res.lost};reissued={f['reissued']};"
+        f"r1_lost_frac={res1.lost/res1.offered:.3f}",
+    ))
+    assert recovered, (
+        f"post-recovery throughput {post:.0f} qps did not recover to "
+        f"within 10% of the pre-crash rate {pre:.0f} qps")
+    return rows
+
+
 def fig14_w_throughput():
     """Fig. 14: W=8 beats W=1 on modeled QPS and latency."""
     rows = []

@@ -43,6 +43,7 @@ SUITES = (
     ("fig16repl", "figures.fig16_replication_skew"),
     ("fig17strag", "figures.fig17_straggler"),
     ("fig18elastic", "figures.fig18_elastic"),
+    ("fig19fault", "figures.fig19_fault_recovery"),
     ("sec8", "figures.sec8_ship_vs_recompute"),
     ("kernels", "bench_kernels.kernel_rows"),
     ("superstep", "bench_kernels.superstep_rows"),

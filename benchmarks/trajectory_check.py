@@ -25,22 +25,40 @@ import sys
 # qps-bearing derived fields, e.g. "batann_qps=1234" / "sat_qps=5e3"
 _QPS_RE = re.compile(r"([A-Za-z0-9_.@/]*qps[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
 _IGNORE = ("wall", "rate_qps")  # machine-dependent / input knobs
+# fault/elastic recovery fractions are higher-better like qps; query-loss
+# counts under the pinned fault scenarios are *lower*-better — a PR that
+# starts losing (more) queries in the same scenario is a regression even
+# when every qps figure holds.  Both come from the deterministic event
+# simulator, so exact cross-PR comparison is meaningful.
+_RECOVERY_RE = re.compile(
+    r"([A-Za-z0-9_.@/]*recovery_frac)=([-+0-9.eE]+)")
+_LOST_RE = re.compile(r"([A-Za-z0-9_.@/]*lost[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
 
 
-def extract_qps(bench: dict) -> dict:
+def _scan(bench: dict, regex, keep_zero: bool = False) -> dict:
     out = {}
     for row, rec in bench.items():
         derived = str(rec.get("derived", ""))
-        for key, val in _QPS_RE.findall(derived):
+        for key, val in regex.findall(derived):
             if any(tok in key for tok in _IGNORE):
                 continue
             try:
                 v = float(val)
             except ValueError:
                 continue
-            if v > 0:
+            if v > 0 or keep_zero:
                 out[f"{row}:{key}"] = v
     return out
+
+
+def extract_qps(bench: dict) -> dict:
+    # recovery fractions join the higher-better pool; lost counts are
+    # tracked separately (zero is the good value — keep it)
+    return {**_scan(bench, _QPS_RE), **_scan(bench, _RECOVERY_RE)}
+
+
+def extract_lost(bench: dict) -> dict:
+    return _scan(bench, _LOST_RE, keep_zero=True)
 
 
 def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
@@ -57,6 +75,15 @@ def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
         print(f"{key}: dropped (was {p[key]:.1f})")
     for key in sorted(c.keys() - p.keys()):
         print(f"{key}: new ({c[key]:.1f})")
+    pl, cl = extract_lost(prev), extract_lost(cur)
+    for key in sorted(pl.keys() & cl.keys()):
+        # lower-better: worse iff losses grew beyond the threshold; any
+        # loss where there was none before is always a regression
+        worse = cl[key] > pl[key] * (1.0 + threshold) + 1e-9
+        flag = "  << REGRESSION" if worse else ""
+        if worse:
+            regressions.append(key)
+        print(f"{key}: {pl[key]:.3f} -> {cl[key]:.3f} (lower-better){flag}")
     return regressions
 
 

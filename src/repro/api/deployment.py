@@ -24,7 +24,7 @@ import numpy as np
 from repro.api.engine import SearchResult, get_engine
 from repro.checkpoint import ckpt
 from repro.configs.batann_serve import (
-    ServeConfig, parse_elastic, parse_straggler,
+    ServeConfig, parse_elastic, parse_faults, parse_straggler,
 )
 from repro.core import ref
 from repro.data import synth
@@ -42,6 +42,7 @@ SIM_FIELDS = (
     "p95_s", "p99_s", "saturation_qps", "sat_criterion", "cache_hit_rate",
     "cache_memory_bytes", "replicas", "replica_memory_bytes", "scenario",
     "elastic", "rehome_events", "migration_bytes",
+    "faults", "reissued", "lost", "hedge_wins", "failover_hops",
 )
 
 # ``Report.to_row`` field formatters: row key -> (getter, format spec).
@@ -64,6 +65,11 @@ ROW_FORMATS = {
     "p50_ms": (lambda r: r.sim["p50_s"] * 1e3, ".2f"),
     "p99_ms": (lambda r: r.sim["p99_s"] * 1e3, ".2f"),
     "sat_qps": (lambda r: r.sim["saturation_qps"], ".0f"),
+    # fault-scenario fields — valid when the sim block ran with faults
+    "reissued": (lambda r: r.sim["reissued"], "d"),
+    "lost": (lambda r: r.sim["lost"], "d"),
+    "hedge_wins": (lambda r: r.sim["hedge_wins"], "d"),
+    "failover_hops": (lambda r: r.sim["failover_hops"], "d"),
 }
 
 
@@ -337,13 +343,22 @@ class Deployment:
             run_params = dataclasses.replace(
                 params, schedule=schedule, migration_bytes=part_bytes,
                 read_mult=_straggler_multipliers(sim.straggler, n_srv))
+        fault_events = parse_faults(sim.faults)
+        if fault_events:
+            # saturation (above) is probed fault-free: the crash is measured
+            # against the healthy tier's knee, not a moving target
+            run_params = dataclasses.replace(
+                params, faults=cluster.FaultSchedule(tuple(fault_events)),
+                max_retries=sim.retry, hedge_s=sim.hedge_ms * 1e-3)
         res = cluster.simulate(traces, n_srv, wl, run_params)
+        fault_diag = res.diag.get("faults", {})
         pl = params.resolve_placement(p, p)
         scenario = (f"cache={sim.cache_sectors}"
                     f"{'(warm)' if sim.warm_cache else ''} "
                     f"replicas={sim.replicas} "
                     f"straggler={sim.straggler or '-'}"
-                    f"{' elastic=' + sim.elastic if sim.elastic else ''}")
+                    f"{' elastic=' + sim.elastic if sim.elastic else ''}"
+                    f"{' faults=' + sim.faults if sim.faults else ''}")
         return {
             "rate_qps": sim.send_rate, "arrival": sim.arrival,
             "offered": res.offered, "completed": res.completed,
@@ -360,6 +375,11 @@ class Deployment:
             "elastic": sim.elastic,
             "rehome_events": res.diag.get("rehome_events", 0),
             "migration_bytes": res.diag.get("migration_bytes_total", 0.0),
+            "faults": sim.faults,
+            "reissued": fault_diag.get("reissued", 0),
+            "lost": fault_diag.get("lost", 0),
+            "hedge_wins": fault_diag.get("hedge_wins", 0),
+            "failover_hops": fault_diag.get("failovers", 0),
         }
 
     # --- index persistence (checkpoint/ckpt.py) ----------------------------

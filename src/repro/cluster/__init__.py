@@ -13,8 +13,8 @@ from repro.cluster.trace import (          # noqa: F401
 )
 from repro.cluster.workload import Workload, make_workload  # noqa: F401
 from repro.cluster.stages import (         # noqa: F401
-    CacheTier, Placement, PlacementSchedule, ServerConfig, ServerStack,
-    Stage,
+    CacheTier, FaultSchedule, Placement, PlacementSchedule, ServerConfig,
+    ServerStack, Stage, parse_fault_event,
 )
 from repro.cluster.sim import (            # noqa: F401
     SimParams, SimResult, backlog_growing, capacity_qps,

@@ -37,10 +37,28 @@ other transfer.  Until a partition's stream completes it stays
 **dual-homed**: routing keeps using the old replica set, so in-flight
 batons drain without loss and conservation holds across epochs.
 
+A :class:`stages.FaultSchedule` (``SimParams.faults``) injects failures —
+the robustness scenario.  A ``crash`` drops every baton resident on the
+server (in-flight segments, queued jobs, slot waiters, outbound NIC
+transfers), rebuilds its stack cold (queues and cache are DRAM), and
+removes it from every replica candidate set until ``recover``; ``slow``
+brownouts scale its service times and ``flaky_nic`` drops its outbound
+messages with a seeded probability.  Because the baton pattern ships the
+query's *full state* to the crashed server, the server side cannot recover
+it — the client does: each arrival gets a ``ft.faults.QueryClient``
+(deadline = ``timeout_factor`` × the modeled zero-load p99, re-issue with
+exponential backoff routed around failed replicas via
+``ft.faults.FailoverRouter``, optional hedged duplicate with
+first-result-wins dedup).  Every admitted query ends in exactly one of
+{completed, lost} — checked at drain.  ``SimResult.diag["faults"]`` records
+drops / failovers / re-issues / hedges / losses.
+
 With every scenario stage disabled (no cache, identity placement, unit
 multipliers — the defaults) the zero-load limit of this machine is exactly
 the closed-form ``CostModel.query_latency_s`` (tested to <1%) and the event
-log is bit-identical to the PR 2 pipeline.  Everything is deterministic
+log is bit-identical to the PR 2 pipeline.  With ``faults=None`` no fault
+machinery exists at all (no clients, no deadlines) — the event log is
+bit-identical to the static path, tested.  Everything is deterministic
 given (traces, workload, params): same seed => identical event log.
 """
 
@@ -51,7 +69,8 @@ import dataclasses
 import numpy as np
 
 from repro.cluster.stages import (
-    Placement, PlacementSchedule, Sched, ServerConfig, ServerStack,
+    FaultSchedule, Placement, PlacementSchedule, Sched, ServerConfig,
+    ServerStack, parse_fault_event,
 )
 from repro.cluster.trace import BatonTrace, ScatterGatherTrace, Segment
 from repro.cluster.workload import Workload, make_workload
@@ -83,6 +102,13 @@ class SimParams:
     schedule: PlacementSchedule | None = None   # overrides placement/replicas
     migration_bytes: float = 0.0         # bytes streamed per re-homed copy
     migration_chunk_bytes: int = 256 * 1024  # NIC chunk (envelopes interleave)
+    # --- fault injection: crashes, brownouts, flaky NICs + client recovery -
+    faults: FaultSchedule | None = None  # None => zero fault machinery
+    timeout_factor: float = 8.0          # client deadline = k × modeled p99
+    max_retries: int = 3                 # deadline-triggered re-issues
+    retry_backoff: float = 2.0           # deadline multiplier per re-issue
+    hedge_s: float = 0.0                 # hedged duplicate delay (0 = off)
+    fault_seed: int = 0                  # rng stream for flaky-NIC drops
 
     def server_config(self, sid: int) -> ServerConfig:
         return ServerConfig(
@@ -155,11 +181,18 @@ class SimResult:
         return self.latencies_s[~np.isnan(self.latencies_s)]
 
     @property
+    def lost(self) -> int:
+        """Queries that never completed (recovery exhausted under faults)."""
+        return self.offered - self.completed
+
+    @property
     def mean_s(self) -> float:
-        return float(np.mean(self._done()))
+        d = self._done()        # nan, not a numpy error, when a crash
+        return float(np.mean(d)) if d.size else float("nan")  # lost them all
 
     def percentile_s(self, q: float) -> float:
-        return float(np.percentile(self._done(), q))
+        d = self._done()
+        return float(np.percentile(d, q)) if d.size else float("nan")
 
     @property
     def p50_s(self) -> float:
@@ -190,6 +223,8 @@ class SimResult:
         """Completed queries per second inside the window ``[t0, t1)`` —
         the windowed view the elastic scenario reads recovery off (overall
         ``throughput_qps`` averages across placement epochs)."""
+        if self.completed == 0:
+            return float("nan")
         done = self.completion_s()
         n = int(np.count_nonzero((done >= t0) & (done < t1)))
         return n / max(t1 - t0, 1e-12)
@@ -240,10 +275,10 @@ def simulate(traces, n_servers: int, workload: Workload,
     cost = params.cost
     sched = Sched()
     use_cache = params.cache_sectors > 0
+    slot_cap = params.slots_per_server or cost.server_slots
     servers = [
         ServerStack(sched, cost, sid, params.server_config(sid),
-                    params.slots_per_server or cost.server_slots,
-                    params.admit_headroom)
+                    slot_cap, params.admit_headroom)
         for sid in range(n_servers)
     ]
     placement = params.resolve_placement(_max_part(traces), n_servers)
@@ -266,10 +301,209 @@ def simulate(traces, n_servers: int, workload: Workload,
         if events is not None:
             events.append((t, kind, aid, srv))
 
-    # --- routing: static placement, or a schedule with re-homing -----------
+    # --- fault runtime (only with a FaultSchedule; else zero machinery) ----
+    # Crash semantics follow the baton model: the query's full state lives
+    # in server DRAM, so a crash kills every *resident* instance (running,
+    # queued, slot-waiting, or mid-wire from that sender) and the client —
+    # not the server — recovers by re-issuing.  Instances are tracked via
+    # `_Inst` handles threaded through the launch functions; the default
+    # path passes `inst=None` and every guard collapses to a no-op, keeping
+    # the no-fault event log bit-identical to the static path (tested).
     schedule = params.schedule
+    faults = params.faults
+    if faults is not None:
+        if schedule is not None:
+            raise ValueError(
+                "faults and schedule are mutually exclusive in one run — "
+                "inject failures into a static placement")
+        if faults.max_server >= n_servers:
+            raise ValueError(
+                f"fault schedule targets server {faults.max_server} but "
+                f"only {n_servers} servers exist")
+        # layering: ft sits above cluster, so import lazily — the default
+        # path never touches it
+        from repro.ft.faults import (
+            FailoverRouter, QueryClient, RecoveryPolicy,
+        )
+
+        router = FailoverRouter(replicas=placement.replicas)
+        policy = RecoveryPolicy.from_traces(
+            cost, traces, factor=params.timeout_factor,
+            max_retries=params.max_retries, backoff=params.retry_backoff,
+            hedge_s=params.hedge_s)
+        frng = np.random.default_rng(params.fault_seed)
+        flaky: dict = {}                # sid -> outbound drop probability
+        slow_mult: dict = {}            # sid -> cumulative brownout mult
+        resident: list = [set() for _ in range(n_servers)]
+        clients: dict = {}              # aid -> QueryClient
+        fstats = dict.fromkeys((
+            "crashes", "recovers", "slow_events", "dropped", "nic_drops",
+            "no_replica", "reissued", "hedged", "hedge_wins", "dup_results",
+            "lost", "failovers"), 0)
+
+        class _Inst:
+            """One issued copy of a query: liveness, residency, slot holds."""
+
+            __slots__ = ("aid", "live", "locs", "holds", "hedge")
+
+            def __init__(self, aid, hedge=False):
+                self.aid = aid
+                self.live = True
+                self.locs = set()       # servers this instance resides on
+                self.holds = []         # stacks whose slot it holds
+                self.hedge = hedge
+
+        def place(inst, sid):
+            inst.locs.add(sid)
+            resident[sid].add(inst)
+
+        def move(inst, src, dst):       # baton delivered: residency follows
+            if src != dst:
+                inst.locs.discard(src)
+                resident[src].discard(inst)
+                place(inst, dst)
+
+        def hold(inst, sv):
+            inst.holds.append(sv)
+
+        def unhold(inst, sv):
+            inst.holds.remove(sv)
+
+        def retire(inst, t):
+            """Kill one instance: clear residency, return any held slots.
+            Releasing on a crash-replaced stack is harmless (that stack was
+            discarded); on a live stack it prevents a capacity leak — e.g.
+            the SG home slot when a *remote* branch's server crashed."""
+            inst.live = False
+            for s in tuple(inst.locs):
+                resident[s].discard(inst)
+            inst.locs.clear()
+            for sv in inst.holds:
+                sv.slots.release(t)
+            inst.holds.clear()
+
+        def declare_lost(aid, t):
+            fstats["lost"] += 1
+            log(t, "lost", aid, -1)
+
+        def drop(inst, t, why):
+            """Server-side death of one instance (crash / dropped message /
+            no live replica).  The client's pending deadline re-issues —
+            except when retries are exhausted and nothing else is live."""
+            if not inst.live:
+                return
+            retire(inst, t)
+            fstats[why] += 1
+            if clients[inst.aid].on_instance_dead() == "lost":
+                declare_lost(inst.aid, t)
+
+        def issue(aid, t, hedge=False):
+            inst = _Inst(aid, hedge=hedge)
+            delay = clients[aid].on_issue()
+            if not hedge:               # the hedge rides the main deadlines
+                sched.at(t + delay, lambda td: on_deadline(aid, td))
+            launch_inst(aid, inst, t)   # late-bound; defined with the loop
+
+        def on_deadline(aid, t):
+            act = clients[aid].on_deadline()
+            if act == "reissue":
+                fstats["reissued"] += 1
+                issue(aid, t)
+            elif act == "lost":
+                declare_lost(aid, t)
+
+        def on_hedge(aid, t):
+            if clients[aid].on_hedge() == "hedge":
+                fstats["hedged"] += 1
+                issue(aid, t, hedge=True)
+
+        def admit(aid, t):
+            clients[aid] = QueryClient(policy=policy)
+            issue(aid, t)
+            if policy.hedge_s > 0:
+                sched.at(t + policy.hedge_s, lambda td: on_hedge(aid, td))
+
+        def settle(inst, tc):
+            """A result landed: the first wins, later ones are dropped dups
+            (a hedge or re-issue raced the original to completion)."""
+            act = clients[inst.aid].on_complete()
+            retire(inst, tc)
+            if act == "win":
+                if inst.hedge:
+                    fstats["hedge_wins"] += 1
+                return True
+            fstats["dup_results"] += 1
+            return False
+
+        def host_up(sid):
+            return sid not in router.failed
+
+        def apply_slow(sid, mult):
+            sv = servers[sid]
+            sv.ssd.service_s *= mult
+            sv.config = dataclasses.replace(
+                sv.config, compute_mult=sv.config.compute_mult * mult)
+
+        def fire_fault(ev, sid):
+            kind, arg = parse_fault_event(ev)
+
+            def go(t):
+                if kind == "crash":
+                    fstats["crashes"] += 1
+                    router.fail(sid)
+                    for inst in tuple(resident[sid]):
+                        drop(inst, t, "dropped")
+                    # DRAM is gone: rebuild the stack cold (queues + cache
+                    # lost).  In-flight events of the old stack complete
+                    # against dead instances and fall through the guards.
+                    servers[sid] = ServerStack(
+                        sched, cost, sid, params.server_config(sid),
+                        slot_cap, params.admit_headroom)
+                    if slow_mult.get(sid, 1.0) != 1.0:  # brownout persists
+                        apply_slow(sid, slow_mult[sid])
+                    log(t, "crash", -1, sid)
+                elif kind == "recover":
+                    fstats["recovers"] += 1
+                    router.recover(sid)
+                    log(t, "recover", -1, sid)
+                elif kind == "slow":
+                    fstats["slow_events"] += 1
+                    slow_mult[sid] = slow_mult.get(sid, 1.0) * arg
+                    apply_slow(sid, arg)
+                else:                   # flaky_nic: set outbound drop prob
+                    flaky[sid] = arg
+
+            return go
+
+        for t_f, ev_f, sid_f in faults.events:
+            sched.at(t_f, fire_fault(ev_f, sid_f))
+
+    def send(sv, t, nb, cb, inst=None):
+        """NIC send; a flaky host drops the instance instead of delivering.
+        The rng draws only for servers with a configured drop probability,
+        so crash-only schedules stay rng-independent (determinism)."""
+        if inst is not None:
+            p = flaky.get(sv.sid, 0.0)
+            if p > 0.0 and frng.random() < p:
+                drop(inst, t, "nic_drops")
+                return
+        sv.send(t, nb, cb)
+
+    # --- routing: static placement, fault-aware, or a schedule -------------
     rehomes: list = []
-    if schedule is None:
+    if faults is not None:
+
+        def pick(part: int) -> "int | None":
+            srvs = router.live(part)
+            if not srvs:
+                return None             # caller drops; the client re-issues
+            if srvs[0] != placement.replicas[part][0]:
+                fstats["failovers"] += 1    # primary down: using a backup
+            if len(srvs) == 1:
+                return srvs[0]
+            return min(srvs, key=lambda s: servers[s].load())
+
+    elif schedule is None:
 
         def pick(part: int) -> int:
             return placement.select(part, lambda s: servers[s].load())
@@ -368,16 +602,20 @@ def simulate(traces, n_servers: int, workload: Workload,
             at += nr
         return plan
 
-    def finish(aid, t0, t, last_srv, home_srv):
+    def finish(aid, t0, t, last_srv, home_srv, inst=None):
         def complete(tc):
             nonlocal completed, last_done
-            lat[aid] = tc - t0
+            if inst is not None and (not inst.live or not settle(inst, tc)):
+                return                  # died mid-return, or a losing dup
+            # under faults the client's latency runs from the *original*
+            # arrival, not the (re-)issue that happened to win
+            lat[aid] = tc - (t0 if inst is None else float(arrive[aid]))
             completed += 1
             last_done = max(last_done, tc)
             log(tc, "complete", aid, home_srv)
 
         if params.charge_result_return and last_srv != home_srv:
-            servers[last_srv].send(t, params.result_bytes, complete)
+            send(servers[last_srv], t, params.result_bytes, complete, inst)
         else:
             complete(t)
 
@@ -399,23 +637,48 @@ def simulate(traces, n_servers: int, workload: Workload,
         do_hop(0, t)
 
     # --- baton lifecycle: admission -> segments linked by hand-offs --------
-    def launch_baton(aid: int, tr: BatonTrace, t0: float) -> None:
+    # `inst` is the fault path's per-issue handle (None on the default
+    # path, where every guard below is a no-op): liveness guards discard
+    # work for dropped batons, residency tracking lets a crash find every
+    # baton on the server, and slot holds are returned by `retire` so dead
+    # instances never leak capacity on live servers.
+    def launch_baton(aid: int, tr: BatonTrace, t0: float,
+                     inst=None) -> None:
         segs = tr.segments
 
         def seg_cb(si, sid, home_srv):
             sv = servers[sid]
 
             def with_slot(t):
+                if inst is not None:
+                    if not inst.live:
+                        sv.slots.release(t)   # granted to a dropped baton
+                        return
+                    hold(inst, sv)
                 seg = segs[si]
                 log(t, "seg_start", aid, sid)
 
                 def done(t):
+                    if inst is not None:
+                        if not inst.live:
+                            return       # slot already returned by retire
+                        unhold(inst, sv)
                     sv.slots.release(t)
                     if si + 1 < len(segs):
                         log(t, "handoff", aid, sid)
                         nxt = pick(segs[si + 1].part)
+                        if nxt is None:  # every replica of the next
+                            drop(inst, t, "no_replica")    # neighborhood down
+                            return
 
                         def arrive_next(ta):
+                            if inst is not None:
+                                if not inst.live:
+                                    return    # sender crashed mid-wire
+                                if not host_up(nxt):
+                                    drop(inst, ta, "dropped")  # dead target
+                                    return
+                                move(inst, sid, nxt)
                             servers[nxt].slots.request(
                                 ta, "handoff", seg_cb(si + 1, nxt, home_srv))
 
@@ -429,19 +692,21 @@ def simulate(traces, n_servers: int, workload: Workload,
                             # stays charged (zero-load parity under folding)
                             arrive_next(t)
                         else:
-                            sv.send(t, tr.envelope_bytes, arrive_next)
+                            send(sv, t, tr.envelope_bytes, arrive_next, inst)
                     else:
                         # hand-offs folded into the last trace segment
                         # (trace_cap overflow) still cost envelope
                         # transfers — charge them before completing
                         def drain(t, left=tr.folded_handoffs):
+                            if inst is not None and not inst.live:
+                                return   # sender crashed mid-drain
                             if left > 0:
-                                sv.send(
-                                    t, tr.envelope_bytes,
-                                    lambda ta: drain(ta, left - 1),
+                                send(
+                                    sv, t, tr.envelope_bytes,
+                                    lambda ta: drain(ta, left - 1), inst,
                                 )
                             else:
-                                finish(aid, t0, t, sid, home_srv)
+                                finish(aid, t0, t, sid, home_srv, inst)
 
                         drain(t)
 
@@ -451,34 +716,61 @@ def simulate(traces, n_servers: int, workload: Workload,
 
         def arrive0(t):
             sid = pick(segs[0].part)
+            if sid is None:
+                drop(inst, t, "no_replica")
+                return
+            if inst is not None:
+                place(inst, sid)
             log(t, "arrive", aid, sid)
             servers[sid].slots.request(t, "admit", seg_cb(0, sid, sid))
 
         sched.at(t0, arrive0)
 
     # --- scatter-gather lifecycle: fan-out, parallel branches, gather ------
-    def launch_sg(aid: int, tr: ScatterGatherTrace, t0: float) -> None:
+    # The home stack is captured at request time and threaded through: after
+    # a crash-rebuild `servers[home_srv]` is a *different* stack, and the
+    # gather must release the slot on the stack that granted it.
+    def launch_sg(aid: int, tr: ScatterGatherTrace, t0: float,
+                  inst=None) -> None:
         remaining = len(tr.branches)
 
-        def branch_done(t, home_srv):  # result available at home at t
+        def branch_done(t, home_srv, home):  # result available at home at t
             nonlocal remaining
+            if inst is not None and not inst.live:
+                return
             remaining -= 1
             if remaining == 0:
-                servers[home_srv].slots.release(t)
-                finish(aid, t0, t, home_srv, home_srv)
+                if inst is not None:
+                    unhold(inst, home)
+                home.slots.release(t)
+                finish(aid, t0, t, home_srv, home_srv, inst)
 
         def run_branch(bi: int, seg: Segment, sid: int, t_start: float,
-                       remote: bool, home_srv: int):
+                       remote: bool, home_srv: int, home):
             sv = servers[sid]
 
             def with_slot(t):
+                if inst is not None and not inst.live:
+                    if remote:
+                        sv.slots.release(t)   # granted to a dead branch
+                    return
+                if remote and inst is not None:
+                    hold(inst, sv)
+
                 def done(t):
                     if remote:
+                        if inst is not None:
+                            if not inst.live:
+                                return
+                            unhold(inst, sv)
                         sv.slots.release(t)
-                        sv.send(t, tr.reply_bytes,
-                                lambda ta: branch_done(ta, home_srv))
+                        send(sv, t, tr.reply_bytes,
+                             lambda ta: branch_done(ta, home_srv, home),
+                             inst)
                     else:
-                        branch_done(t, home_srv)  # home slot held to gather
+                        if inst is not None and not inst.live:
+                            return
+                        branch_done(t, home_srv, home)  # home slot gathers
 
                 run_segment(sv, tr, bi, seg, t, done)
 
@@ -487,47 +779,85 @@ def simulate(traces, n_servers: int, workload: Workload,
             else:
                 with_slot(t_start)
 
-        def admitted(home_srv):
+        def admitted(home_srv, home):
             def go(t):
+                if inst is not None:
+                    if not inst.live:
+                        home.slots.release(t)
+                        return
+                    hold(inst, home)
                 log(t, "seg_start", aid, home_srv)
-                home = servers[home_srv]
                 for bi, seg in enumerate(tr.branches):
+                    if inst is not None and not inst.live:
+                        return          # a scatter send already dropped us
                     sid = pick(seg.part)
+                    if sid is None:
+                        drop(inst, t, "no_replica")
+                        return
                     if sid == home_srv:
-                        run_branch(bi, seg, sid, t, False, home_srv)
+                        run_branch(bi, seg, sid, t, False, home_srv, home)
                     else:
-                        home.send(
-                            t, tr.scatter_bytes,
+                        if inst is not None:
+                            # branch state ships out: a crash of *any*
+                            # involved server kills the whole instance
+                            place(inst, sid)
+                        send(
+                            home, t, tr.scatter_bytes,
                             lambda ta, bi=bi, seg=seg, sid=sid: run_branch(
-                                bi, seg, sid, ta, True, home_srv),
+                                bi, seg, sid, ta, True, home_srv, home),
+                            inst,
                         )
 
             return go
 
         def arrive0(t):
             home_srv = pick(tr.home)
+            if home_srv is None:
+                drop(inst, t, "no_replica")
+                return
+            if inst is not None:
+                place(inst, home_srv)
             log(t, "arrive", aid, home_srv)
-            servers[home_srv].slots.request(t, "admit", admitted(home_srv))
+            home = servers[home_srv]
+            home.slots.request(t, "admit", admitted(home_srv, home))
 
         sched.at(t0, arrive0)
 
-    for aid in range(n):
-        tr = traces[int(workload.trace_idx[aid])]
-        if isinstance(tr, BatonTrace):
-            launch_baton(aid, tr, float(arrive[aid]))
-        elif isinstance(tr, ScatterGatherTrace):
-            launch_sg(aid, tr, float(arrive[aid]))
-        else:
-            raise TypeError(f"unknown trace type: {type(tr)}")
+    if faults is None:
+        for aid in range(n):
+            tr = traces[int(workload.trace_idx[aid])]
+            if isinstance(tr, BatonTrace):
+                launch_baton(aid, tr, float(arrive[aid]))
+            elif isinstance(tr, ScatterGatherTrace):
+                launch_sg(aid, tr, float(arrive[aid]))
+            else:
+                raise TypeError(f"unknown trace type: {type(tr)}")
+    else:
+        # every arrival goes through a QueryClient; `issue` calls back here
+        # for the initial launch, each deadline re-issue, and the hedge
+        def launch_inst(aid, inst, t):
+            tr = traces[int(workload.trace_idx[aid])]
+            if isinstance(tr, BatonTrace):
+                launch_baton(aid, tr, t, inst)
+            else:
+                launch_sg(aid, tr, t, inst)
+
+        for aid in range(n):
+            tr = traces[int(workload.trace_idx[aid])]
+            if not isinstance(tr, (BatonTrace, ScatterGatherTrace)):
+                raise TypeError(f"unknown trace type: {type(tr)}")
+            sched.at(float(arrive[aid]), lambda t, aid=aid: admit(aid, t))
 
     sched.run()
 
     # statically-placed runs drain exactly at the last completion; under a
-    # schedule the heap can outlive the workload (a late epoch event and
-    # its migration streams), so makespan tracks the last *query* — else a
-    # post-drain epoch would inflate makespan/deflate throughput_qps
-    t_end = sched.now if schedule is None else last_done
-    makespan = float(t_end - arrive[0]) if n else 0.0
+    # schedule or faults the heap can outlive the workload (a late epoch
+    # event, a migration stream, the final client deadline), so makespan
+    # tracks the last *query* — else a post-drain event would inflate
+    # makespan/deflate throughput_qps
+    t_end = (sched.now if schedule is None and faults is None
+             else last_done)
+    makespan = max(0.0, float(t_end - arrive[0])) if n else 0.0
     diag = {
         "max_ssd_queue": max(s.ssd.max_q for s in servers),
         "max_cpu_queue": max(s.cpu.max_q for s in servers),
@@ -547,6 +877,13 @@ def simulate(traces, n_servers: int, workload: Workload,
         diag["rehome_events"] = len(rehomes)
         diag["migration_bytes_total"] = float(sum(r[5] for r in rehomes))
         diag["epochs"] = schedule.n_epochs
+    if faults is not None:
+        if completed + fstats["lost"] != n:   # every admitted query must
+            raise RuntimeError(               # end exactly once
+                f"fault conservation violated: {completed} completed + "
+                f"{fstats['lost']} lost != {n} admitted")
+        diag["faults"] = dict(fstats, timeout_s=policy.timeout_s,
+                              down_at_end=sorted(router.failed))
     return SimResult(
         latencies_s=lat, arrive_s=arrive,
         trace_idx=np.asarray(workload.trace_idx),

@@ -597,3 +597,116 @@ class PlacementSchedule:
             for p in range(len(new))
             for dst in new[p] if dst not in old[p]
         )
+
+
+# ---------------------------------------------------------------------------
+# fault schedule: time -> server fault events (the robustness scenario)
+# ---------------------------------------------------------------------------
+
+
+FAULT_EVENTS = ("crash", "recover", "slow", "flaky_nic")
+
+
+def parse_fault_event(ev: str) -> tuple[str, float]:
+    """``'crash'`` -> ('crash', 0.0); ``'slow:2.0'`` -> ('slow', 2.0);
+    ``'flaky_nic:0.3'`` -> ('flaky_nic', 0.3).  Raises ValueError on any
+    malformed event string (the one place event grammar is defined)."""
+    kind, _, arg = ev.partition(":")
+    if kind in ("crash", "recover"):
+        if arg:
+            raise ValueError(f"fault event {ev!r} takes no argument")
+        return kind, 0.0
+    if kind == "slow":
+        try:
+            mult = float(arg)
+        except ValueError:
+            raise ValueError(
+                f"slow event needs a float multiplier ('slow:<mult>'): "
+                f"{ev!r}") from None
+        if mult <= 0:
+            raise ValueError(f"slow multiplier must be > 0: {ev!r}")
+        return kind, mult
+    if kind == "flaky_nic":
+        try:
+            p = float(arg)
+        except ValueError:
+            raise ValueError(
+                f"flaky_nic event needs a drop probability "
+                f"('flaky_nic:<p>'): {ev!r}") from None
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"flaky_nic probability must be in [0,1]: {ev!r}")
+        return kind, p
+    raise ValueError(
+        f"unknown fault event {ev!r}; known: crash | recover | "
+        f"slow:<mult> | flaky_nic:<p>")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Time-ordered fault injections: a tuple of ``(t_s, event, server)``.
+
+    Events (validated at construction, like :class:`PlacementSchedule`):
+
+    * ``"crash"`` — the server dies at ``t_s``: every baton resident there
+      (in-flight segments, queued jobs, slot waiters, outbound NIC
+      transfers) is dropped, its queues and cache are lost (the stack is
+      rebuilt cold on recovery), and it leaves every replica candidate set
+      until a matching ``"recover"``.
+    * ``"recover"`` — the server rejoins (empty queues, cold cache).
+    * ``"slow:<mult>"`` — multiply the server's SSD and CPU service times
+      by ``mult`` from ``t_s`` on (a degraded-but-alive brownout; undo
+      with a reciprocal ``slow`` event).
+    * ``"flaky_nic:<p>"`` — each message sent from the server is dropped
+      with probability ``p`` (seeded rng, deterministic given event
+      order); ``flaky_nic:0`` heals it.
+
+    Times must be >= 0 and non-decreasing (same-instant events on
+    different servers are fine); ``recover`` must follow a ``crash`` of
+    the same server, and a crashed server cannot crash again before
+    recovering.
+    """
+
+    events: tuple[tuple[float, str, int], ...]
+
+    def __post_init__(self):
+        if not self.events:
+            raise ValueError("fault schedule needs at least one event")
+        prev_t = 0.0
+        downed: set = set()
+        for t, ev, sid in self.events:
+            if t < 0:
+                raise ValueError(f"fault time must be >= 0: {t}")
+            if t < prev_t:
+                raise ValueError(
+                    f"fault times must be non-decreasing: {t} after {prev_t}")
+            prev_t = t
+            if sid < 0:
+                raise ValueError(f"fault server id must be >= 0: {sid}")
+            kind, _ = parse_fault_event(ev)
+            if kind == "crash":
+                if sid in downed:
+                    raise ValueError(
+                        f"server {sid} crashes at t={t} while already down "
+                        f"— recover it first")
+                downed.add(sid)
+            elif kind == "recover":
+                if sid not in downed:
+                    raise ValueError(
+                        f"server {sid} recovers at t={t} without a "
+                        f"preceding crash")
+                downed.discard(sid)
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @property
+    def max_server(self) -> int:
+        """Highest server id any event targets (the simulator validates it
+        against the server count before replaying)."""
+        return max(sid for _, _, sid in self.events)
+
+    def crashes(self) -> tuple[tuple[float, int], ...]:
+        """(t_s, server) of every crash event, in order."""
+        return tuple((t, sid) for t, ev, sid in self.events
+                     if ev == "crash")

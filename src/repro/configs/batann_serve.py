@@ -95,6 +95,15 @@ class SimSpec:
     4 servers and scales to 8 at t=0.5 s): the simulator re-homes moved
     partitions at each step, streaming each copy's bytes over the NIC and
     dual-homing it until the stream lands (``ft.elastic.elastic_schedule``).
+
+    ``faults`` injects failures into the replay: ``"t:event:server"``
+    epochs (e.g. ``"0.2:crash:1,0.4:recover:1"``; events: ``crash``,
+    ``recover``, ``slow:<mult>``, ``flaky_nic:<p>`` —
+    ``cluster.FaultSchedule``).  A crash drops every baton on the server;
+    clients detect via deadline and re-issue up to ``retry`` times with
+    exponential backoff around failed replicas; ``hedge_ms > 0``
+    additionally issues one hedged duplicate per query still unresolved
+    after that many milliseconds (first result wins).
     """
 
     send_rate: float = 0.0
@@ -106,6 +115,9 @@ class SimSpec:
     straggler: str = ""          # e.g. "0:4.0,2:1.5" per-server SSD mult
     sat_criterion: str = "latency"  # latency | backlog | both
     elastic: str = ""            # "t0:n0,t1:n1" placement schedule (seconds)
+    faults: str = ""             # "t:event:server[,..]" fault schedule
+    retry: int = 3               # client re-issues per query under faults
+    hedge_ms: float = 0.0        # hedged duplicate delay (0 = no hedging)
     seed: int = 0
 
     def __post_init__(self):
@@ -129,6 +141,23 @@ class SimSpec:
                 raise ValueError(
                     "elastic and replicas are mutually exclusive — the "
                     "schedule's epoch placements define the copies")
+        fault_events = parse_faults(self.faults)
+        if fault_events:
+            if self.send_rate <= 0:
+                raise ValueError(
+                    "faults need the event simulator: set send_rate > 0")
+            if steps:
+                raise ValueError(
+                    "faults and elastic are mutually exclusive — inject "
+                    "failures into a static placement")
+        if self.retry < 0:
+            raise ValueError(f"retry must be >= 0: {self.retry}")
+        if self.hedge_ms < 0:
+            raise ValueError(f"hedge_ms must be >= 0: {self.hedge_ms}")
+        if self.hedge_ms > 0 and not fault_events:
+            raise ValueError(
+                "hedge_ms needs a fault schedule — hedging is the fault "
+                "path's duplicate issue (set faults)")
 
 
 def parse_straggler(spec: str) -> list[tuple[int, float]]:
@@ -187,6 +216,63 @@ def parse_elastic(spec: str) -> list[tuple[float, int]]:
     return out
 
 
+_FAULT_KINDS = ("crash", "recover", "slow", "flaky_nic")
+
+
+def parse_faults(spec: str) -> list[tuple[float, str, int]]:
+    """``'0.2:crash:1,0.4:recover:1'`` -> ``[(0.2, 'crash', 1), ...]`` —
+    the serve launcher's ``--faults`` / ``SimSpec.faults`` format.
+
+    Each token is ``<t_seconds>:<event>:<server>`` where the event is
+    ``crash``, ``recover``, ``slow:<mult>`` or ``flaky_nic:<p>`` (so a
+    token has 3 or 4 ``:``-separated parts).  Times must be >= 0 and
+    non-decreasing, servers >= 0.  Empty spec -> ``[]`` (no faults).
+    Validated purely here for early CLI/JSON errors; the deep per-server
+    pairing rules live in ``cluster.FaultSchedule`` (constructed from this
+    list by the deployment).
+    """
+    if not spec:
+        return []
+    out = []
+    for tok in spec.split(","):
+        parts = tok.split(":")
+        try:
+            if not 3 <= len(parts) <= 4:
+                raise ValueError
+            t = float(parts[0])
+            ev = ":".join(parts[1:-1])
+            sid = int(parts[-1])
+        except ValueError:
+            raise ValueError(
+                f"faults must be '<t_s>:<event>:<server>[,..]' (e.g. "
+                f"'0.2:crash:1,0.4:recover:1'): {spec!r}") from None
+        kind = ev.split(":", 1)[0]
+        if kind not in _FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault event {ev!r}; known: crash | recover | "
+                f"slow:<mult> | flaky_nic:<p>")
+        if ":" in ev:
+            try:
+                float(ev.split(":", 1)[1])
+            except ValueError:
+                raise ValueError(
+                    f"fault event argument must be a number: {ev!r}"
+                ) from None
+        elif kind in ("slow", "flaky_nic"):
+            raise ValueError(f"fault event {kind!r} needs an argument "
+                             f"({kind}:<value>): {spec!r}")
+        if t < 0:
+            raise ValueError(f"fault times must be >= 0: {spec!r}")
+        if sid < 0:
+            raise ValueError(f"fault server must be >= 0: {spec!r}")
+        out.append((t, ev, sid))
+    times = [t for t, _, _ in out]
+    if any(b < a for a, b in zip(times, times[1:])):
+        raise ValueError(
+            f"fault times must be non-decreasing: {spec!r}")
+    return out
+
+
 _SECTIONS = {"data": DataSpec, "index": IndexSpec, "search": SearchParams,
              "sim": SimSpec}
 
@@ -219,6 +305,10 @@ class ServeConfig:
                 raise ValueError(
                     f"straggler server {srv} out of range "
                     f"0..{n_srv - 1}")
+        for _, _, srv in parse_faults(self.sim.faults):
+            if not 0 <= srv < n_srv:
+                raise ValueError(
+                    f"fault server {srv} out of range 0..{n_srv - 1}")
 
     # --- overrides ---------------------------------------------------------
     def with_updates(self, name: str | None = None, **sections

@@ -37,15 +37,27 @@ from repro.core import partition as part_mod
 
 @dataclasses.dataclass
 class PartitionMap:
-    """logical partition -> physical replica devices."""
+    """logical partition -> physical replica devices.
+
+    Liveness resolves through :class:`repro.ft.faults.FailoverRouter` — the
+    same semantic the cluster simulator's fault path routes around crashes
+    with — so a device marked failed disappears from every routing surface
+    at once.  The router shares this map's ``failed`` set by reference:
+    ``fail_device``/``recover_device`` mutate one set, both layers see it.
+    """
 
     n_logical: int
     replicas: np.ndarray          # (P, R) device ids
     failed: set
 
+    def __post_init__(self):
+        from repro.ft.faults import FailoverRouter
+        self._router = FailoverRouter(
+            replicas=tuple(tuple(int(d) for d in r) for r in self.replicas),
+            failed=self.failed)
+
     @classmethod
     def create(cls, n_logical: int, n_devices: int, r: int = 2, seed: int = 0):
-        rng = np.random.default_rng(seed)
         reps = np.zeros((n_logical, r), np.int32)
         for p in range(n_logical):
             # primary placement round-robin; replicas offset to distinct hosts
@@ -63,10 +75,7 @@ class PartitionMap:
 
     def owner(self, p: int) -> int:
         """Current serving device for logical partition p."""
-        for d in self.replicas[p]:
-            if int(d) not in self.failed:
-                return int(d)
-        raise RuntimeError(f"partition {p} lost: all replicas failed")
+        return self._router.owner(p)
 
     def routing_table(self) -> np.ndarray:
         """(P,) logical -> physical map for the current failure set."""
@@ -74,11 +83,7 @@ class PartitionMap:
                         np.int32)
 
     def coverage_ok(self) -> bool:
-        try:
-            self.routing_table()
-            return True
-        except RuntimeError:
-            return False
+        return self._router.coverage_ok()
 
 
 @dataclasses.dataclass
@@ -92,28 +97,43 @@ class ReissueTracker:
         return expected_qids[~np.asarray(delivered_mask, bool)]
 
     def run_with_retries(self, run_fn, queries: np.ndarray):
-        """run_fn(queries) -> (ids, dists, stats w/ per-query 'hops')."""
+        """run_fn(queries) -> (ids, dists, stats w/ per-query 'hops').
+
+        Per-query ndarray stats **sum** across attempts (a retried query
+        pays for every attempt's hops — honest pricing); scalar stats sum
+        too (run totals).  ``agg_stats["exhausted"]`` counts the queries
+        still undelivered after ``max_attempts`` — the same queries in the
+        returned ``pending``, whose rows stay at the ``-1``/``inf``
+        sentinels."""
         n = queries.shape[0]
         ids = None
         dists = None
         pending = np.arange(n)
         attempts = 0
-        agg_stats = None
+        agg_stats: "dict | None" = None
         while len(pending) and attempts < self.max_attempts:
             r_ids, r_dists, r_stats = run_fn(queries[pending])
             if ids is None:
                 ids = np.full((n, r_ids.shape[1]), -1, r_ids.dtype)
                 dists = np.full((n, r_dists.shape[1]), np.inf, r_dists.dtype)
-                agg_stats = {k: np.zeros(n, dtype=np.asarray(v).dtype)
-                             for k, v in r_stats.items()
-                             if isinstance(v, np.ndarray)}
+                agg_stats = {
+                    k: (np.zeros(n, dtype=np.asarray(v).dtype)
+                        if isinstance(v, np.ndarray) else type(v)(0))
+                    for k, v in r_stats.items()}
             ok = r_ids[:, 0] >= 0
             ids[pending[ok]] = r_ids[ok]
             dists[pending[ok]] = r_dists[ok]
-            for k in agg_stats:
-                agg_stats[k][pending[ok]] = r_stats[k][ok]
+            for k, v in r_stats.items():
+                if isinstance(v, np.ndarray):
+                    # every attempt is charged, delivered or not — a query
+                    # served on attempt 2 cost attempt 1's hops too
+                    agg_stats[k][pending] += v
+                else:
+                    agg_stats[k] += v
             pending = pending[~ok]
             attempts += 1
+        if agg_stats is not None:
+            agg_stats["exhausted"] = int(len(pending))
         return ids, dists, agg_stats, pending
 
 

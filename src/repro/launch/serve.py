@@ -102,6 +102,20 @@ def build_argparser() -> argparse.ArgumentParser:
                          "4 servers and scales to 8 at t=0.5s; moved "
                          "partitions are re-homed (bytes streamed over the "
                          "source NIC, dual-homed until the copy lands)")
+    ap.add_argument("--faults", default=None, metavar="t:event:server,..",
+                    help="fault schedule for the event simulator: "
+                         "'0.2:crash:1,0.4:recover:1' crashes server 1 at "
+                         "t=0.2s (dropping every resident baton; clients "
+                         "re-issue around failed replicas) and recovers it "
+                         "at t=0.4s; events: crash, recover, slow:<mult>, "
+                         "flaky_nic:<p>")
+    ap.add_argument("--retry", type=int, default=None,
+                    help="client re-issues per query under faults "
+                         "(deadline-triggered, exponential backoff)")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="issue one hedged duplicate for queries still "
+                         "unresolved after this many ms (first result "
+                         "wins; needs --faults)")
     return ap
 
 
@@ -132,6 +146,8 @@ def config_from_args(args):
             "replicas": args.replicas, "straggler": args.straggler,
             "sat_criterion": args.sat_criterion,
             "elastic": args.elastic,
+            "faults": args.faults, "retry": args.retry,
+            "hedge_ms": args.hedge_ms,
         },
     )
 
@@ -186,6 +202,11 @@ def main():
             print(f"  elastic: {s['elastic']} "
                   f"rehomed={s['rehome_events']} partitions "
                   f"migrated={s['migration_bytes']/1e6:.1f}MB over NIC")
+        if s["faults"]:
+            print(f"  faults: {s['faults']} "
+                  f"lost={s['lost']} reissued={s['reissued']} "
+                  f"failover_hops={s['failover_hops']} "
+                  f"hedge_wins={s['hedge_wins']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,403 @@
+"""Fault injection and baton recovery (ISSUE-6 battery).
+
+* ``cluster.FaultSchedule`` validates at construction (grammar, ordering,
+  crash/recover pairing); ``SimSpec.faults`` round-trips through JSON and
+  rejects malformed schedules at config construction time.
+* ``ft.faults`` is pure and unit-testable: ``FailoverRouter`` is the one
+  liveness semantic, ``RecoveryPolicy`` derives its deadline from the
+  modeled p99, ``QueryClient`` walks issue → deadline → reissue/lost with
+  exactly-once resolution.
+* With no fault schedule (or a benign one) the simulator's event log is
+  bit-identical to the default path — the acceptance parity pin.
+* Under faults: same seed ⇒ identical event log; every admitted query ends
+  in exactly one of {completed, lost} (conservation, enforced in-sim); an
+  R=2 crash+recover loses nothing; an R=1 crash without replicas degrades
+  gracefully (lost > 0, terminates, no deadlock); losing *every* server
+  leaves nan latencies/throughput instead of crashing the percentile math.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.api import SIM_FIELDS, Deployment, IndexSpec, ServeConfig, SimSpec
+from repro.api.engine import BatonEngine
+from repro.configs.batann_serve import parse_faults
+from repro.core import baton
+from repro.core.state import envelope_bytes
+from repro.ft.faults import FailoverRouter, QueryClient, RecoveryPolicy
+
+
+@pytest.fixture(scope="module")
+def traced(baton_index, dataset):
+    cfg = baton.BatonParams(L=32, W=8, k=10, pool=128, slots=16, n_starts=4)
+    _, _, stats = baton.run_simulated(baton_index, dataset.queries, cfg)
+    env = envelope_bytes(dataset.vectors.shape[1], cfg.L, cfg.pool,
+                         m=16, k_pq=128)
+    return cluster.from_baton_stats(stats, env)
+
+
+@pytest.fixture(scope="module")
+def sat_r2(traced):
+    """Saturation knee of the healthy R=2 tier — crash scenarios drive a
+    fraction of this so queries are genuinely in flight at crash time."""
+    return cluster.find_saturation_qps(
+        traced, 4, cluster.SimParams(replicas=2), n_arrivals=200, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# schedule construction / validation
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_event():
+    assert cluster.parse_fault_event("crash") == ("crash", 0.0)
+    assert cluster.parse_fault_event("recover") == ("recover", 0.0)
+    assert cluster.parse_fault_event("slow:2.5") == ("slow", 2.5)
+    assert cluster.parse_fault_event("flaky_nic:0.3") == ("flaky_nic", 0.3)
+    for bad in ("crash:1", "recover:0", "slow", "slow:x", "slow:0",
+                "slow:-1", "flaky_nic", "flaky_nic:1.5", "flaky_nic:-0.1",
+                "reboot", ""):
+        with pytest.raises(ValueError):
+            cluster.parse_fault_event(bad)
+
+
+def test_fault_schedule_validation():
+    with pytest.raises(ValueError):
+        cluster.FaultSchedule(())                          # empty
+    with pytest.raises(ValueError):
+        cluster.FaultSchedule(((-0.1, "crash", 0),))       # t < 0
+    with pytest.raises(ValueError):                        # decreasing times
+        cluster.FaultSchedule(((0.5, "crash", 0), (0.2, "recover", 0)))
+    with pytest.raises(ValueError):
+        cluster.FaultSchedule(((0.0, "crash", -1),))       # bad server id
+    with pytest.raises(ValueError):
+        cluster.FaultSchedule(((0.0, "slow:0", 0),))       # bad grammar
+    with pytest.raises(ValueError):                        # recover w/o crash
+        cluster.FaultSchedule(((0.1, "recover", 0),))
+    with pytest.raises(ValueError):                        # double crash
+        cluster.FaultSchedule(((0.1, "crash", 0), (0.2, "crash", 0)))
+    ok = cluster.FaultSchedule((
+        (0.1, "crash", 1), (0.1, "slow:2.0", 0),           # same-instant ok
+        (0.3, "recover", 1), (0.4, "crash", 1),            # re-crash after
+        (0.5, "flaky_nic:0.2", 2)))                        # recover is fine
+    assert ok.n_events == 5
+    assert ok.max_server == 2
+    assert ok.crashes() == ((0.1, 1), (0.4, 1))
+
+
+def test_faults_exclude_schedule_and_check_range(traced):
+    from repro.ft import elastic as ftel
+    faults = cluster.FaultSchedule(((0.1, "crash", 0),))
+    with pytest.raises(ValueError):        # elastic and faults: one per run
+        cluster.zero_load_result(traced, 4, cluster.SimParams(
+            faults=faults,
+            schedule=ftel.elastic_schedule([(0.0, 2), (0.5, 4)], 4)))
+    with pytest.raises(ValueError):        # fault targets a missing server
+        cluster.zero_load_result(traced, 4, cluster.SimParams(
+            faults=cluster.FaultSchedule(((0.1, "crash", 4),))))
+
+
+# ---------------------------------------------------------------------------
+# ft.faults unit tests (pure, no simulator)
+# ---------------------------------------------------------------------------
+
+
+def test_failover_router():
+    r = FailoverRouter(replicas=((0, 1), (1, 2), (2,)))
+    assert r.live(0) == (0, 1) and r.owner(1) == 1 and r.coverage_ok()
+    r.fail(1)
+    assert r.live(0) == (0,) and r.live(1) == (2,)
+    assert r.owner(1) == 2                 # failover keeps listed order
+    r.fail(2)
+    assert r.live(2) == () and not r.coverage_ok()
+    with pytest.raises(RuntimeError):
+        r.owner(2)                         # single replica down = lost
+    r.recover(2)
+    assert r.owner(2) == 2 and r.coverage_ok()
+
+
+def test_recovery_policy():
+    p = RecoveryPolicy(timeout_s=0.1, max_retries=2, backoff=3.0)
+    assert p.deadline_s(0) == pytest.approx(0.1)
+    assert p.deadline_s(2) == pytest.approx(0.9)   # exponential backoff
+    for bad in (dict(timeout_s=0.0), dict(timeout_s=0.1, max_retries=-1),
+                dict(timeout_s=0.1, backoff=0.5),
+                dict(timeout_s=0.1, hedge_s=-1.0)):
+        with pytest.raises(ValueError):
+            RecoveryPolicy(**bad)
+
+
+def test_recovery_policy_from_traces(traced):
+    from repro.io_sim.disk import CostModel
+    cost = CostModel()
+    pol = RecoveryPolicy.from_traces(cost, traced, factor=8.0)
+    lats = [cluster.zero_load_result(traced[i:i + 1], 4).mean_s
+            for i in range(len(traced))]
+    # k x modeled p99: above every zero-load latency, not absurdly above
+    assert pol.timeout_s > max(lats)
+    assert pol.timeout_s < 8.0 * 10 * max(lats)
+    with pytest.raises(ValueError):
+        RecoveryPolicy.from_traces(cost, traced, factor=0.0)
+
+
+def test_query_client_walk():
+    c = QueryClient(policy=RecoveryPolicy(timeout_s=0.1, max_retries=1))
+    assert c.on_issue() == pytest.approx(0.1)
+    assert c.on_deadline() == "reissue"            # retry budget available
+    assert c.on_issue() == pytest.approx(0.2)      # backoff grew
+    assert c.on_deadline() == "wait"               # exhausted, 2 still live
+    assert c.on_instance_dead() == "wait"          # one racing instance left
+    assert c.on_instance_dead() == "lost"          # last one died: lost now
+    assert c.lost and not c.done and c.resolved
+    assert c.on_complete() == "dup"                # straggler result dropped
+    assert c.on_deadline() == "none"
+
+
+def test_query_client_first_result_wins_and_hedges_once():
+    c = QueryClient(policy=RecoveryPolicy(timeout_s=0.1, hedge_s=0.05))
+    c.on_issue()
+    assert c.on_hedge() == "hedge"
+    assert c.on_hedge() == "none"                  # one hedge only
+    c.on_issue()                                   # the hedged duplicate
+    assert c.on_complete() == "win"
+    assert c.on_complete() == "dup"
+    assert c.done and not c.lost
+    assert c.on_hedge() == "none" and c.on_deadline() == "none"
+    # hedge disabled when the policy says so
+    c2 = QueryClient(policy=RecoveryPolicy(timeout_s=0.1))
+    c2.on_issue()
+    assert c2.on_hedge() == "none"
+
+
+# ---------------------------------------------------------------------------
+# parity: no-fault run is bit-identical to the default path
+# ---------------------------------------------------------------------------
+
+
+def test_benign_faults_are_parity(traced):
+    """The acceptance pin: a fault schedule with no teeth (slow x1.0)
+    produces the event-for-event identical log and identical latencies to
+    the fault-free simulator — the fault machinery adds no perturbation."""
+    wl = cluster.make_workload(len(traced), 2000.0, 400, "poisson", seed=7)
+    base = cluster.simulate(traced, 4, wl,
+                            cluster.SimParams(record_events=True))
+    benign = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(record_events=True,
+                          faults=cluster.FaultSchedule(
+                              ((0.0, "slow:1.0", 0),))))
+    assert benign.events == base.events
+    np.testing.assert_array_equal(benign.latencies_s, base.latencies_s)
+    f = benign.diag["faults"]
+    assert f["slow_events"] == 1
+    assert f["reissued"] == f["lost"] == f["dropped"] == f["crashes"] == 0
+    assert benign.lost == 0 and "faults" not in base.diag
+
+
+def test_fault_determinism(traced, sat_r2):
+    wl = cluster.make_workload(len(traced), 0.7 * sat_r2, 300, "poisson",
+                               seed=3)
+    params = cluster.SimParams(
+        record_events=True, replicas=2,
+        faults=cluster.FaultSchedule((
+            (float(wl.times_s[100]), "crash", 1),
+            (float(wl.times_s[150]), "flaky_nic:0.3", 0),
+            (float(wl.times_s[200]), "recover", 1))))
+    r1 = cluster.simulate(traced, 4, wl, params)
+    r2 = cluster.simulate(traced, 4, wl, params)
+    assert r1.events == r2.events
+    np.testing.assert_array_equal(r1.latencies_s, r2.latencies_s)
+    assert r1.diag["faults"] == r2.diag["faults"]
+    # a different rng stream moves the flaky-NIC drops
+    r3 = cluster.simulate(traced, 4, wl,
+                          dataclasses.replace(params, fault_seed=99))
+    assert r3.diag["faults"]["nic_drops"] != r1.diag["faults"]["nic_drops"] \
+        or r3.events != r1.events
+
+
+# ---------------------------------------------------------------------------
+# conservation under crashes
+# ---------------------------------------------------------------------------
+
+
+def test_crash_r2_loses_nothing(traced, sat_r2):
+    """The paper's operating point: R=2, one server crashes mid-run and
+    recovers — every dropped baton is re-issued around the failure and
+    every query completes (lost == 0)."""
+    wl = cluster.make_workload(len(traced), 0.8 * sat_r2, 450, "poisson",
+                               seed=1)
+    t_crash, t_rec = float(wl.times_s[150]), float(wl.times_s[300])
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(replicas=2, faults=cluster.FaultSchedule(
+            ((t_crash, "crash", 1), (t_rec, "recover", 1)))))
+    f = res.diag["faults"]
+    assert f["crashes"] == 1 and f["recovers"] == 1
+    assert f["dropped"] > 0                # batons really were in flight
+    assert f["reissued"] > 0
+    assert f["failovers"] > 0              # routed around the dead primary
+    assert res.lost == 0
+    assert res.completed == res.offered == 450
+    assert not np.isnan(res.latencies_s).any()
+    assert f["down_at_end"] == []
+
+
+def test_crash_r1_degrades_gracefully(traced):
+    """No replicas: queries needing the dead server's partitions are lost
+    after exhausting retries — but the run terminates, conservation holds
+    exactly, and unaffected queries still complete."""
+    wl = cluster.make_workload(len(traced), 2000.0, 300, "poisson", seed=2)
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(max_retries=1, faults=cluster.FaultSchedule(
+            ((float(wl.times_s[100]), "crash", 0),))))
+    f = res.diag["faults"]
+    assert res.lost > 0                    # partition 0 unreachable
+    assert res.completed > 0               # others keep completing
+    assert res.completed + res.lost == res.offered == 300
+    assert f["lost"] == res.lost and f["no_replica"] > 0
+    assert f["down_at_end"] == [0]
+    # lost arrivals carry nan latency / +inf completion, never fake numbers
+    assert int(np.isnan(res.latencies_s).sum()) == res.lost
+    assert np.isinf(res.completion_s()).sum() == res.lost
+
+
+def test_all_servers_lost_nan_guards(traced):
+    """Crash the whole tier at t=0 with no retries: zero completions must
+    yield nan summary stats (not numpy errors) and a zero makespan."""
+    wl = cluster.make_workload(len(traced), 2000.0, 50, "poisson", seed=4)
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(max_retries=0, faults=cluster.FaultSchedule(
+            tuple((0.0, "crash", s) for s in range(4)))))
+    assert res.completed == 0 and res.lost == 50
+    assert np.isnan(res.mean_s)
+    assert np.isnan(res.percentile_s(50)) and np.isnan(res.percentile_s(99))
+    assert np.isnan(res.throughput_in(0.0, 1.0))
+    assert res.makespan_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flaky NIC, hedging, brownouts
+# ---------------------------------------------------------------------------
+
+
+def test_flaky_nic_drops_are_reissued(traced):
+    wl = cluster.make_workload(len(traced), 2000.0, 300, "poisson", seed=5)
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(faults=cluster.FaultSchedule((
+            (float(wl.times_s[50]), "flaky_nic:0.5", 0),
+            (float(wl.times_s[250]), "flaky_nic:0", 0)))))
+    f = res.diag["faults"]
+    assert f["nic_drops"] > 0
+    assert f["reissued"] > 0
+    assert res.lost == 0 and res.completed == res.offered == 300
+
+
+def test_hedging_first_result_wins(traced):
+    """A tiny hedge delay duplicates nearly every query; the duplicate's
+    result is deduped, nothing is double-counted, nothing is lost."""
+    base = cluster.zero_load_result(traced, 4)
+    wl = cluster.make_workload(len(traced), 1000.0, 200, "poisson", seed=6)
+    res = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(hedge_s=0.2 * base.mean_s, replicas=2,
+                          faults=cluster.FaultSchedule(
+                              ((0.0, "slow:1.0", 0),))))
+    f = res.diag["faults"]
+    assert f["hedged"] > 0
+    assert f["dup_results"] > 0            # both instances finished: deduped
+    assert f["hedge_wins"] <= f["hedged"]
+    assert res.lost == 0 and res.completed == res.offered == 200
+
+
+def test_slow_brownout_raises_latency(traced):
+    wl = cluster.make_workload(len(traced), 1500.0, 200, "poisson", seed=8)
+    base = cluster.simulate(traced, 4, wl)
+    slowed = cluster.simulate(
+        traced, 4, wl,
+        cluster.SimParams(faults=cluster.FaultSchedule(
+            tuple((0.0, "slow:4.0", s) for s in range(4)))))
+    assert slowed.diag["faults"]["slow_events"] == 4
+    assert slowed.mean_s > 1.5 * base.mean_s
+    assert slowed.lost == 0 and slowed.completed == 200
+
+
+# ---------------------------------------------------------------------------
+# config surface: parse/round-trip/validation + deployment report
+# ---------------------------------------------------------------------------
+
+
+def test_parse_faults():
+    assert parse_faults("") == []
+    assert parse_faults("0.2:crash:1,0.4:recover:1") == [
+        (0.2, "crash", 1), (0.4, "recover", 1)]
+    assert parse_faults("0:slow:2.0:0,0.1:flaky_nic:0.3:2") == [
+        (0.0, "slow:2.0", 0), (0.1, "flaky_nic:0.3", 2)]
+    for bad in ("0.2:crash", "x:crash:1", "0.2:reboot:1", "0.2:crash:-1",
+                "0.2:crash:1.5", "0.5:crash:1,0.2:recover:1",
+                "0.2:slow:x:1", "-0.2:crash:1", "0.2:slow:1",
+                "0.2:crash:1:2:3"):
+        with pytest.raises(ValueError):
+            parse_faults(bad)
+    # arg *range* rules (slow:0, flaky_nic:1.5) are FaultSchedule's job —
+    # parse_faults only checks shape, so these surface at simulate time
+    with pytest.raises(ValueError):
+        cluster.FaultSchedule(tuple(parse_faults("0.2:slow:0:1")))
+
+
+def test_simspec_faults_validation_and_roundtrip():
+    sim = SimSpec(send_rate=1000.0, faults="0.2:crash:1,0.4:recover:1",
+                  retry=2, hedge_ms=5.0)
+    cfg = ServeConfig(sim=sim)
+    assert ServeConfig.from_json(cfg.to_json()) == cfg
+    with pytest.raises(ValueError):        # simulator required
+        SimSpec(faults="0.2:crash:1")
+    with pytest.raises(ValueError):        # faults and elastic: one per run
+        SimSpec(send_rate=1000.0, faults="0.2:crash:1", elastic="0:2,0.5:4")
+    with pytest.raises(ValueError):        # malformed schedule
+        SimSpec(send_rate=1000.0, faults="0.2:oops:1")
+    with pytest.raises(ValueError):
+        SimSpec(send_rate=1000.0, faults="0.2:crash:1", retry=-1)
+    with pytest.raises(ValueError):
+        SimSpec(send_rate=1000.0, faults="0.2:crash:1", hedge_ms=-1.0)
+    with pytest.raises(ValueError):        # hedging rides the fault client
+        SimSpec(send_rate=1000.0, hedge_ms=5.0)
+    # fault server ids must fit the index's server count
+    ServeConfig(index=IndexSpec(p=4),
+                sim=SimSpec(send_rate=1000.0, faults="0.2:crash:3"))
+    with pytest.raises(ValueError):
+        ServeConfig(index=IndexSpec(p=4),
+                    sim=SimSpec(send_rate=1000.0, faults="0.2:crash:4"))
+
+
+def test_deployment_fault_report(baton_index, dataset):
+    """End-to-end: a faulted ServeConfig through the Deployment facade
+    reports the recovery counters; the same config without faults reports
+    zeros — and both stay on the pinned sim schema."""
+    cfg = ServeConfig(
+        name="fault-test",
+        sim=SimSpec(send_rate=2000.0, n_arrivals=300, replicas="2",
+                    faults="0.02:crash:1,0.08:recover:1"))
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset=dataset)
+    rep = dep.run(queries=dataset.queries, gt=dataset.gt)
+    s = rep.sim
+    assert s["faults"] == "0.02:crash:1,0.08:recover:1"
+    assert s["lost"] == 0
+    assert s["completed"] == s["offered"] == 300
+    assert "faults=" in s["scenario"]
+    row = rep.to_row("lost", "reissued", "failover_hops", "hedge_wins")
+    assert row.startswith("lost=0;reissued=")
+    clean = dataclasses.replace(
+        cfg, sim=SimSpec(send_rate=2000.0, n_arrivals=300))
+    rep0 = Deployment.from_parts(clean, BatonEngine(index=baton_index),
+                                 dataset=dataset).run(
+        queries=dataset.queries, gt=dataset.gt)
+    assert rep0.sim["faults"] == "" and rep0.sim["lost"] == 0
+    assert rep0.sim["reissued"] == rep0.sim["hedge_wins"] == 0
+    assert set(s) == set(rep0.sim) == set(SIM_FIELDS)

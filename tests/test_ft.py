@@ -33,13 +33,34 @@ def test_reissue_tracker():
         dists = np.zeros((n, 10), np.float32)
         if calls["n"] == 1:  # first attempt: drop the last 3 queries
             ids[-3:] = -1
-        return ids, dists, {"hops": np.full(n, 5)}
+        return ids, dists, {"hops": np.full(n, 5), "batches": 1}
 
     tr = elastic.ReissueTracker(max_attempts=3)
     q = np.zeros((8, 4), np.float32)
     ids, dists, stats, pending = tr.run_with_retries(flaky_run, q)
     assert len(pending) == 0 and calls["n"] == 2
     assert (ids[:, 0] >= 0).all()
+    # retried queries pay for every attempt's hops; scalar stats sum too
+    assert (stats["hops"][:5] == 5).all() and (stats["hops"][5:] == 10).all()
+    assert stats["batches"] == 2 and stats["exhausted"] == 0
+
+
+def test_reissue_tracker_exhaustion():
+    """Queries still undelivered after max_attempts are counted, not
+    silently returned at their sentinel rows."""
+
+    def always_drop_last(queries):
+        n = queries.shape[0]
+        ids = np.tile(np.arange(10, dtype=np.int32), (n, 1))
+        ids[-1] = -1
+        return ids, np.zeros((n, 10), np.float32), {"hops": np.full(n, 3)}
+
+    tr = elastic.ReissueTracker(max_attempts=2)
+    ids, _, stats, pending = tr.run_with_retries(
+        always_drop_last, np.zeros((4, 4), np.float32))
+    assert len(pending) == 1 and stats["exhausted"] == 1
+    assert ids[pending[0], 0] == -1       # sentinel row, loss accounted
+    assert stats["hops"][pending[0]] == 6  # charged for both failed attempts
 
 
 def test_elastic_rescale_preserves_balance_and_locality(graph):
