@@ -136,6 +136,13 @@ def sg_deployment(p: int | None = None, **search) -> api.Deployment:
 SIM_ARRIVALS = int(os.environ.get("BENCH_SIM_ARRIVALS", 5000))
 SIM_SAT_ARRIVALS = int(os.environ.get("BENCH_SIM_SAT_ARRIVALS", 800))
 
+# executable-tier scale knobs (fig20): real serve_async workers, and
+# wall-clock arrivals injected at the sweep's highest rate point (lower
+# points are scaled down proportionally so every point costs about the
+# same wall time)
+EXEC_WORKERS = int(os.environ.get("BENCH_EXEC_WORKERS", 2))
+EXEC_ARRIVALS = int(os.environ.get("BENCH_EXEC_ARRIVALS", 72))
+
 
 def recall_at_095(l_values, recalls, values):
     """Interpolate `values` at recall 0.95 along the L sweep."""

@@ -44,6 +44,7 @@ SUITES = (
     ("fig17strag", "figures.fig17_straggler"),
     ("fig18elastic", "figures.fig18_elastic"),
     ("fig19fault", "figures.fig19_fault_recovery"),
+    ("fig20execsim", "figures.fig20_exec_vs_sim"),
     ("sec8", "figures.sec8_ship_vs_recompute"),
     ("kernels", "bench_kernels.kernel_rows"),
     ("superstep", "bench_kernels.superstep_rows"),
@@ -66,15 +67,20 @@ def main() -> None:
     if args.list:
         print("\n".join(tag for tag, _ in SUITES))
         return
-    suites = [(tag, _resolve(spec)) for tag, spec in SUITES]
+    selected = SUITES
     if args.only:
         want = [t.strip() for t in args.only.split(",") if t.strip()]
-        known = {tag for tag, _ in suites}
+        known = [tag for tag, _ in SUITES]
         unknown = [t for t in want if t not in known]
         if unknown:
+            # Validate BEFORE resolving: suite modules import jax and the
+            # whole bench stack, so a typo'd tag must not pay (or crash
+            # inside) those imports.  One line, every valid tag listed.
             raise SystemExit(
-                f"unknown suite(s) {unknown}; known: {sorted(known)}")
-        suites = [(tag, fn) for tag, fn in suites if tag in want]
+                f"error: unknown suite tag(s): {', '.join(unknown)} "
+                f"(valid: {', '.join(known)})")
+        selected = [(tag, spec) for tag, spec in SUITES if tag in want]
+    suites = [(tag, _resolve(spec)) for tag, spec in selected]
     all_rows = []
     print("name,us_per_call,derived")
     for tag, fn in suites:

@@ -13,6 +13,13 @@ they vary with the CI machine.
 Exit code 1 iff a tracked metric regressed beyond the threshold.  Rows that
 exist on only one side are reported but never fail the check (figures come
 and go across PRs).
+
+Band checks: a row whose ``derived`` carries ``knee_ratio=`` together with
+``band_lo=``/``band_hi=`` (fig20's predicted-vs-measured saturation knee)
+is self-describing — the ratio must sit inside its own band in the
+*current* run alone, no previous artifact needed.  Drift of the ratio
+across runs is reported but never fails (the exec side is wall-clock
+measured, so run-to-run wobble inside the band is expected).
 """
 
 from __future__ import annotations
@@ -61,6 +68,38 @@ def extract_lost(bench: dict) -> dict:
     return _scan(bench, _LOST_RE, keep_zero=True)
 
 
+def _kv(derived) -> dict:
+    out = {}
+    for part in str(derived).split(";"):
+        key, sep, val = part.partition("=")
+        if sep:
+            out[key] = val
+    return out
+
+
+def check_bands(prev: dict, cur: dict) -> list[str]:
+    """Self-describing calibration-band checks (see module docstring)."""
+    failures = []
+    for row, rec in sorted(cur.items()):
+        kv = _kv(rec.get("derived", ""))
+        if not {"knee_ratio", "band_lo", "band_hi"} <= kv.keys():
+            continue
+        try:
+            ratio, lo, hi = (float(kv[k])
+                             for k in ("knee_ratio", "band_lo", "band_hi"))
+        except ValueError:
+            continue
+        ok = lo <= ratio <= hi
+        pv = _kv(prev.get(row, {}).get("derived", "")).get("knee_ratio")
+        drift = f" (prev {float(pv):.2f})" if pv is not None else ""
+        flag = "" if ok else "  << OUT OF BAND"
+        print(f"{row}:knee_ratio={ratio:.2f} band=[{lo:.2f}, {hi:.2f}]"
+              f"{drift}{flag}")
+        if not ok:
+            failures.append(f"{row}:knee_ratio")
+    return failures
+
+
 def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
     p, c = extract_qps(prev), extract_qps(cur)
     regressions = []
@@ -99,9 +138,11 @@ def main() -> int:
     with open(args.cur) as f:
         cur = json.load(f)
     regressions = compare(prev, cur, args.threshold)
+    regressions += check_bands(prev, cur)
     if regressions:
-        print(f"\nFAIL: {len(regressions)} modeled-QPS regression(s) "
-              f"> {args.threshold:.0%}: {', '.join(regressions)}")
+        print(f"\nFAIL: {len(regressions)} tracked-metric failure(s) "
+              f"(>{args.threshold:.0%} QPS drop or out-of-band): "
+              f"{', '.join(regressions)}")
         return 1
     print("\nOK: no modeled-QPS regression beyond "
           f"{args.threshold:.0%} ({len(extract_qps(cur))} tracked metrics)")

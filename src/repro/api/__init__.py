@@ -9,8 +9,11 @@ Three pieces (see ISSUE/README):
   model + cluster-sim scenario; ``Deployment.from_config(cfg).run(queries)``
   returns a structured :class:`Report`.
 * :class:`ServeConfig` — the declarative config (dataset/index/search/sim
-  sections, JSON round-trip, named presets via
-  ``configs.registry.get_serve_config``).
+  /exec sections, JSON round-trip, named presets via
+  ``configs.registry.get_serve_config``).  The ``exec`` section drives the
+  *executable* tier (``repro.serve_async``) through
+  :meth:`Deployment.run_exec` — measured wall-clock numbers next to the
+  modeled ones.
 """
 
 from repro.api.engine import (            # noqa: F401
@@ -18,8 +21,9 @@ from repro.api.engine import (            # noqa: F401
     ScatterGatherEngine, SearchResult, STAT_KEYS, get_engine,
 )
 from repro.api.deployment import (        # noqa: F401
-    Deployment, REPORT_FIELDS, Report, SIM_FIELDS, partition_bytes,
+    Deployment, EXEC_FIELDS, REPORT_FIELDS, Report, SIM_FIELDS,
+    partition_bytes,
 )
 from repro.configs.batann_serve import (  # noqa: F401
-    DataSpec, IndexSpec, SearchParams, ServeConfig, SimSpec,
+    DataSpec, ExecSpec, IndexSpec, SearchParams, ServeConfig, SimSpec,
 )

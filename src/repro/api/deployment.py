@@ -44,6 +44,15 @@ SIM_FIELDS = (
     "elastic", "rehome_events", "migration_bytes",
     "faults", "reissued", "lost", "hedge_wins", "failover_hops",
 )
+# Deployment.run_exec() key schema (same grow-only contract as SIM_FIELDS):
+# the *measured* twin of the sim block — wall-clock numbers from real
+# workers, plus the parity bit tying them back to Engine.search.
+EXEC_FIELDS = (
+    "workers", "mode", "rate_qps", "arrival", "offered", "completed",
+    "rejected", "handoffs", "mean_s", "p50_s", "p95_s", "p99_s",
+    "throughput_qps", "makespan_s", "wire_bytes_per_handoff",
+    "envelope_bytes", "parity",
+)
 
 # ``Report.to_row`` field formatters: row key -> (getter, format spec).
 # Schema-stable on purpose: benchmark ``derived`` strings are diffed across
@@ -380,6 +389,76 @@ class Deployment:
             "lost": fault_diag.get("lost", 0),
             "hedge_wins": fault_diag.get("hedge_wins", 0),
             "failover_hops": fault_diag.get("failovers", 0),
+        }
+
+    # --- the executable tier (repro.serve_async) ---------------------------
+    def run_exec(self, queries=None) -> dict:
+        """Run the config's ``exec`` section on *real* workers and measure.
+
+        Where :meth:`run` predicts (cost model + event simulator), this
+        executes: an ``AsyncServingTier`` with ``exec.workers``
+        partition-owning workers serves the query batch, either closed-loop
+        (``exec.send_rate == 0`` — every query completes; the bit-parity
+        path) or open-loop from the configured arrival schedule (bounded
+        admission rejects under overload, like the simulator's knee).
+
+        Returns:
+            The ``EXEC_FIELDS`` dict — measured wall-clock latency
+            percentiles / throughput / hand-off accounting, plus
+            ``parity``: whether every completed arrival's (ids, dists)
+            match ``Engine.search`` bit-for-bit on the replayed query.
+
+        Raises:
+            ValueError: if ``exec.workers == 0`` (tier disabled) or the
+                engine is not the baton engine.
+        """
+        from repro import cluster
+        from repro.serve_async import AsyncServingTier
+
+        ex = self.config.exec
+        if ex.workers < 1:
+            raise ValueError(
+                "exec tier disabled (exec.workers == 0); set exec.workers "
+                ">= 1 (serve launcher: --exec-workers)")
+        if self.engine.name != "baton":
+            raise ValueError(
+                f"exec tier requires the baton engine: {self.engine.name}")
+        if queries is None:
+            queries = self.dataset.queries
+        queries = np.asarray(queries, np.float32)
+        expect = self.search(queries)       # the parity yardstick
+        tier = AsyncServingTier(
+            self.index, self.engine.baton_params(self.config.search),
+            n_workers=ex.workers, mode=ex.mode,
+            slots=ex.slots or None, admit_headroom=ex.admit_headroom,
+            queue_cap=ex.queue_cap)
+        try:
+            if ex.send_rate > 0:
+                wl = cluster.make_workload(
+                    len(queries), ex.send_rate, ex.n_arrivals, ex.arrival,
+                    seed=ex.seed)
+                res = tier.serve(queries, wl, time_scale=ex.time_scale)
+            else:
+                res = tier.search(queries)
+        finally:
+            tier.close()
+        ok = res.accepted
+        parity = bool(
+            np.array_equal(res.ids[ok], expect.ids[res.trace_idx[ok]])
+            and np.array_equal(res.dists[ok],
+                               expect.dists[res.trace_idx[ok]]))
+        return {
+            "workers": ex.workers, "mode": ex.mode,
+            "rate_qps": res.rate_qps, "arrival": ex.arrival,
+            "offered": res.offered, "completed": res.completed,
+            "rejected": res.rejected, "handoffs": res.handoffs,
+            "mean_s": res.mean_s, "p50_s": res.percentile_s(50),
+            "p95_s": res.percentile_s(95), "p99_s": res.percentile_s(99),
+            "throughput_qps": res.throughput_qps,
+            "makespan_s": res.makespan_s,
+            "wire_bytes_per_handoff": res.wire_bytes_per_handoff,
+            "envelope_bytes": res.envelope_bytes,
+            "parity": parity,
         }
 
     # --- index persistence (checkpoint/ckpt.py) ----------------------------

@@ -11,7 +11,7 @@ from repro.cluster.trace import (          # noqa: F401
     BatonTrace, ScatterGatherTrace, Segment,
     from_baton_stats, from_scatter_gather_stats,
 )
-from repro.cluster.workload import Workload, make_workload  # noqa: F401
+from repro.cluster.workload import Workload, diurnal, make_workload  # noqa: F401
 from repro.cluster.stages import (         # noqa: F401
     CacheTier, FaultSchedule, Placement, PlacementSchedule, ServerConfig,
     ServerStack, Stage, parse_fault_event,

@@ -5,9 +5,9 @@ All generators are seeded and produce a fixed-length :class:`Workload`
 pure function of (traces, workload, params) — the determinism the replay
 tests rely on.
 
-Three processes (paper §6 drives load open-loop at a fixed send rate; the
-burst/skew variants are the obvious stress scenarios the closed-form model
-cannot price):
+Four processes (paper §6 drives load open-loop at a fixed send rate; the
+burst/skew/diurnal variants are the obvious stress scenarios the
+closed-form model cannot price):
 
 * ``poisson`` — memoryless arrivals at ``rate_qps``; traces drawn uniformly.
 * ``burst``   — compound-Poisson clusters: bursts of ``burst_size`` queries
@@ -16,6 +16,9 @@ cannot price):
 * ``skew``    — Poisson arrivals, but traces are drawn with a Zipf-weighted
                 preference over *home servers*, concentrating load on a few
                 servers (hot-tenant scenario).
+* ``diurnal`` — day-in-the-life: a sinusoidal rate envelope around the mean
+                rate realized by Poisson thinning (:func:`diurnal`), shared
+                by the simulator and the executable serving tier.
 """
 
 from __future__ import annotations
@@ -79,8 +82,58 @@ def make_workload(
         idx = np.array([
             by_home[s][rng.integers(0, len(by_home[s]))] for s in pick_srv
         ])
+    elif arrival == "diurnal":
+        return diurnal(n_traces, rate_qps, n, seed=seed)
     else:
-        raise ValueError(f"arrival must be poisson|burst|skew: {arrival}")
+        raise ValueError(
+            f"arrival must be poisson|burst|skew|diurnal: {arrival}")
 
     return Workload(times_s=times, trace_idx=idx, rate_qps=rate_qps,
                     kind=arrival)
+
+
+def diurnal(
+    n_traces: int,
+    rate_qps: float,
+    n: int,
+    seed: int = 0,
+    day_s: "float | None" = None,
+    peak_ratio: float = 3.0,
+) -> Workload:
+    """Day-in-the-life arrivals: sinusoidal rate envelope × Poisson thinning.
+
+    The instantaneous rate swings around the mean ``rate_qps`` with a
+    peak/trough ratio of ``peak_ratio`` over one period of ``day_s``
+    seconds (default: one "day" spans the expected run, ``n / rate_qps``),
+    starting at the trough.  Realized by thinning a homogeneous Poisson
+    process at the peak rate — the standard exact construction — so the
+    mean rate is ``rate_qps`` and the envelope shape is honoured pointwise.
+
+    With the default ``day_s`` the accepted pattern is *rate-invariant*
+    given a seed: changing ``rate_qps`` rescales every arrival time by the
+    rate ratio but keeps the same arrival sequence — so the simulator and
+    the executable tier can run "the same schedule" at each system's own
+    operating rate.
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be > 0: {rate_qps}")
+    if peak_ratio < 1.0:
+        raise ValueError(f"peak_ratio must be >= 1: {peak_ratio}")
+    if day_s is None:
+        day_s = n / rate_qps
+    rng = np.random.default_rng(seed)
+    amp = (peak_ratio - 1.0) / (peak_ratio + 1.0)   # envelope in [1-amp, 1+amp]
+    peak = rate_qps * (1.0 + amp)
+    times = np.empty(0, dtype=np.float64)
+    t0 = 0.0
+    while len(times) < n:
+        m = int((n - len(times)) * (1.0 + amp) * 1.2) + 64
+        cand = t0 + np.cumsum(rng.exponential(1.0 / peak, size=m))
+        env = 1.0 + amp * np.sin(2.0 * np.pi * cand / day_s - np.pi / 2.0)
+        keep = rng.random(m) < env / (1.0 + amp)
+        times = np.concatenate([times, cand[keep]])
+        t0 = float(cand[-1])
+    times = times[:n]
+    idx = rng.integers(0, n_traces, size=n)
+    return Workload(times_s=times, trace_idx=idx, rate_qps=rate_qps,
+                    kind="diurnal")

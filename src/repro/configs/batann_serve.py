@@ -160,6 +160,57 @@ class SimSpec:
                 "path's duplicate issue (set faults)")
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Executable-tier section (``repro.serve_async`` — real workers).
+
+    ``workers == 0`` disables the tier (the default: everything stays
+    modeled).  With ``workers >= 1``, ``Deployment.run_exec`` starts that
+    many partition-owning workers (``mode="thread"`` shares one process and
+    jit cache; ``mode="process"`` spawns real processes) and drives them
+    with a wall-clock open-loop client.  ``send_rate == 0`` is the
+    closed-loop batch client (admission blocks, every query completes —
+    the bit-parity path); ``send_rate > 0`` paces ``n_arrivals`` arrivals
+    from the chosen schedule and *rejects* when the bounded admission
+    queue (``queue_cap``) is full.  ``slots``/``admit_headroom`` mirror
+    the simulator's ``SlotStage`` (slots defaults to ``search.slots``);
+    ``time_scale`` stretches the schedule's wall-clock (2.0 = half rate).
+    """
+
+    workers: int = 0
+    mode: str = "thread"         # thread | process
+    send_rate: float = 0.0       # wall-clock open-loop rate (0 = closed loop)
+    arrival: str = "poisson"     # poisson | burst | skew | diurnal
+    n_arrivals: int = 200
+    slots: int = 0               # 0 = inherit search.slots
+    admit_headroom: int = 2
+    queue_cap: int = 64
+    time_scale: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.workers < 0:
+            raise ValueError(f"workers must be >= 0: {self.workers}")
+        if self.mode not in ("thread", "process"):
+            raise ValueError(f"mode must be thread|process: {self.mode}")
+        if self.send_rate < 0:
+            raise ValueError(f"send_rate must be >= 0: {self.send_rate}")
+        if self.arrival not in ("poisson", "burst", "skew", "diurnal"):
+            raise ValueError(
+                f"arrival must be poisson|burst|skew|diurnal: {self.arrival}")
+        if self.n_arrivals < 1:
+            raise ValueError(f"n_arrivals must be >= 1: {self.n_arrivals}")
+        if self.slots < 0:
+            raise ValueError(f"slots must be >= 0: {self.slots}")
+        if self.admit_headroom < 0:
+            raise ValueError(
+                f"admit_headroom must be >= 0: {self.admit_headroom}")
+        if self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1: {self.queue_cap}")
+        if self.time_scale <= 0:
+            raise ValueError(f"time_scale must be > 0: {self.time_scale}")
+
+
 def parse_straggler(spec: str) -> list[tuple[int, float]]:
     """'0:4.0,2:1.5' -> [(0, 4.0), (2, 1.5)].  The one parser every
     consumer shares: SimSpec format validation, ServeConfig range
@@ -274,12 +325,13 @@ def parse_faults(spec: str) -> list[tuple[float, str, int]]:
 
 
 _SECTIONS = {"data": DataSpec, "index": IndexSpec, "search": SearchParams,
-             "sim": SimSpec}
+             "sim": SimSpec, "exec": ExecSpec}
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """One deployment scenario: dataset + index + search + sim, declaratively.
+    """One deployment scenario: dataset + index + search + sim + exec,
+    declaratively.
 
     ``Deployment.from_config(ServeConfig(...))`` builds the whole pipeline;
     every field overridable via :meth:`with_updates` (the serve launcher's
@@ -291,6 +343,7 @@ class ServeConfig:
     index: IndexSpec = dataclasses.field(default_factory=IndexSpec)
     search: SearchParams = dataclasses.field(default_factory=SearchParams)
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
+    exec: ExecSpec = dataclasses.field(default_factory=ExecSpec)
 
     def __post_init__(self):
         # cross-section check the sections can't do alone: straggler server
@@ -309,6 +362,17 @@ class ServeConfig:
             if not 0 <= srv < n_srv:
                 raise ValueError(
                     f"fault server {srv} out of range 0..{n_srv - 1}")
+        # the exec tier runs real baton workers — baton engine only, and
+        # never more workers than partitions to own
+        if self.exec.workers > 0:
+            if self.index.engine != "baton":
+                raise ValueError(
+                    "exec tier requires index.engine == 'baton': "
+                    f"{self.index.engine}")
+            if self.exec.workers > self.index.p:
+                raise ValueError(
+                    f"exec.workers ({self.exec.workers}) must be <= "
+                    f"index.p ({self.index.p})")
 
     # --- overrides ---------------------------------------------------------
     def with_updates(self, name: str | None = None, **sections

@@ -71,8 +71,8 @@ def build_argparser() -> argparse.ArgumentParser:
                          "traces through per-server SSD/CPU/slot/NIC queues "
                          "and reports p50/p99 under load (0 = skip)")
     ap.add_argument("--arrival", default=None,
-                    choices=["poisson", "burst", "skew"],
-                    help="arrival process for --send-rate")
+                    choices=["poisson", "burst", "skew", "diurnal"],
+                    help="arrival process for --send-rate / --exec-rate")
     ap.add_argument("--sim-arrivals", type=int, default=None,
                     help="queries to simulate at --send-rate")
     ap.add_argument("--cache-sectors", type=int, default=None,
@@ -116,6 +116,23 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="issue one hedged duplicate for queries still "
                          "unresolved after this many ms (first result "
                          "wins; needs --faults)")
+    ap.add_argument("--exec-workers", type=int, default=None,
+                    help="ALSO run the executable async tier "
+                         "(repro.serve_async) with this many real "
+                         "partition-owning workers and report measured "
+                         "wall-clock latency/QPS next to the modeled "
+                         "numbers (0 = modeled only)")
+    ap.add_argument("--exec-mode", default=None,
+                    choices=["thread", "process"],
+                    help="worker isolation for --exec-workers: threads "
+                         "(shared jit cache) or spawned processes")
+    ap.add_argument("--exec-rate", type=float, default=None,
+                    help="wall-clock open-loop rate (QPS) for the exec "
+                         "tier's client; 0 = closed-loop batch (every "
+                         "query completes; the bit-parity path)")
+    ap.add_argument("--exec-arrivals", type=int, default=None,
+                    help="arrivals to inject at --exec-rate (schedule "
+                         "shape comes from --arrival)")
     return ap
 
 
@@ -148,6 +165,11 @@ def config_from_args(args):
             "elastic": args.elastic,
             "faults": args.faults, "retry": args.retry,
             "hedge_ms": args.hedge_ms,
+        },
+        exec={
+            "workers": args.exec_workers, "mode": args.exec_mode,
+            "send_rate": args.exec_rate, "arrival": args.arrival,
+            "n_arrivals": args.exec_arrivals,
         },
     )
 
@@ -207,6 +229,21 @@ def main():
                   f"lost={s['lost']} reissued={s['reissued']} "
                   f"failover_hops={s['failover_hops']} "
                   f"hedge_wins={s['hedge_wins']}")
+
+    if cfg.exec.workers > 0:
+        e = dep.run_exec()
+        mode = "closed-loop" if e["rate_qps"] == 0 else (
+            f"@{e['rate_qps']:.0f} qps {e['arrival']}")
+        rej = f", {e['rejected']} rejected" if e["rejected"] else ""
+        print(f"  executed ({e['workers']} {e['mode']} workers, {mode}, "
+              f"{e['completed']}/{e['offered']} completed{rej}): "
+              f"mean={e['mean_s']*1e3:.2f}ms p50={e['p50_s']*1e3:.2f}ms "
+              f"p99={e['p99_s']*1e3:.2f}ms "
+              f"throughput={e['throughput_qps']:.0f} qps")
+        print(f"  exec wire: {e['handoffs']} hand-offs x "
+              f"{e['wire_bytes_per_handoff']}B measured "
+              f"(model prices {e['envelope_bytes']}B) "
+              f"parity={'OK' if e['parity'] else 'MISMATCH'}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Executable async serving tier (ROADMAP item 5).
+
+Everything else in the repro that claims throughput is *modeled*; this
+package runs it: partition-owning workers (threads or processes), batons as
+real serialized messages through bounded two-class queues with ``SlotStage``
+admission semantics, an open-loop client driven by the same
+``cluster.workload`` schedules the simulator replays — and answers pinned
+bit-identical to ``Engine.search`` at any worker count.
+
+Layers (each file's docstring carries the detail):
+
+* ``runtime``  — pure per-query execution over the engine's own primitives
+* ``wire``     — the baton as bytes (measured vs ``envelope_bytes``)
+* ``queues``   — per-worker two-class inboxes (hand-off priority, bounded
+  admission, reserved headroom)
+* ``worker``   — the service loop; thread and spawned-process drivers
+* ``tier``     — ``AsyncServingTier``: client, pacing, results, accounting
+
+Service-layer entry points: ``ServeConfig.exec`` (``configs``),
+``Deployment.run_exec`` (``api``), ``launch/serve.py --exec-workers``;
+predicted-vs-measured validation: ``benchmarks/figures.py::fig20_exec_vs_sim``.
+"""
+
+from repro.serve_async.tier import (    # noqa: F401
+    AsyncServingTier, ExecRunResult,
+)
+from repro.serve_async.wire import decode_baton, encode_baton  # noqa: F401

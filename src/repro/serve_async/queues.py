@@ -1,0 +1,152 @@
+"""Per-worker inboxes mirroring the simulator's ``SlotStage`` semantics.
+
+Each worker owns one two-class inbox:
+
+* **hand-offs** — strict priority, never rejected.  A baton in flight must
+  always be able to land (the engine's credit protocol retries until
+  granted; dropping one would lose the query), exactly as ``SlotStage``
+  gives the hand-off class priority and lets it consume every slot.
+* **fresh admissions** — a *bounded* queue (``queue_cap``; a full queue
+  rejects at enqueue — the open-loop client counts the rejection), and the
+  worker only dequeues an admission while its resident-baton count is below
+  ``slots - admit_headroom`` — the reserved-headroom rule of
+  ``SlotStage`` / the engine's ``refill_headroom``.
+
+``resident`` counts the batons this worker currently owns (queued hand-offs
+plus the one in service).  Hand-offs can push it past the admit threshold —
+then fresh admissions wait, which is precisely the backpressure the
+simulator models.  Because hand-off queues are unbounded and the service
+loop never blocks while holding a baton, there is no hold-and-wait cycle:
+every accepted query completes (conservation-tested).
+
+Two implementations behind one duck-typed interface (``offer_admit`` /
+``push_handoff`` / ``get`` / ``release`` / ``stop``): a condition-variable
+deque pair for thread workers, and an ``mp.Queue`` pair with a shared
+resident counter for process workers (polling ``get`` — cross-process
+condition variables aren't worth the complexity at these service times).
+"""
+
+from __future__ import annotations
+
+import collections
+import queue as _queue
+import threading
+import time
+
+_HANDOFF, _ADMIT = "handoff", "admit"
+
+
+def _usable(slots: int, headroom: int) -> int:
+    # baton.refill: keep headroom free but never starve (slots=1 still admits)
+    return max(slots - headroom, 1)
+
+
+class ThreadInbox:
+    """Condition-variable inbox for thread-mode workers."""
+
+    def __init__(self, slots: int, admit_headroom: int, queue_cap: int):
+        self._cv = threading.Condition()
+        self._handoffs: collections.deque = collections.deque()
+        self._admits: collections.deque = collections.deque()
+        self._usable = _usable(slots, admit_headroom)
+        self._queue_cap = queue_cap
+        self._stop = False
+        self.resident = 0
+        self.max_resident = 0
+
+    def offer_admit(self, item) -> bool:
+        with self._cv:
+            if len(self._admits) >= self._queue_cap:
+                return False
+            self._admits.append(item)
+            self._cv.notify()
+            return True
+
+    def push_handoff(self, item) -> None:
+        with self._cv:
+            self._handoffs.append(item)
+            self.resident += 1
+            self.max_resident = max(self.max_resident, self.resident)
+            self._cv.notify()
+
+    def get(self):
+        """Next ``(kind, item)`` honouring priority + headroom; ``None`` once
+        stopped and the hand-off class is drained."""
+        with self._cv:
+            while True:
+                if self._handoffs:
+                    return _HANDOFF, self._handoffs.popleft()
+                if self._admits and self.resident < self._usable:
+                    self.resident += 1
+                    self.max_resident = max(self.max_resident, self.resident)
+                    return _ADMIT, self._admits.popleft()
+                if self._stop:
+                    return None
+                self._cv.wait()
+
+    def release(self) -> None:
+        with self._cv:
+            self.resident -= 1
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+
+
+class ProcessInbox:
+    """``mp.Queue``-backed inbox for process-mode workers (same semantics)."""
+
+    def __init__(self, ctx, slots: int, admit_headroom: int, queue_cap: int):
+        self._handoffs = ctx.Queue()
+        self._admits = ctx.Queue(maxsize=queue_cap)
+        self._resident = ctx.Value("i", 0)
+        self._stopped = ctx.Event()
+        self._usable = _usable(slots, admit_headroom)
+
+    @property
+    def resident(self) -> int:
+        return self._resident.value
+
+    def offer_admit(self, item) -> bool:
+        try:
+            self._admits.put_nowait(item)
+            return True
+        except _queue.Full:
+            return False
+
+    def push_handoff(self, item) -> None:
+        with self._resident.get_lock():
+            self._resident.value += 1
+        self._handoffs.put(item)
+
+    def get(self, poll_s: float = 0.0005):
+        while True:
+            try:
+                return _HANDOFF, self._handoffs.get_nowait()
+            except _queue.Empty:
+                pass
+            if self._resident.value < self._usable:
+                try:
+                    item = self._admits.get_nowait()
+                except _queue.Empty:
+                    item = None
+                if item is not None:
+                    with self._resident.get_lock():
+                        self._resident.value += 1
+                    return _ADMIT, item
+            if self._stopped.is_set():
+                # drain check: a hand-off may still be in the feeder pipe
+                try:
+                    return _HANDOFF, self._handoffs.get(timeout=0.05)
+                except _queue.Empty:
+                    return None
+            time.sleep(poll_s)
+
+    def release(self) -> None:
+        with self._resident.get_lock():
+            self._resident.value -= 1
+
+    def stop(self) -> None:
+        self._stopped.set()

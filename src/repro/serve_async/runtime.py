@@ -1,0 +1,217 @@
+"""Per-query execution core for the async serving tier.
+
+The executable tier must return exactly what ``baton.run_simulated``
+returns (ids/dists bit-identical at any worker count), so this module does
+not reimplement the search: it drives the engine's own primitives —
+``seed_beam_fused`` / ``select_frontier`` / ``step_disk`` — one query at a
+time.  The engine's per-query trajectory is independent of what the other
+slots are doing (backpressure only *delays* a state, it never changes its
+counters or beam — the scheduling invariant the whole simulator rests on),
+so "one state, advanced to blocked-or-done on its current partition, then
+handed to the owner of its top frontier node" replays the exact same hop
+sequence the vmapped super-step engine produces.
+
+Everything here is pure (no queues, no threads): seed a state, advance it
+on a partition, apply the wire send/receive transforms.  The concurrent
+machinery lives in ``worker.py`` / ``tier.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq
+from repro.core.beam_search import (
+    Shard, seed_beam_fused, select_frontier, step_disk,
+)
+from repro.core.state import INF, NO_ID, STAT_FIELDS, Counters, QueryState
+
+INTER_HOPS_COL = STAT_FIELDS.index("inter_hops")
+LUT_BUILDS_COL = STAT_FIELDS.index("lut_builds")
+
+
+def partition_shard(index, part: int, sector_codes: bool = False) -> Shard:
+    """The single-partition view of ``BatonIndex.stacked_shards``.
+
+    Exactly the leaves device ``part`` sees inside ``run_simulated``:
+    vectors / neighbors (/ sector codes) are per-partition, the PQ codes and
+    the id maps are replicated.  Every partition has the same ``Npmax``
+    padding, so one jit of :func:`advance_state` serves every worker.
+    """
+    if sector_codes:
+        assert index.part_nbr_codes is not None, "build with codes_mode='sector'"
+        return Shard(
+            vectors=jnp.asarray(index.part_vectors[part]),
+            neighbors=jnp.asarray(index.part_neighbors[part]),
+            codes=jnp.zeros((1, index.codes.shape[1]), jnp.uint8),
+            node2part=jnp.asarray(index.node2part),
+            node2local=jnp.asarray(index.node2local),
+            nbr_codes=jnp.asarray(index.part_nbr_codes[part]),
+        )
+    return Shard(
+        vectors=jnp.asarray(index.part_vectors[part]),
+        neighbors=jnp.asarray(index.part_neighbors[part]),
+        codes=jnp.asarray(index.codes),
+        node2part=jnp.asarray(index.node2part),
+        node2local=jnp.asarray(index.node2local),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("L", "P"))
+def seed_state(query, starts, start_d, lut, home, qid, L: int, P: int):
+    """Seed one state exactly as ``baton.refill.seed_one`` does (minus the
+    trace leaf, which is measurement instrumentation the exec tier does not
+    carry): entry-point distances from the head index, missing starts at
+    ``INF``, ``lut_builds`` starting at 1 for the build at admission."""
+    sd = jnp.where(starts == NO_ID, INF, start_d)
+    bi, bd, be = seed_beam_fused(starts, sd, L)
+    return QueryState(
+        query=query, beam_ids=bi, beam_dists=bd, beam_expl=be,
+        pool_ids=jnp.full((P,), NO_ID, jnp.int32),
+        pool_dists=jnp.full((P,), INF, jnp.float32),
+        counters=Counters.zeros()._replace(lut_builds=jnp.int32(1)),
+        active=jnp.asarray(True), done=jnp.asarray(False),
+        home=jnp.int32(home), qid=jnp.int32(qid), lut=lut,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("w", "max_steps"))
+def advance_state(st: QueryState, shard: Shard, my_part, w: int,
+                  max_steps: int):
+    """Advance ONE resident state on ``my_part`` until it blocks on remote
+    data or finishes — ``baton.local_advance`` (per-slot reference path,
+    pinned bit-identical to the fused path) plus ``plan_routes``, collapsed
+    to a single query.
+
+    Returns ``(state, done, dest)``; ``dest == my_part`` means the state
+    stays resident (done, or the ``max_steps`` cap fired with local work
+    remaining — the caller re-invokes, like the next super-step would).
+    """
+
+    def ownership(s):
+        # baton._frontier_ownership, verbatim semantics
+        fpos, fids, fvalid = select_frontier(s.beam_ids, s.beam_expl, w)
+        owner = shard.node2part[jnp.clip(fids, 0, shard.node2part.shape[0] - 1)]
+        local = fvalid & (owner == my_part)
+        dest = jnp.where(fvalid[0], owner[0], my_part)
+        return fpos, local, jnp.any(local), jnp.any(fvalid), dest
+
+    def cond(c):
+        _, it, progressed = c
+        return progressed & (it < max_steps)
+
+    def body(c):
+        s, it, _ = c
+        fpos, local, any_local, any_frontier, _ = ownership(s)
+        runnable = s.active & ~s.done & any_frontier & any_local
+        new = step_disk(s, shard, s.lut, local & runnable, fpos, fused=False)
+        _, _, v = select_frontier(new.beam_ids, new.beam_expl, 1)
+        new = new._replace(done=new.done | ~jnp.any(v))
+        s = jax.tree.map(lambda a, b: jnp.where(runnable, a, b), new, s)
+        return s, it + 1, runnable
+
+    st, _, _ = jax.lax.while_loop(
+        cond, body, (st, jnp.int32(0), jnp.asarray(True))
+    )
+    _, _, v = select_frontier(st.beam_ids, st.beam_expl, 1)
+    st = st._replace(done=st.done | (st.active & ~jnp.any(v)))
+    _, _, _, _, dest = ownership(st)
+    want_move = st.active & ~st.done & (dest != my_part)
+    return st, st.done, jnp.where(want_move, dest, my_part)
+
+
+@jax.jit
+def _rebuild_lut(codebook, query):
+    return pq.build_lut(codebook, query[None])[0]
+
+
+_quantize_i8 = jax.jit(pq.quantize_lut_i8)      # (..., M, K) — shape-generic
+_dequantize_i8 = jax.jit(pq.dequantize_lut_i8)
+
+
+def state_to_host(st: QueryState) -> dict:
+    """Device state -> plain numpy leaf dict (the host-side baton)."""
+    out = {
+        "query": np.asarray(st.query),
+        "beam_ids": np.asarray(st.beam_ids),
+        "beam_dists": np.asarray(st.beam_dists),
+        "beam_expl": np.asarray(st.beam_expl),
+        "pool_ids": np.asarray(st.pool_ids),
+        "pool_dists": np.asarray(st.pool_dists),
+        "stats": np.asarray(st.counters.stacked()),
+        "home": np.int32(st.home),
+        "qid": np.int32(st.qid),
+    }
+    if st.lut is not None:
+        out["lut"] = np.asarray(st.lut)
+    if st.lut_scale is not None:
+        out["lut_scale"] = np.asarray(st.lut_scale)
+    return out
+
+
+def state_from_host(leaves: dict) -> QueryState:
+    """Host baton -> resident QueryState (inverse of :func:`state_to_host`)."""
+    stats = np.asarray(leaves["stats"], np.int32)
+    return QueryState(
+        query=jnp.asarray(leaves["query"]),
+        beam_ids=jnp.asarray(leaves["beam_ids"]),
+        beam_dists=jnp.asarray(leaves["beam_dists"]),
+        beam_expl=jnp.asarray(leaves["beam_expl"]),
+        pool_ids=jnp.asarray(leaves["pool_ids"]),
+        pool_dists=jnp.asarray(leaves["pool_dists"]),
+        counters=Counters(*[jnp.int32(s) for s in stats]),
+        active=jnp.asarray(True), done=jnp.asarray(False),
+        home=jnp.int32(leaves["home"]), qid=jnp.int32(leaves["qid"]),
+        lut=jnp.asarray(leaves["lut"]) if "lut" in leaves else None,
+    )
+
+
+def pack_for_wire(st: QueryState, cfg) -> dict:
+    """Sender-side hand-off transform: ``baton.pack_sends`` for one state.
+
+    Counts the inter-partition hop on the state, then shapes the wire tree
+    per the §8 mode: recompute drops the LUT leaf entirely; f16/i8 ship a
+    quantized LUT (the receiver widens/dequantizes — bounded error, same as
+    the engine).
+    """
+    leaves = state_to_host(st)
+    leaves["stats"] = leaves["stats"].copy()
+    leaves["stats"][INTER_HOPS_COL] += 1
+    if not cfg.ship_lut:
+        leaves.pop("lut", None)
+    elif cfg.lut_wire_dtype == "f16":
+        leaves["lut"] = leaves["lut"].astype(np.float16)
+    elif cfg.lut_wire_dtype == "i8":
+        q8, scale = _quantize_i8(jnp.asarray(leaves["lut"]))
+        leaves["lut"] = np.asarray(q8)
+        leaves["lut_scale"] = np.asarray(scale)
+    return leaves
+
+
+def unpack_from_wire(leaves: dict, codebook, cfg) -> QueryState:
+    """Receiver-side transform: ``baton.merge_recv`` for one state.
+
+    Recompute mode rebuilds the LUT from the (always-shipped) embedding and
+    counts the build; quantized wire LUTs are restored to f32.
+    """
+    if not cfg.ship_lut:
+        leaves = dict(leaves)
+        leaves["stats"] = np.asarray(leaves["stats"], np.int32).copy()
+        leaves["stats"][LUT_BUILDS_COL] += 1
+        leaves["lut"] = np.asarray(
+            _rebuild_lut(codebook, jnp.asarray(leaves["query"]))
+        )
+    elif leaves["lut"].dtype == np.int8:
+        leaves = dict(leaves)
+        leaves["lut"] = np.asarray(_dequantize_i8(
+            jnp.asarray(leaves["lut"]), jnp.asarray(leaves["lut_scale"])
+        ))
+        leaves.pop("lut_scale", None)
+    elif leaves["lut"].dtype != np.float32:
+        leaves = dict(leaves)
+        leaves["lut"] = leaves["lut"].astype(np.float32)
+    return state_from_host(leaves)

@@ -1,0 +1,60 @@
+"""Baton wire format: the hand-off really is a serialized message.
+
+The simulator prices a hand-off at ``state.envelope_bytes`` without ever
+materializing one; here the baton crosses workers as actual bytes, so the
+priced size can be checked against a measured size.  The payload is the
+host-side leaf dict from ``runtime.state_to_host`` (already shaped for the
+§8 ship/recompute/quantize mode by ``runtime.pack_for_wire``): a fixed
+header, then each leaf as ``name | dtype | shape | raw bytes``.  The format
+is self-describing and deterministic (leaves sorted by name), and works
+identically for thread workers (bytes through a deque) and process workers
+(bytes through an ``mp.Queue``).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_MAGIC = b"BATN"
+_VER = 1
+
+
+def encode_baton(leaves: dict) -> bytes:
+    """Leaf dict (numpy arrays / scalars) -> one self-describing message."""
+    parts = [_MAGIC, struct.pack("<BB", _VER, len(leaves))]
+    for name in sorted(leaves):
+        arr = np.asarray(leaves[name])
+        if not arr.flags.c_contiguous:   # ascontiguousarray would 1-d-ify 0-d
+            arr = np.ascontiguousarray(arr)
+        nm, dt = name.encode(), arr.dtype.str.encode()
+        parts.append(struct.pack("<BBB", len(nm), len(dt), arr.ndim))
+        parts.append(nm)
+        parts.append(dt)
+        parts.append(struct.pack(f"<{arr.ndim}i", *arr.shape))
+        parts.append(arr.tobytes())
+    return b"".join(parts)
+
+
+def decode_baton(buf: bytes) -> dict:
+    """Inverse of :func:`encode_baton`."""
+    if buf[:4] != _MAGIC:
+        raise ValueError("not a baton message")
+    ver, n_leaves = struct.unpack_from("<BB", buf, 4)
+    if ver != _VER:
+        raise ValueError(f"unknown baton version {ver}")
+    off, leaves = 6, {}
+    for _ in range(n_leaves):
+        ln, ld, ndim = struct.unpack_from("<BBB", buf, off)
+        off += 3
+        name = buf[off:off + ln].decode(); off += ln
+        dtype = np.dtype(buf[off:off + ld].decode()); off += ld
+        shape = struct.unpack_from(f"<{ndim}i", buf, off)
+        off += 4 * ndim
+        nbytes = dtype.itemsize * int(np.prod(shape, dtype=np.int64))
+        leaves[name] = np.frombuffer(
+            buf, dtype, count=int(np.prod(shape, dtype=np.int64)), offset=off
+        ).reshape(shape).copy()
+        off += nbytes
+    return leaves

@@ -1,0 +1,126 @@
+"""Partition-owning workers: the service loop behind the async tier.
+
+A worker owns one or more partition shards (partitions fold onto workers as
+``part % n_workers``, the same fold ``cluster.Placement.fold`` uses to map
+partitions onto fewer servers).  Its loop is the executable version of the
+engine's super-step, one baton at a time:
+
+    take next baton (hand-offs first)  — queues.py / SlotStage semantics
+      admit: seed the state            — baton.refill
+      hand-off: decode + LUT restore   — baton.merge_recv
+    advance on the current partition   — baton.local_advance
+    done  -> result message to client  — baton.deliver_local
+    else  -> encode + hand off to the  — baton.pack_sends
+             owner of the top frontier
+
+Because the per-query math is untouched (``runtime`` drives the engine's
+own primitives), *where* and *when* a baton runs never changes *what* it
+computes — concurrency may reorder completions, never answers.  A hand-off
+whose destination partition lives on the same worker still counts an
+``inter_hops`` (partitions are the paper's servers; worker count is a
+deployment choice) but re-enters the local inbox instead of crossing the
+wire — the co-location short-circuit the simulator also applies.
+
+The same loop body serves both modes: thread workers share jitted shards
+and one compile cache; process workers rebuild their shards from numpy in
+the child (spawn-safe) and pay their own jit, talking over ``mp.Queue``s.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.serve_async import runtime, wire
+
+# message kinds on the result queue
+RESULT = "result"
+
+
+def service_loop(wid: int, shards: dict, codebook, cfg, inbox, inboxes,
+                 part2worker, results) -> None:
+    """Drain the inbox until stopped; see the module docstring for the map
+    from each step to its engine counterpart."""
+    import jax.numpy as jnp
+
+    k = cfg.k
+    while True:
+        got = inbox.get()
+        if got is None:
+            return
+        kind, msg = got
+        if kind == "admit":
+            arrival_id, qid, home, query, starts, start_d, lut = msg
+            st = runtime.seed_state(
+                jnp.asarray(query), jnp.asarray(starts),
+                jnp.asarray(start_d), jnp.asarray(lut),
+                home, qid, cfg.L, cfg.pool,
+            )
+            part = int(home)
+        else:
+            arrival_id, part, payload = msg
+            st = runtime.unpack_from_wire(
+                wire.decode_baton(payload), codebook, cfg
+            )
+        while True:
+            st, done, dest = runtime.advance_state(
+                st, shards[part], part, cfg.W, cfg.max_local_steps
+            )
+            done, dest = bool(done), int(dest)
+            if done or dest != part:
+                break
+            # max_local_steps fired with local work left: next "super-step"
+        if done:
+            results.put((
+                RESULT, arrival_id, int(st.qid),
+                np.asarray(st.pool_ids)[:k].copy(),
+                np.asarray(st.pool_dists)[:k].copy(),
+                np.asarray(st.counters.stacked()).copy(),
+                time.perf_counter(),
+            ))
+        else:
+            payload = wire.encode_baton(runtime.pack_for_wire(st, cfg))
+            inboxes[part2worker[dest]].push_handoff((arrival_id, dest, payload))
+        inbox.release()
+
+
+def start_thread_worker(wid, shards, codebook, cfg, inbox, inboxes,
+                        part2worker, results) -> threading.Thread:
+    t = threading.Thread(
+        target=service_loop, name=f"serve-async-w{wid}", daemon=True,
+        args=(wid, shards, codebook, cfg, inbox, inboxes, part2worker,
+              results),
+    )
+    t.start()
+    return t
+
+
+def process_worker_main(wid, owned, shard_arrays, codebook_np, cfg_dict,
+                        inbox, inboxes, part2worker, results) -> None:
+    """Child-process entry: rebuild jax shards from numpy, then serve.
+
+    ``shard_arrays`` maps owned partition -> the numpy leaves of its
+    ``runtime.partition_shard``; ``cfg_dict`` is the ``BatonParams``
+    field dict (plain scalars, pickles fine).
+    """
+    import os
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax.numpy as jnp
+
+    from repro.core.baton import BatonParams
+    from repro.core.beam_search import Shard
+
+    cfg = BatonParams(**cfg_dict)
+    shards = {}
+    for part in owned:
+        leaves = shard_arrays[part]
+        shards[part] = Shard(**{
+            name: jnp.asarray(a) if a is not None else None
+            for name, a in leaves.items()
+        })
+    codebook = jnp.asarray(codebook_np)
+    service_loop(wid, shards, codebook, cfg, inbox, inboxes, part2worker,
+                 results)

@@ -4,7 +4,10 @@ Documents are embedded into the vector index; a query retrieves the top-k
 nearest documents and their token chunks are prepended to the prompt served
 by the LM tenant.  Retrieval routes through a ``repro.api.Deployment``, so
 the RAG tenant composes with any engine (baton / scatter-gather / exact)
-and any deployment scenario the service layer can express.
+and any deployment scenario the service layer can express — including the
+*executable* retrieval tier: :meth:`RAGSystem.serve_retrieval` runs the
+query stream through real ``repro.serve_async`` workers (answers stay
+bit-identical to :meth:`RAGSystem.retrieve`; only latency becomes real).
 """
 
 from __future__ import annotations
@@ -39,6 +42,24 @@ class RAGSystem:
         """(B, d) query embeddings -> (ids, dists, stats)."""
         res = self.deployment.search(query_embs)
         return res.ids, res.dists, res.stats
+
+    def serve_retrieval(self, query_embs: np.ndarray, workers: int = 2,
+                        mode: str = "thread"):
+        """Concurrent retrieval on the executable async tier.
+
+        Same (ids, dists) as :meth:`retrieve` — the tier's parity guarantee
+        — but served by ``workers`` real partition-owning workers, so the
+        returned :class:`repro.serve_async.ExecRunResult` carries measured
+        per-query wall-clock latency the RAG tenant can budget against the
+        LM's decode step.  Baton engine only.
+        """
+        from repro.serve_async import AsyncServingTier
+
+        dep = self.deployment
+        with AsyncServingTier(
+                dep.index, dep.engine.baton_params(dep.config.search),
+                n_workers=workers, mode=mode) as tier:
+            return tier.search(np.asarray(query_embs, np.float32))
 
     def answer(self, query_embs: np.ndarray, prompt_tokens: np.ndarray,
                max_new: int = 16):

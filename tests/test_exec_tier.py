@@ -1,0 +1,272 @@
+"""Executable async serving tier (repro.serve_async) + PR satellites.
+
+The ISSUE-7 acceptance battery:
+
+* **Parity** — the tier's (ids, dists) and all five ``STAT_FIELDS``
+  counters are bit-identical to ``baton.run_simulated`` (= what
+  ``Engine.search`` runs) at *every* worker count: concurrency may
+  reorder completions, never answers.
+* **Determinism** — one worker, same seed: byte-identical result order
+  across runs.
+* **Conservation** — under overload every offered arrival is exactly one
+  of {completed, rejected}; completed arrivals keep bit-parity.
+* **Wire** — the baton round-trips as real bytes (0-d leaves included)
+  and the measured message size tracks the modeled ``envelope_bytes``
+  within a small fixed header overhead.
+* Satellites: the seeded ``diurnal`` arrival generator, the ``ExecSpec``
+  config section + ``Deployment.run_exec`` facade, and the bench
+  runner's one-line unknown ``--only`` tag error.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import Deployment, EXEC_FIELDS, ExecSpec, ServeConfig
+from repro.api.engine import BatonEngine
+from repro.cluster import diurnal, make_workload
+from repro.core import baton
+from repro.core.state import STAT_FIELDS
+from repro.serve_async import AsyncServingTier, decode_baton, encode_baton
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, ROOT)  # the benchmarks namespace package
+
+
+@pytest.fixture(scope="module")
+def exec_cfg():
+    return baton.BatonParams(L=32, W=4, k=10, pool=128, slots=8)
+
+
+@pytest.fixture(scope="module")
+def engine_result(baton_index, dataset, exec_cfg):
+    return baton.run_simulated(baton_index, dataset.queries, exec_cfg)
+
+
+# ---------------------------------------------------------------------------
+# parity / determinism / conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 4])
+def test_tier_matches_engine_bitwise(baton_index, dataset, exec_cfg,
+                                     engine_result, n_workers):
+    ids_e, dists_e, stats_e = engine_result
+    with AsyncServingTier(baton_index, exec_cfg,
+                          n_workers=n_workers) as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    got = res.stats_dict()
+    for f in STAT_FIELDS:
+        assert np.array_equal(got[f], stats_e[f]), f
+    # every inter_hops increment crossed a queue as one encoded baton
+    assert res.handoffs == int(np.sum(stats_e["inter_hops"]))
+    assert res.handoffs > 0
+
+
+def test_single_worker_order_deterministic(baton_index, dataset, exec_cfg):
+    orders = []
+    for _ in range(2):
+        with AsyncServingTier(baton_index, exec_cfg, n_workers=1) as tier:
+            res = tier.search(dataset.queries)
+        orders.append(np.argsort(res.done_s, kind="stable"))
+    assert np.array_equal(orders[0], orders[1])
+
+
+def test_overload_conservation(baton_index, dataset, exec_cfg,
+                               engine_result):
+    ids_e, dists_e, _ = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=2,
+                          slots=4, queue_cap=2) as tier:
+        wl = make_workload(len(dataset.queries), 100000.0, 200, "poisson",
+                           seed=1)
+        res = tier.serve(dataset.queries, wl)
+    assert res.offered == 200
+    assert res.offered == res.completed + res.rejected
+    assert res.rejected > 0          # the flood must overflow queue_cap=2
+    assert res.completed > 0
+    # rejected rows are sentinel-filled; completed rows keep bit-parity
+    ok = res.accepted
+    assert np.all(res.ids[~ok] == -1)
+    assert np.all(np.isnan(res.latencies_s[~ok]))
+    assert np.array_equal(res.ids[ok], ids_e[res.trace_idx[ok]])
+    assert np.array_equal(res.dists[ok], dists_e[res.trace_idx[ok]])
+
+
+@pytest.mark.slow
+def test_process_mode_matches_engine(baton_index, dataset, exec_cfg,
+                                     engine_result):
+    ids_e, dists_e, _ = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=2,
+                          mode="process") as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+
+def test_wire_round_trip_including_scalars():
+    leaves = {
+        "query": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "qid": np.int32(7),                    # 0-d must stay 0-d
+        "home": np.asarray(3, np.int32),
+        "pool_ids": np.asarray([1, -1, 5], np.int32),
+        "stats": np.asarray([0, 1, 2, 3, 4], np.int64),
+    }
+    out = decode_baton(encode_baton(leaves))
+    assert sorted(out) == sorted(leaves)
+    for name, arr in leaves.items():
+        assert out[name].shape == np.asarray(arr).shape, name
+        assert out[name].dtype == np.asarray(arr).dtype, name
+        assert np.array_equal(out[name], arr), name
+    assert int(out["qid"]) == 7                # scalar conversion works
+
+
+def test_wire_rejects_garbage():
+    with pytest.raises(ValueError):
+        decode_baton(b"nope" + b"\x00" * 16)
+
+
+def test_measured_wire_size_tracks_envelope(baton_index, exec_cfg):
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=1) as tier:
+        delta = tier.wire_bytes_per_handoff - tier.envelope_bytes
+    # self-describing header/name overhead only — small and bounded
+    assert 0 < delta < 512
+
+
+# ---------------------------------------------------------------------------
+# diurnal arrival generator (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_mean_rate_and_determinism():
+    wl = diurnal(32, rate_qps=200.0, n=4000, seed=5)
+    assert wl.kind == "diurnal"
+    assert len(wl.times_s) == 4000
+    assert np.all(np.diff(wl.times_s) >= 0)
+    mean_rate = len(wl.times_s) / wl.times_s[-1]
+    assert 0.8 * 200.0 < mean_rate < 1.25 * 200.0
+    wl2 = diurnal(32, rate_qps=200.0, n=4000, seed=5)
+    assert np.array_equal(wl.times_s, wl2.times_s)
+    assert np.array_equal(wl.trace_idx, wl2.trace_idx)
+
+
+def test_diurnal_rate_envelope_varies():
+    # day_s defaults to n/rate: one full sine period — the busiest
+    # quarter-day must see clearly more arrivals than the quietest
+    wl = diurnal(8, rate_qps=100.0, n=8000, seed=0, peak_ratio=3.0)
+    day = wl.times_s[-1]
+    counts = np.histogram(wl.times_s, bins=4, range=(0, day))[0]
+    assert counts.max() > 1.5 * counts.min()
+
+
+def test_diurnal_is_rate_invariant():
+    # same seed, same n: the schedule at 2x the rate is the same pattern
+    # compressed 2x — what lets sim and exec run "the same day" each at
+    # its own operating point
+    a = diurnal(16, rate_qps=50.0, n=1000, seed=3)
+    b = diurnal(16, rate_qps=100.0, n=1000, seed=3)
+    assert np.allclose(a.times_s, 2.0 * b.times_s)
+    assert np.array_equal(a.trace_idx, b.trace_idx)
+
+
+def test_make_workload_wires_diurnal():
+    wl = make_workload(16, 100.0, 500, "diurnal", seed=2)
+    assert wl.kind == "diurnal"
+    assert len(wl.times_s) == 500
+    with pytest.raises(ValueError, match="diurnal"):
+        make_workload(16, 100.0, 500, "lunar")
+    with pytest.raises(ValueError):
+        diurnal(16, rate_qps=0.0, n=10)
+    with pytest.raises(ValueError):
+        diurnal(16, rate_qps=10.0, n=10, peak_ratio=0.5)
+
+
+# ---------------------------------------------------------------------------
+# ExecSpec config section + Deployment.run_exec (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_exec_spec_validation():
+    ExecSpec()                                # defaults are valid
+    with pytest.raises(ValueError, match="mode"):
+        ExecSpec(mode="fiber")
+    with pytest.raises(ValueError, match="arrival"):
+        ExecSpec(arrival="lunar")
+    with pytest.raises(ValueError, match="workers"):
+        ExecSpec(workers=-1)
+    with pytest.raises(ValueError, match="queue_cap"):
+        ExecSpec(queue_cap=0)
+    with pytest.raises(ValueError, match="time_scale"):
+        ExecSpec(time_scale=0.0)
+
+
+def test_serve_config_exec_cross_checks():
+    cfg = ServeConfig.from_dict({"exec": {"workers": 2}})
+    assert cfg.exec.workers == 2
+    rt = ServeConfig.from_json(cfg.to_json())
+    assert rt.exec == cfg.exec
+    with pytest.raises(ValueError, match="workers"):
+        ServeConfig.from_dict({"index": {"p": 4}, "exec": {"workers": 8}})
+    with pytest.raises(ValueError, match="baton"):
+        ServeConfig.from_dict({"index": {"engine": "exact"},
+                               "exec": {"workers": 1}})
+
+
+def test_run_exec_schema_and_parity(baton_index, dataset):
+    cfg = ServeConfig.from_dict({
+        "name": "exec-test",
+        "search": {"L": 32, "W": 4, "slots": 8},
+        "exec": {"workers": 2},
+    })
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset)
+    out = dep.run_exec(dataset.queries)
+    assert tuple(out) == EXEC_FIELDS
+    assert out["parity"] is True
+    assert out["completed"] == out["offered"] == len(dataset.queries)
+    assert out["rejected"] == 0
+    assert out["handoffs"] > 0
+    assert out["envelope_bytes"] < out["wire_bytes_per_handoff"]
+
+
+def test_run_exec_refuses_disabled_tier(baton_index, dataset):
+    dep = Deployment.from_parts(ServeConfig.from_dict({}),
+                                BatonEngine(index=baton_index), dataset)
+    with pytest.raises(ValueError, match="exec.workers"):
+        dep.run_exec(dataset.queries)
+
+
+# ---------------------------------------------------------------------------
+# bench runner --only validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_run_only_unknown_tag_one_line_error(monkeypatch, capsys):
+    from benchmarks.run import main
+
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "fig3,nosuchtag"])
+    with pytest.raises(SystemExit) as exc:
+        main()
+    msg = str(exc.value.code)
+    assert "unknown suite tag" in msg
+    assert "nosuchtag" in msg
+    assert "fig3" in msg            # the valid-tag list names real tags
+    assert "\n" not in msg          # one line, no traceback
+
+
+def test_fig20_suite_registered():
+    from benchmarks import figures
+    from benchmarks.run import SUITES
+
+    tags = dict(SUITES)
+    assert tags["fig20execsim"] == "figures.fig20_exec_vs_sim"
+    assert callable(figures.fig20_exec_vs_sim)
