@@ -56,7 +56,7 @@ def kernel_rows():
     rows.append(("kernel_topk", t_k * 1e6, f"ref_us={t_r*1e6:.0f};c=1024"))
 
     from repro.core.pq import adc_slots
-    from repro.kernels.pq_adc.ops import pq_adc_slots
+    from repro.kernels.pq_adc.ops import pq_adc_slots, pq_adc_slots_tiled
 
     luts = jnp.asarray(rng.normal(size=(16, 24, 256)).astype(np.float32))
     scodes = jnp.asarray(rng.integers(0, 256, size=(16, 256, 24)).astype(np.uint8))
@@ -64,7 +64,71 @@ def kernel_rows():
     t_m = _time(pq_adc_slots, luts, scodes.astype(jnp.int32))
     rows.append(("kernel_adc_slots", t_g * 1e6,
                  f"mxu_us={t_m*1e6:.0f};s=16;c=256"))
+
+    # slot-tiled variant: grid over (slot, tile, subspace) scores only each
+    # slot's own candidate block — the dense one-hot route's S× FLOP
+    # overcommit eliminated, and (unlike the dense route) bit-identical to
+    # the gather, so the exec tier can run it under the parity guarantee
+    s_, c_, m_, k_ = 16, 256, 24, 256
+    t_t = _time(pq_adc_slots_tiled, luts, scodes.astype(jnp.int32))
+    tiled_flops = 2 * s_ * c_ * k_ * m_
+    dense_flops = 2 * s_ * (s_ * c_) * k_ * m_
+    bitmatch = bool(jnp.array_equal(
+        adc_slots(luts, scodes),
+        pq_adc_slots_tiled(luts, scodes.astype(jnp.int32))))
+    rows.append((
+        "kernel_adc_slots_tiled", t_t * 1e6,
+        f"gather_us={t_g*1e6:.0f};dense_us={t_m*1e6:.0f};"
+        f"tiled_mxu_flops={tiled_flops};dense_mxu_flops={dense_flops};"
+        f"flop_overcommit_x={dense_flops // tiled_flops};"
+        f"bitmatch_gather={bitmatch};s={s_};c={c_}"))
+    assert bitmatch, "tiled ADC diverged from the gather"
     return rows
+
+
+def advance_batch_rows():
+    """Micro-batched advance: B independent states through ONE jit dispatch
+    (``runtime.advance_batch``) vs B sequential ``advance_state`` calls.
+
+    The dispatch counts are structural constants (1 vs B by construction) —
+    tracked cross-PR by trajectory_check so the batching win can't silently
+    regress to per-baton dispatch; us_per_call is the machine-local timing
+    context."""
+    from benchmarks import common
+    from repro.core import baton, pq
+    from repro.serve_async import runtime
+
+    B = 8
+    ds, idx = common.baton_index(min(2, common.BENCH_P))
+    cfg = baton.BatonParams(L=32, W=4, k=10, pool=128, slots=8)
+    queries = np.asarray(ds.queries[:B], np.float32)
+    starts, start_d = idx.head_starts(queries, cfg.n_starts)
+    codebook = jnp.asarray(idx.codebook)
+    luts = pq.build_lut(codebook, jnp.asarray(queries))
+    states = [
+        runtime.seed_state(jnp.asarray(queries[i]), jnp.asarray(starts[i]),
+                           jnp.asarray(start_d[i]), luts[i], 0, i,
+                           cfg.L, cfg.pool)
+        for i in range(B)
+    ]
+    shard = runtime.partition_shard(idx, 0)
+    stacked = runtime.stack_states(states)
+
+    def batched(sts):
+        return runtime.advance_batch(
+            sts, shard, 0, cfg.W, cfg.max_local_steps)[0]
+
+    def sequential(_):
+        return [runtime.advance_state(st, shard, 0, cfg.W,
+                                      cfg.max_local_steps)[0]
+                for st in states]
+
+    t_b = _time(batched, stacked)
+    t_s = _time(sequential, None)
+    return [(
+        "kernel_advance_batch", t_b * 1e6,
+        f"sequential_us={t_s*1e6:.0f};batch_dispatches=1;"
+        f"scalar_dispatches={B};b={B}")]
 
 
 def superstep_rows():

@@ -45,9 +45,11 @@ SUITES = (
     ("fig18elastic", "figures.fig18_elastic"),
     ("fig19fault", "figures.fig19_fault_recovery"),
     ("fig20execsim", "figures.fig20_exec_vs_sim"),
+    ("fig21batch", "figures.fig21_batch_sweep"),
     ("sec8", "figures.sec8_ship_vs_recompute"),
     ("kernels", "bench_kernels.kernel_rows"),
     ("superstep", "bench_kernels.superstep_rows"),
+    ("advbatch", "bench_kernels.advance_batch_rows"),
 )
 
 

@@ -20,6 +20,15 @@ is self-describing — the ratio must sit inside its own band in the
 *current* run alone, no previous artifact needed.  Drift of the ratio
 across runs is reported but never fails (the exec side is wall-clock
 measured, so run-to-run wobble inside the band is expected).
+
+Structural work counters: ``...flops...=`` and ``...dispatch...=`` keys
+are *lower*-better and deterministic — the kernel rows state them as
+constants of the implementation (FLOPs per call, jit dispatches per
+micro-batch), not as timings, so a PR that silently reintroduces the
+dense one-hot ADC's SxFLOP overcommit or per-baton dispatch fails the
+trajectory even though wall-clock on the CI machine is noise.  Counters
+that *are* timing-dependent (e.g. the exec tier's measured ``jit_calls``,
+which vary with scheduling) use key names outside these patterns.
 """
 
 from __future__ import annotations
@@ -40,6 +49,10 @@ _IGNORE = ("wall", "rate_qps")  # machine-dependent / input knobs
 _RECOVERY_RE = re.compile(
     r"([A-Za-z0-9_.@/]*recovery_frac)=([-+0-9.eE]+)")
 _LOST_RE = re.compile(r"([A-Za-z0-9_.@/]*lost[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
+# structural work counters (see module docstring): deterministic FLOP and
+# jit-dispatch counts, lower-better
+_WORK_RE = re.compile(
+    r"([A-Za-z0-9_.@/]*(?:flops|dispatch)[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
 
 
 def _scan(bench: dict, regex, keep_zero: bool = False) -> dict:
@@ -66,6 +79,10 @@ def extract_qps(bench: dict) -> dict:
 
 def extract_lost(bench: dict) -> dict:
     return _scan(bench, _LOST_RE, keep_zero=True)
+
+
+def extract_work(bench: dict) -> dict:
+    return _scan(bench, _WORK_RE)
 
 
 def _kv(derived) -> dict:
@@ -114,10 +131,13 @@ def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
         print(f"{key}: dropped (was {p[key]:.1f})")
     for key in sorted(c.keys() - p.keys()):
         print(f"{key}: new ({c[key]:.1f})")
-    pl, cl = extract_lost(prev), extract_lost(cur)
+    # lower-better pools: loss counts (zero is the good value — kept) and
+    # structural work counters (FLOPs / dispatches, stated as constants)
+    pl = {**extract_lost(prev), **extract_work(prev)}
+    cl = {**extract_lost(cur), **extract_work(cur)}
     for key in sorted(pl.keys() & cl.keys()):
-        # lower-better: worse iff losses grew beyond the threshold; any
-        # loss where there was none before is always a regression
+        # worse iff the count grew beyond the threshold; any loss where
+        # there was none before is always a regression
         worse = cl[key] > pl[key] * (1.0 + threshold) + 1e-9
         flag = "  << REGRESSION" if worse else ""
         if worse:

@@ -51,7 +51,8 @@ EXEC_FIELDS = (
     "workers", "mode", "rate_qps", "arrival", "offered", "completed",
     "rejected", "handoffs", "mean_s", "p50_s", "p95_s", "p99_s",
     "throughput_qps", "makespan_s", "wire_bytes_per_handoff",
-    "envelope_bytes", "parity",
+    "envelope_bytes", "parity", "batch", "advance_calls", "local_handoffs",
+    "wire_frames", "wire_batons", "wire_bytes",
 )
 
 # ``Report.to_row`` field formatters: row key -> (getter, format spec).
@@ -431,7 +432,7 @@ class Deployment:
             self.index, self.engine.baton_params(self.config.search),
             n_workers=ex.workers, mode=ex.mode,
             slots=ex.slots or None, admit_headroom=ex.admit_headroom,
-            queue_cap=ex.queue_cap)
+            queue_cap=ex.queue_cap, batch=ex.batch)
         try:
             if ex.send_rate > 0:
                 wl = cluster.make_workload(
@@ -459,6 +460,12 @@ class Deployment:
             "wire_bytes_per_handoff": res.wire_bytes_per_handoff,
             "envelope_bytes": res.envelope_bytes,
             "parity": parity,
+            "batch": res.batch,
+            "advance_calls": res.advance_calls,
+            "local_handoffs": res.local_handoffs,
+            "wire_frames": res.wire_frames,
+            "wire_batons": res.wire_batons,
+            "wire_bytes": res.wire_bytes,
         }
 
     # --- index persistence (checkpoint/ckpt.py) ----------------------------

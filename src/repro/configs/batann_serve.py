@@ -78,7 +78,7 @@ class SearchParams:
     lut_wire_dtype: str = "f32"   # f32 | f16 | i8 (§8 wire-LUT variants)
     lazy_queue_lut: bool = False
     fused: bool = True
-    adc_impl: str = "gather"      # gather | mxu
+    adc_impl: str = "gather"      # gather | mxu | mxu_tiled
     merge_impl: str = "lexsort"   # lexsort | bitonic
 
 
@@ -175,6 +175,10 @@ class ExecSpec:
     queue (``queue_cap``) is full.  ``slots``/``admit_headroom`` mirror
     the simulator's ``SlotStage`` (slots defaults to ``search.slots``);
     ``time_scale`` stretches the schedule's wall-clock (2.0 = half rate).
+    ``batch`` is the per-worker micro-batch: each loop iteration drains up
+    to that many batons (hand-offs still strict-priority) and advances them
+    in ONE jit dispatch (``runtime.advance_batch``) — answers stay
+    bit-identical at any (workers × batch) because states are independent.
     """
 
     workers: int = 0
@@ -185,12 +189,15 @@ class ExecSpec:
     slots: int = 0               # 0 = inherit search.slots
     admit_headroom: int = 2
     queue_cap: int = 64
+    batch: int = 1               # batons advanced per worker loop iteration
     time_scale: float = 1.0
     seed: int = 0
 
     def __post_init__(self):
         if self.workers < 0:
             raise ValueError(f"workers must be >= 0: {self.workers}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1: {self.batch}")
         if self.mode not in ("thread", "process"):
             raise ValueError(f"mode must be thread|process: {self.mode}")
         if self.send_rate < 0:

@@ -89,7 +89,9 @@ class BatonParams:
     # --- hot-path implementation knobs (all default to the fused path) ----
     fused: bool = True       # slot-batched scoring + single-pass merges;
     #                          False = per-slot seed path (equivalence ref)
-    adc_impl: str = "gather"  # "gather" (CPU fallback) | "mxu" (Pallas)
+    adc_impl: str = "gather"  # "gather" (CPU fallback) | "mxu" (dense
+    #                          Pallas one-hot, ulp-level diffs) | "mxu_tiled"
+    #                          (slot-tiled Pallas, bit-identical to gather)
     merge_impl: str = "lexsort"  # "lexsort" | "bitonic" (Pallas top-k)
     ship_lut: bool = False   # §8: ship the LUT in the envelope (True) vs
     #                          rebuild on arrival (False — the paper's
@@ -109,8 +111,9 @@ class BatonParams:
     #                          folds into the last segment
 
     def __post_init__(self):
-        if self.adc_impl not in ("gather", "mxu"):
-            raise ValueError(f"adc_impl must be gather|mxu: {self.adc_impl}")
+        if self.adc_impl not in ("gather", "mxu", "mxu_tiled"):
+            raise ValueError(
+                f"adc_impl must be gather|mxu|mxu_tiled: {self.adc_impl}")
         if self.merge_impl not in ("lexsort", "bitonic"):
             raise ValueError(
                 f"merge_impl must be lexsort|bitonic: {self.merge_impl}"

@@ -412,8 +412,11 @@ def step_disk_batched(
     states in single fused ops.
 
     Candidate PQ scoring is one (S, W·R) call — ``pq.adc_slots`` (gather, the
-    CPU fallback, bit-identical to the per-slot path) or the Pallas MXU
-    one-hot kernel (``adc_impl="mxu"``) — instead of S vmapped gathers, and
+    CPU fallback, bit-identical to the per-slot path), the dense Pallas MXU
+    one-hot kernel (``adc_impl="mxu"``, ulp-level differences), or the
+    slot-tiled Pallas grid (``adc_impl="mxu_tiled"``, bit-identical to the
+    gather without the dense route's S× FLOP overcommit) — instead of S
+    vmapped gathers, and
     both merges run once over all rows.  Per-slot semantics, counters and
     returned values match vmapping ``step_disk`` exactly (equivalence-tested).
     """
@@ -451,6 +454,11 @@ def step_disk_batched(
         from repro.kernels.pq_adc.ops import pq_adc_slots
 
         cd_flat = pq_adc_slots(luts, cand_codes.astype(jnp.int32))
+    elif adc_impl == "mxu_tiled":
+        # slot-tiled Pallas grid: (S, C) work, bit-identical to the gather
+        from repro.kernels.pq_adc.ops import pq_adc_slots_tiled
+
+        cd_flat = pq_adc_slots_tiled(luts, cand_codes.astype(jnp.int32))
     else:
         cd_flat = pq.adc_slots(luts, cand_codes)                 # (S, W*R)
 

@@ -14,6 +14,20 @@ beam bookkeeping; the code tile is amortized across all TQ queries.
 
 Grid: (N tiles, Q tiles, M subspaces); M is the innermost (sequential) axis
 and the output block revisits across it (accumulation pattern).
+
+The slot-batched engine path (``step_disk_batched``) wants something
+narrower: slot s's LUT scored against slot s's OWN candidate block only.
+Routing that through the dense kernel (``ops.pq_adc_slots``) scores every
+(slot, candidate) pair and keeps the block diagonal — an S× FLOP
+overcommit.  ``pq_adc_slots_pallas`` instead puts the slot axis on the
+grid: each grid step is one (slot, candidate-tile, subspace) block, a
+(TC, K) @ (K, 1) one-hot matvec, writing per-subspace partials that the
+caller reduces with the same ``jnp.sum`` the gather uses.  One-hot
+products are exact (a single 1.0 per row selects one LUT entry; adding
+hard zeros never rounds), so the partials are bit-equal to gathered
+values and the whole path is bit-identical to ``pq.adc_slots`` — unlike
+the dense route, whose in-kernel accumulation order differs from the
+gather's axis reduce by ulps.
 """
 
 from __future__ import annotations
@@ -27,6 +41,7 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TN = 256   # code rows per tile
 DEFAULT_TQ = 128   # queries per tile
+DEFAULT_TC = 256   # candidates per slot tile (slot-tiled variant)
 
 
 def _adc_kernel(codes_ref, lut_ref, out_ref, *, k: int):
@@ -69,3 +84,44 @@ def pq_adc_pallas(
         interpret=interpret,
     )(codes, lut)
     return out.T
+
+
+def _adc_slots_kernel(codes_ref, lut_ref, out_ref, *, k: int):
+    c = codes_ref[0, :, 0].astype(jnp.int32)                   # (TC,)
+    lutm = lut_ref[0, 0, :]                                    # (K,)
+    onehot = (
+        c[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c.shape[0], k), 1)
+    ).astype(jnp.float32)                                      # (TC, K)
+    part = jnp.dot(onehot, lutm[:, None],
+                   preferred_element_type=jnp.float32)         # (TC, 1)
+    out_ref[0, 0, :] = part[:, 0]
+
+
+def pq_adc_slots_pallas(
+    luts: jnp.ndarray,       # (S, M, K) float32 — one LUT per slot
+    codes: jnp.ndarray,      # (S, C, M) int32 — each slot's own candidates
+    tc: int = DEFAULT_TC,
+    interpret: bool = False,
+) -> jnp.ndarray:            # (S, M, C) float32 per-subspace partials
+    """Slot-tiled ADC: grid over (slot, candidate tile, subspace).
+
+    Each grid step scores one slot's candidate tile against that slot's own
+    LUT — (S, C) work total, no cross-slot blocks.  Returns the per-subspace
+    partials; the caller owns the M-reduction (``jnp.sum(parts, axis=1)``)
+    so the reduce order — and hence the bits — match ``pq.adc_slots``.
+    """
+    s, c, m = codes.shape
+    k = luts.shape[-1]
+    assert luts.shape == (s, m, k), (luts.shape, codes.shape)
+    assert c % tc == 0, (c, tc)
+    return pl.pallas_call(
+        functools.partial(_adc_slots_kernel, k=k),
+        grid=(s, c // tc, m),
+        in_specs=[
+            pl.BlockSpec((1, tc, 1), lambda si, ci, mm: (si, ci, mm)),
+            pl.BlockSpec((1, 1, k), lambda si, ci, mm: (si, mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tc), lambda si, ci, mm: (si, mm, ci)),
+        out_shape=jax.ShapeDtypeStruct((s, m, c), jnp.float32),
+        interpret=interpret,
+    )(codes, luts)

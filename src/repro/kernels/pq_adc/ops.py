@@ -7,7 +7,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pq_adc.kernel import DEFAULT_TN, DEFAULT_TQ, pq_adc_pallas
+from repro.kernels.pq_adc.kernel import (
+    DEFAULT_TC, DEFAULT_TN, DEFAULT_TQ, pq_adc_pallas, pq_adc_slots_pallas,
+)
 from repro.kernels.pq_adc.ref import pq_adc_ref
 
 
@@ -65,4 +67,30 @@ def pq_adc_slots(
     return jnp.take_along_axis(full, idx, axis=1)
 
 
-__all__ = ["pq_adc", "pq_adc_ref", "pq_adc_slots"]
+@partial(jax.jit, static_argnames=("tc", "interpret"))
+def pq_adc_slots_tiled(
+    luts: jnp.ndarray,
+    codes: jnp.ndarray,
+    tc: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(S, M, K) x (S, C, M) -> (S, C): slot-tiled, no cross-slot FLOPs.
+
+    ``adc_impl="mxu_tiled"``: the grid walks (slot, candidate tile,
+    subspace), so the MXU scores only each slot's own candidate block —
+    2·S·C·K·M FLOPs against the dense route's 2·S·(S·C)·K·M.  The kernel
+    emits per-subspace partials (exact, see kernel.py) and this wrapper
+    reduces them with the gather's own ``jnp.sum`` — bit-identical to
+    ``repro.core.pq.adc_slots`` (tested), which is what lets the exec tier
+    run it under the engine's bit-parity guarantee.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    s, c, m = codes.shape
+    tc = tc or min(DEFAULT_TC, max(8, c))
+    codes_p = _pad_to(codes.astype(jnp.int32), 1, tc)
+    parts = pq_adc_slots_pallas(luts, codes_p, tc=tc, interpret=interpret)
+    return jnp.sum(parts[:, :, :c], axis=1)
+
+
+__all__ = ["pq_adc", "pq_adc_ref", "pq_adc_slots", "pq_adc_slots_tiled"]

@@ -133,6 +133,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--exec-arrivals", type=int, default=None,
                     help="arrivals to inject at --exec-rate (schedule "
                          "shape comes from --arrival)")
+    ap.add_argument("--exec-batch", type=int, default=None,
+                    help="per-worker micro-batch: batons advanced per "
+                         "loop iteration in one jit dispatch (answers "
+                         "stay bit-identical at any batch; 1 = the "
+                         "one-at-a-time loop)")
     return ap
 
 
@@ -169,7 +174,7 @@ def config_from_args(args):
         exec={
             "workers": args.exec_workers, "mode": args.exec_mode,
             "send_rate": args.exec_rate, "arrival": args.arrival,
-            "n_arrivals": args.exec_arrivals,
+            "n_arrivals": args.exec_arrivals, "batch": args.exec_batch,
         },
     )
 
@@ -235,14 +240,18 @@ def main():
         mode = "closed-loop" if e["rate_qps"] == 0 else (
             f"@{e['rate_qps']:.0f} qps {e['arrival']}")
         rej = f", {e['rejected']} rejected" if e["rejected"] else ""
-        print(f"  executed ({e['workers']} {e['mode']} workers, {mode}, "
+        print(f"  executed ({e['workers']} {e['mode']} workers x "
+              f"batch {e['batch']}, {mode}, "
               f"{e['completed']}/{e['offered']} completed{rej}): "
               f"mean={e['mean_s']*1e3:.2f}ms p50={e['p50_s']*1e3:.2f}ms "
               f"p99={e['p99_s']*1e3:.2f}ms "
-              f"throughput={e['throughput_qps']:.0f} qps")
+              f"throughput={e['throughput_qps']:.0f} qps "
+              f"({e['advance_calls']} dispatches)")
         print(f"  exec wire: {e['handoffs']} hand-offs x "
               f"{e['wire_bytes_per_handoff']}B measured "
-              f"(model prices {e['envelope_bytes']}B) "
+              f"(model prices {e['envelope_bytes']}B), "
+              f"{e['wire_batons']} batons in {e['wire_frames']} frames + "
+              f"{e['local_handoffs']} same-worker short-circuits, "
               f"parity={'OK' if e['parity'] else 'MISMATCH'}")
 
 

@@ -5,7 +5,11 @@ package runs it: partition-owning workers (threads or processes), batons as
 real serialized messages through bounded two-class queues with ``SlotStage``
 admission semantics, an open-loop client driven by the same
 ``cluster.workload`` schedules the simulator replays — and answers pinned
-bit-identical to ``Engine.search`` at any worker count.
+bit-identical to ``Engine.search`` at any (worker count × micro-batch).
+Per-worker micro-batching (``batch``) drains several batons per loop
+iteration, advances them in one jit dispatch (one slot-batched ADC for the
+whole group), and coalesces same-destination hand-offs into one wire
+frame — the raw-speed lever of ROADMAP item 5.
 
 Layers (each file's docstring carries the detail):
 
@@ -24,4 +28,6 @@ predicted-vs-measured validation: ``benchmarks/figures.py::fig20_exec_vs_sim``.
 from repro.serve_async.tier import (    # noqa: F401
     AsyncServingTier, ExecRunResult,
 )
-from repro.serve_async.wire import decode_baton, encode_baton  # noqa: F401
+from repro.serve_async.wire import (    # noqa: F401
+    decode_baton, decode_frame, encode_baton, encode_frame,
+)

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core import pq
 from repro.core.beam_search import (
-    Shard, seed_beam_fused, select_frontier, step_disk,
+    Shard, seed_beam_fused, select_frontier, step_disk, step_disk_batched,
 )
 from repro.core.state import INF, NO_ID, STAT_FIELDS, Counters, QueryState
 
@@ -122,6 +122,83 @@ def advance_state(st: QueryState, shard: Shard, my_part, w: int,
     _, _, _, _, dest = ownership(st)
     want_move = st.active & ~st.done & (dest != my_part)
     return st, st.done, jnp.where(want_move, dest, my_part)
+
+
+def stack_states(sts: "list[QueryState]") -> QueryState:
+    """Stack independent states leaf-wise onto a leading (B,) axis."""
+    return jax.tree.map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]), *sts)
+
+
+def unstack_states(batch: QueryState, n: int) -> "list[QueryState]":
+    """Split a stacked batch back into per-query states (one host sync)."""
+    host = jax.device_get(batch)
+    return [jax.tree.map(lambda x: x[i], host) for i in range(n)]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("w", "max_steps", "adc_impl", "merge_impl"))
+def advance_batch(sts: QueryState, shard: Shard, my_part, w: int,
+                  max_steps: int, adc_impl: str = "gather",
+                  merge_impl: str = "lexsort"):
+    """:func:`advance_state` over a stacked micro-batch of B independent
+    states — one jit dispatch, one slot-batched ADC per step for the whole
+    batch (``step_disk_batched``, the engine's own fused super-step body,
+    equivalence-pinned against the per-slot path).
+
+    Per-state trajectories are identical to running :func:`advance_state`
+    sequentially (tested bitwise): a state that blocks or finishes is
+    masked out (row-select, never partial writes) while the rest keep
+    stepping, and "blocked" is stable — an unstepped state's beam cannot
+    change, so sharing the loop counter with busier neighbours never gives
+    a state more or fewer steps than it would take alone (each runs
+    ``min(own steps to blocked-or-done, max_steps)`` either way).
+
+    Returns ``(states, done, dest)`` with leading (B,) axes; per row,
+    ``dest == my_part`` means resident (done, or the cap fired with local
+    work left — the caller re-batches and re-invokes).
+    """
+
+    def ownership(ss):
+        fposs, fids, fvalid = jax.vmap(
+            lambda s: select_frontier(s.beam_ids, s.beam_expl, w))(ss)
+        owner = shard.node2part[
+            jnp.clip(fids, 0, shard.node2part.shape[0] - 1)]
+        local = fvalid & (owner == my_part)                     # (B, W)
+        dest = jnp.where(fvalid[:, 0], owner[:, 0], my_part)    # (B,)
+        return (fposs, local, jnp.any(local, axis=1),
+                jnp.any(fvalid, axis=1), dest)
+
+    def row_select(pred, a, b):
+        return jax.tree.map(
+            lambda x, y: jnp.where(
+                pred.reshape((-1,) + (1,) * (x.ndim - 1)), x, y), a, b)
+
+    def cond(c):
+        _, it, progressed = c
+        return progressed & (it < max_steps)
+
+    def body(c):
+        ss, it, _ = c
+        fposs, local, any_local, any_frontier, _ = ownership(ss)
+        runnable = ss.active & ~ss.done & any_frontier & any_local  # (B,)
+        new = step_disk_batched(
+            ss, shard, ss.lut, local & runnable[:, None], fposs,
+            adc_impl=adc_impl, merge_impl=merge_impl)
+        v = jax.vmap(lambda s: jnp.any(
+            select_frontier(s.beam_ids, s.beam_expl, 1)[2]))(new)
+        new = new._replace(done=new.done | ~v)
+        ss = row_select(runnable, new, ss)
+        return ss, it + 1, jnp.any(runnable)
+
+    sts, _, _ = jax.lax.while_loop(
+        cond, body, (sts, jnp.int32(0), jnp.asarray(True)))
+    v = jax.vmap(lambda s: jnp.any(
+        select_frontier(s.beam_ids, s.beam_expl, 1)[2]))(sts)
+    sts = sts._replace(done=sts.done | (sts.active & ~v))
+    _, _, _, _, dest = ownership(sts)
+    want_move = sts.active & ~sts.done & (dest != my_part)
+    return sts, sts.done, jnp.where(want_move, dest, my_part)
 
 
 @jax.jit

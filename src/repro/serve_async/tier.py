@@ -13,9 +13,12 @@ Guarantees (tested):
 
 * **Answer parity** — ``search(queries)`` returns (ids, dists) and the
   five ``STAT_FIELDS`` counters bit-identical to ``baton.run_simulated``
-  (= ``Engine.search``) at *any* worker count: partitioning is by
-  partition, not worker, so folding partitions onto fewer workers changes
-  only where batons queue, never what they compute.
+  (= ``Engine.search``) at *any* (worker count × micro-batch):
+  partitioning is by partition, not worker, so folding partitions onto
+  fewer workers changes only where batons queue, and the ``batch``-sized
+  drain (``runtime.advance_batch``) advances independent states with
+  row-masked selects, so batching changes only how many states share a
+  jit dispatch — never what any of them computes.
 * **Conservation** — every offered arrival ends as exactly one of
   {completed, rejected}; hand-offs are never dropped.
 * **Determinism** — one worker processes admissions in arrival order and
@@ -61,6 +64,12 @@ class ExecRunResult:
     rate_qps: float           # requested open-loop rate (0 = closed loop)
     wire_bytes_per_handoff: int   # measured encoded baton size
     envelope_bytes: int           # the model's priced size (same leaves)
+    batch: int = 1            # per-worker micro-batch the tier ran with
+    advance_calls: int = 0    # jit dispatches issued by all workers
+    local_handoffs: int = 0   # same-worker hops (short-circuit, no codec)
+    wire_frames: int = 0      # serialized messages (coalesced hand-offs)
+    wire_batons: int = 0      # batons inside those messages
+    wire_bytes: int = 0       # total frame bytes incl. per-record framing
 
     @property
     def admitted(self) -> int:
@@ -72,7 +81,9 @@ class ExecRunResult:
 
     @property
     def handoffs(self) -> int:
-        # every inter_hops increment was one encoded baton on a queue
+        # every inter_hops increment crossed a queue exactly once — as a
+        # baton inside a serialized frame (wire_batons) or as a same-worker
+        # in-memory short-circuit (local_handoffs)
         return int(self.stats[:, INTER_HOPS_COL].sum())
 
     def _done(self) -> np.ndarray:
@@ -106,16 +117,20 @@ class AsyncServingTier:
 
     def __init__(self, index, params, n_workers: int, mode: str = "thread",
                  slots: "int | None" = None, admit_headroom: int = 2,
-                 queue_cap: int = 64, sector_codes: "bool | None" = None):
+                 queue_cap: int = 64, batch: int = 1,
+                 sector_codes: "bool | None" = None):
         if mode not in ("thread", "process"):
             raise ValueError(f"mode must be thread|process: {mode}")
         if not 1 <= n_workers <= index.p:
             raise ValueError(
                 f"n_workers must be in [1, p={index.p}]: {n_workers}")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1: {batch}")
         if sector_codes is None:
             sector_codes = index.part_nbr_codes is not None
         self.index, self.cfg = index, params
         self.p, self.n_workers, self.mode = index.p, n_workers, mode
+        self.batch = batch
         slots = slots if slots is not None else params.slots
         # partitions fold onto workers exactly as Placement.fold folds them
         # onto fewer servers
@@ -149,11 +164,12 @@ class AsyncServingTier:
             ]
             shards = {pp: runtime.partition_shard(index, pp, sector_codes)
                       for pp in range(self.p)}
+            self._shards = shards
             self._workers = [
                 worker_mod.start_thread_worker(
                     w, {pp: shards[pp] for pp in owned[w]}, self._codebook,
                     params, self._inboxes[w], self._inboxes,
-                    self.part2worker, self._results)
+                    self.part2worker, self._results, batch)
                 for w in range(n_workers)
             ]
         else:
@@ -173,7 +189,8 @@ class AsyncServingTier:
                     target=worker_mod.process_worker_main, daemon=True,
                     args=(w, owned[w], arrays, index.codebook,
                           dataclasses.asdict(params), self._inboxes[w],
-                          self._inboxes, self.part2worker, self._results),
+                          self._inboxes, self.part2worker, self._results,
+                          batch),
                 )
                 proc.start()
                 self._workers.append(proc)
@@ -194,6 +211,47 @@ class AsyncServingTier:
             codes=ix.codes, node2part=ix.node2part,
             node2local=ix.node2local, nbr_codes=None,
         )
+
+    def warmup(self) -> None:
+        """Compile every advance variant this tier can dispatch, off the
+        clock.
+
+        jax caches one executable per (batch shape x partition-shard
+        shape) pair; workers round micro-batch groups down to powers of
+        two, so one dummy advance per (partition, pow2 size <= batch) —
+        plus the scalar path — covers every shape a run can hit.  The
+        dummy states carry invalid starts, so each warm advance traces and
+        compiles the full body but exits its while_loop after one masked
+        iteration.  Thread workers share this thread's compile cache; in
+        process mode workers own their caches, so this is a no-op there
+        and a throwaway first run warms them instead.
+        """
+        if self.mode != "thread":
+            return
+        import jax
+        import jax.numpy as jnp
+
+        cfg = self.cfg
+        pq_m, pq_k = self.index.codebook.shape[:2]
+        dummy = runtime.seed_state(
+            jnp.zeros((self.index.dim,), jnp.float32),
+            jnp.full((cfg.n_starts,), -1, jnp.int32),
+            jnp.full((cfg.n_starts,), jnp.inf, jnp.float32),
+            jnp.zeros((pq_m, pq_k), jnp.float32), 0, 0,
+            cfg.L, cfg.pool,
+        )
+        for pp in range(self.p):
+            shard = self._shards[pp]
+            jax.block_until_ready(runtime.advance_state(
+                dummy, shard, pp, cfg.W, cfg.max_local_steps)[0].beam_ids)
+            size = 2
+            while size <= self.batch:
+                sts = runtime.stack_states([dummy] * size)
+                jax.block_until_ready(runtime.advance_batch(
+                    sts, shard, pp, cfg.W, cfg.max_local_steps,
+                    adc_impl=cfg.adc_impl,
+                    merge_impl=cfg.merge_impl)[0].beam_ids)
+                size *= 2
 
     # ------------------------------------------------------------- client --
     def run(self, queries: np.ndarray, times_s=None, trace_idx=None,
@@ -228,6 +286,11 @@ class AsyncServingTier:
         accepted = np.zeros(n, bool)
         n_done = [0]
         stop = threading.Event()
+
+        # hand-off/dispatch accounting: counters persist across runs on the
+        # same tier, so diff a snapshot (all hand-offs have landed once the
+        # drain below completes — nothing is in flight at the diff)
+        counters0 = [ib.counter_snapshot() for ib in self._inboxes]
 
         t0 = time.perf_counter()
 
@@ -282,6 +345,11 @@ class AsyncServingTier:
 
         makespan = float(np.nanmax(done_s)) if target_done else 0.0
         latencies = done_s - arrive
+        totals = {name: 0 for name in queues.COUNTER_NAMES}
+        for before, ib in zip(counters0, self._inboxes):
+            after = ib.counter_snapshot()
+            for name in totals:
+                totals[name] += after[name] - before[name]
         return ExecRunResult(
             ids=ids, dists=dists, stats=stats, latencies_s=latencies,
             arrive_s=arrive, done_s=done_s, trace_idx=trace_idx,
@@ -289,6 +357,12 @@ class AsyncServingTier:
             makespan_s=makespan, rate_qps=rate_qps,
             wire_bytes_per_handoff=self.wire_bytes_per_handoff,
             envelope_bytes=self.envelope_bytes,
+            batch=self.batch,
+            advance_calls=totals["advance_calls"],
+            local_handoffs=totals["local_batons"],
+            wire_frames=totals["wire_frames"],
+            wire_batons=totals["wire_batons"],
+            wire_bytes=totals["wire_bytes"],
         )
 
     def search(self, queries: np.ndarray) -> ExecRunResult:

@@ -16,11 +16,27 @@ The ISSUE-7 acceptance battery:
 * Satellites: the seeded ``diurnal`` arrival generator, the ``ExecSpec``
   config section + ``Deployment.run_exec`` facade, and the bench
   runner's one-line unknown ``--only`` tag error.
+
+The ISSUE-8 micro-batching battery extends it:
+
+* **Batched parity** — bit-identity to the engine at every
+  (workers x batch) combination; ``runtime.advance_batch`` advances a
+  stacked group leaf-for-leaf identically to sequential
+  ``advance_state`` calls.
+* **Tiled ADC** — the slot-tiled Pallas kernel (``adc_impl=mxu_tiled``)
+  bit-matches the gather reference (and the engine run built on it),
+  unlike the dense one-hot route which only matches to float tolerance.
+* **Drain/wire mechanics** — ``get_many`` priority, budget and slot-gate
+  semantics; multi-baton frame round-trip; coalescing and same-worker
+  short-circuit accounting (hand-offs are conserved as
+  ``wire_batons + local_handoffs``).
 """
 
+import dataclasses
 import os
 import sys
 
+import jax
 import numpy as np
 import pytest
 
@@ -29,7 +45,9 @@ from repro.api.engine import BatonEngine
 from repro.cluster import diurnal, make_workload
 from repro.core import baton
 from repro.core.state import STAT_FIELDS
-from repro.serve_async import AsyncServingTier, decode_baton, encode_baton
+from repro.serve_async import (AsyncServingTier, decode_baton, decode_frame,
+                               encode_baton, encode_frame, runtime)
+from repro.serve_async.queues import ThreadInbox
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, ROOT)  # the benchmarks namespace package
@@ -270,3 +288,250 @@ def test_fig20_suite_registered():
     tags = dict(SUITES)
     assert tags["fig20execsim"] == "figures.fig20_exec_vs_sim"
     assert callable(figures.fig20_exec_vs_sim)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-8: micro-batched parity (workers x batch)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers,batch",
+                         [(1, 4), (1, 8), (2, 4), (2, 8), (4, 4), (4, 8)])
+def test_tier_batched_matches_engine_bitwise(baton_index, dataset, exec_cfg,
+                                             engine_result, n_workers,
+                                             batch):
+    ids_e, dists_e, stats_e = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=n_workers,
+                          batch=batch) as tier:
+        res = tier.search(dataset.queries)
+    assert res.batch == batch
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    got = res.stats_dict()
+    for f in STAT_FIELDS:
+        assert np.array_equal(got[f], stats_e[f]), f
+    # conservation: every inter_hops increment crossed a queue exactly
+    # once — inside a serialized frame or as a same-worker short-circuit
+    assert res.handoffs == res.wire_batons + res.local_handoffs
+    assert res.advance_calls > 0
+
+
+@pytest.mark.slow
+def test_process_mode_batched_matches_engine(baton_index, dataset, exec_cfg,
+                                             engine_result):
+    ids_e, dists_e, _ = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=2, batch=8,
+                          mode="process") as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    assert res.handoffs == res.wire_batons + res.local_handoffs
+
+
+def test_advance_batch_equals_sequential(baton_index, dataset, exec_cfg):
+    import jax.numpy as jnp
+
+    from repro.core import pq
+
+    n = 5
+    queries = np.asarray(dataset.queries[:n], np.float32)
+    starts, start_d = baton_index.head_starts(queries, exec_cfg.n_starts)
+    luts = pq.build_lut(jnp.asarray(baton_index.codebook),
+                        jnp.asarray(queries))
+    states = [
+        runtime.seed_state(jnp.asarray(queries[i]), jnp.asarray(starts[i]),
+                           jnp.asarray(start_d[i]), luts[i], 0, i,
+                           exec_cfg.L, exec_cfg.pool)
+        for i in range(n)
+    ]
+    shard = runtime.partition_shard(baton_index, 0)
+    sts, done_b, dest_b = runtime.advance_batch(
+        runtime.stack_states(states), shard, 0, exec_cfg.W,
+        exec_cfg.max_local_steps)
+    unstacked = runtime.unstack_states(sts, n)
+    done_b, dest_b = np.asarray(done_b), np.asarray(dest_b)
+    for i, st in enumerate(states):
+        st1, done1, dest1 = runtime.advance_state(
+            st, shard, 0, exec_cfg.W, exec_cfg.max_local_steps)
+        assert bool(done1) == bool(done_b[i])
+        assert int(dest1) == int(dest_b[i])
+        la = jax.tree.leaves(jax.device_get(st1))
+        lb = jax.tree.leaves(unstacked[i])
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_single_worker_all_handoffs_local(baton_index, dataset, exec_cfg):
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=1,
+                          batch=4) as tier:
+        res = tier.search(dataset.queries)
+    assert res.handoffs > 0
+    assert res.wire_frames == 0 and res.wire_batons == 0
+    assert res.wire_bytes == 0
+    assert res.local_handoffs == res.handoffs
+
+
+def test_coalescing_packs_multiple_batons_per_frame(baton_index, dataset,
+                                                    exec_cfg, engine_result):
+    ids_e, dists_e, _ = engine_result
+    # deep slots so drains fill the batch and same-destination hand-offs
+    # pile up within one loop iteration
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=2, batch=8,
+                          slots=16) as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    assert res.wire_batons > 0 and res.wire_bytes > 0
+    assert res.wire_frames < res.wire_batons   # >=1 frame was coalesced
+    assert res.handoffs == res.wire_batons + res.local_handoffs
+
+
+def test_tier_rejects_bad_batch(baton_index, exec_cfg):
+    with pytest.raises(ValueError, match="batch"):
+        AsyncServingTier(baton_index, exec_cfg, n_workers=1, batch=0)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-8: slot-tiled ADC kernel (adc_impl="mxu_tiled")
+# ---------------------------------------------------------------------------
+
+
+def test_tiled_adc_bitmatches_gather():
+    import jax.numpy as jnp
+
+    from repro.core.pq import adc_slots
+    from repro.kernels.pq_adc.ops import pq_adc_slots, pq_adc_slots_tiled
+
+    rng = np.random.default_rng(0)
+    for s, c, m, k in ((8, 64, 16, 128), (6, 70, 8, 64), (1, 32, 4, 16)):
+        luts = jnp.asarray(rng.normal(size=(s, m, k)).astype(np.float32))
+        codes = jnp.asarray(
+            rng.integers(0, k, size=(s, c, m)).astype(np.int32))
+        got = pq_adc_slots_tiled(luts, codes)
+        # bit-identical to the gather (the tiled kernel emits exact
+        # per-subspace partials; the caller reduces in gather order) ...
+        assert jnp.array_equal(adc_slots(luts, codes), got), (s, c, m, k)
+        # ... and numerically equal to the dense one-hot route, whose
+        # different accumulation order only matches to float tolerance
+        dense = pq_adc_slots(luts, codes)
+        assert np.allclose(np.asarray(dense), np.asarray(got), atol=1e-4)
+
+
+def test_tiled_adc_engine_and_tier_parity(baton_index, dataset, exec_cfg,
+                                          engine_result):
+    ids_e, dists_e, stats_e = engine_result
+    cfg = dataclasses.replace(exec_cfg, adc_impl="mxu_tiled")
+    ids, dists, stats = baton.run_simulated(baton_index, dataset.queries,
+                                            cfg)
+    assert np.array_equal(np.asarray(ids), ids_e)
+    assert np.array_equal(np.asarray(dists), dists_e)
+    for f in STAT_FIELDS:
+        assert np.array_equal(np.asarray(stats[f]), stats_e[f]), f
+    # and through the batched exec tier: the kernel rides advance_batch
+    with AsyncServingTier(baton_index, cfg, n_workers=2, batch=4) as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+
+
+def test_baton_params_rejects_unknown_adc_impl():
+    with pytest.raises(ValueError, match="adc_impl"):
+        baton.BatonParams(adc_impl="dense")
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-8: get_many drain semantics + multi-baton frames
+# ---------------------------------------------------------------------------
+
+
+def test_get_many_priority_then_budgeted_admissions():
+    ib = ThreadInbox(slots=8, admit_headroom=2, queue_cap=16)
+    for i in range(3):
+        assert ib.offer_admit(("a", i))
+    ib.push_handoff(("frame", "f0"), n=2, nbytes=100)
+    ib.push_handoff(("local", "l0"), n=1, local=True)
+    got = ib.get_many(4)
+    # hand-offs first (the 2-baton frame + the short-circuit), then
+    # admissions fill what's left of the budget
+    assert [k for k, _ in got] == ["handoff", "handoff", "admit"]
+    assert got[0][1] == ("frame", "f0")
+    assert got[1][1] == ("local", "l0")
+    assert ib.resident == 4
+    c = ib.counter_snapshot()
+    assert c["wire_frames"] == 1 and c["wire_batons"] == 2
+    assert c["wire_bytes"] == 100 and c["local_batons"] == 1
+
+
+def test_get_many_oversize_frame_taken_whole():
+    ib = ThreadInbox(slots=8, admit_headroom=2, queue_cap=16)
+    ib.push_handoff(("frame", "big"), n=5, nbytes=1)
+    ib.push_handoff(("frame", "next"), n=1, nbytes=1)
+    # batons inside one message are indivisible: the 5-baton frame blows
+    # the budget but is taken whole, and nothing else rides along
+    got = ib.get_many(2)
+    assert [item for _, item in got] == [("frame", "big")]
+
+
+def test_get_many_slot_gate_blocks_admissions_not_handoffs():
+    ib = ThreadInbox(slots=4, admit_headroom=2, queue_cap=16)  # usable=2
+    for i in range(6):
+        assert ib.offer_admit(i)
+    got = ib.get_many(8)
+    assert [k for k, _ in got] == ["admit", "admit"]   # gate, not budget
+    assert ib.resident == 2
+    ib.push_handoff(("local", "x"), n=1, local=True)   # ignores the gate
+    got2 = ib.get_many(8)
+    assert [k for k, _ in got2] == ["handoff"]
+    for _ in range(3):
+        ib.release()
+    got3 = ib.get_many(8)                              # slots freed
+    assert [k for k, _ in got3] == ["admit", "admit"]
+
+
+def test_get_many_drains_then_stops():
+    ib = ThreadInbox(slots=8, admit_headroom=2, queue_cap=4)
+    ib.push_handoff(("local", "x"), n=1, local=True)
+    ib.stop()
+    assert ib.get_many(4) == [("handoff", ("local", "x"))]
+    assert ib.get_many(4) is None
+    assert ib.get() is None
+
+
+def test_frame_round_trip_and_rejects_garbage():
+    records = [(0, 3, b"abc"), (7, 1, b""), (2, 2, b"\x00" * 5)]
+    assert decode_frame(encode_frame(records)) == records
+    with pytest.raises(ValueError):
+        decode_frame(b"XXXX\x01\x00\x00")
+    with pytest.raises(ValueError, match="length"):
+        decode_frame(encode_frame(records) + b"junk")
+
+
+def test_exec_spec_batch_validation_and_run_exec(baton_index, dataset):
+    assert ExecSpec(batch=4).batch == 4
+    with pytest.raises(ValueError, match="batch"):
+        ExecSpec(batch=0)
+    cfg = ServeConfig.from_dict({
+        "name": "exec-batch-test",
+        "search": {"L": 32, "W": 4, "slots": 8},
+        "exec": {"workers": 2, "batch": 8},
+    })
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset)
+    out = dep.run_exec(dataset.queries)
+    assert tuple(out) == EXEC_FIELDS
+    assert out["parity"] is True
+    assert out["batch"] == 8
+    assert out["advance_calls"] > 0
+    assert out["wire_batons"] + out["local_handoffs"] == out["handoffs"]
+
+
+def test_fig21_and_advbatch_suites_registered():
+    from benchmarks import bench_kernels, figures
+    from benchmarks.run import SUITES
+
+    tags = dict(SUITES)
+    assert tags["fig21batch"] == "figures.fig21_batch_sweep"
+    assert tags["advbatch"] == "bench_kernels.advance_batch_rows"
+    assert callable(figures.fig21_batch_sweep)
+    assert callable(bench_kernels.advance_batch_rows)
