@@ -1,0 +1,34 @@
+"""Bench row for the invariant static-analysis suite.
+
+Runs ``tools/analyze.py``'s report builder over ``src/`` and states the
+finding counts as derived fields.  ``total_findings`` and
+``waived_findings`` are *lower-better* trajectory metrics (the
+``findings`` pattern in ``benchmarks/trajectory_check.py``): a PR that
+introduces a new finding — even a waived one — shows up as a regression
+in the cross-PR diff, so the waiver list can only shrink quietly, never
+grow.  ``us_per_call`` is the analyzer's wall time over the whole tree
+(machine-dependent, reported for context only, like every other timing).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_ROOT, "tools"))
+
+
+def analysis_rows():
+    import analyze
+
+    t0 = time.perf_counter()
+    report = analyze.build_report([os.path.join(_ROOT, "src")])
+    us = (time.perf_counter() - t0) * 1e6
+    counts = report["counts"]
+    derived = (f"total_findings={counts['total']};"
+               f"waived_findings={counts['waived']};"
+               f"active_findings={counts['active']};"
+               f"rules={len(report['rules'])}")
+    return [("analysis_suite", us, derived)]

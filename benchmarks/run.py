@@ -50,6 +50,7 @@ SUITES = (
     ("kernels", "bench_kernels.kernel_rows"),
     ("superstep", "bench_kernels.superstep_rows"),
     ("advbatch", "bench_kernels.advance_batch_rows"),
+    ("analysis", "bench_analysis.analysis_rows"),
 )
 
 

@@ -53,6 +53,11 @@ _LOST_RE = re.compile(r"([A-Za-z0-9_.@/]*lost[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
 # jit-dispatch counts, lower-better
 _WORK_RE = re.compile(
     r"([A-Za-z0-9_.@/]*(?:flops|dispatch)[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
+# static-analysis finding counts (the `analysis` suite row): lower-better
+# with zero as the good value — a PR that introduces a finding, even a
+# waived one, regresses the trajectory
+_FINDINGS_RE = re.compile(
+    r"([A-Za-z0-9_.@/]*findings)=([-+0-9.eE]+)")
 
 
 def _scan(bench: dict, regex, keep_zero: bool = False) -> dict:
@@ -83,6 +88,10 @@ def extract_lost(bench: dict) -> dict:
 
 def extract_work(bench: dict) -> dict:
     return _scan(bench, _WORK_RE)
+
+
+def extract_findings(bench: dict) -> dict:
+    return _scan(bench, _FINDINGS_RE, keep_zero=True)
 
 
 def _kv(derived) -> dict:
@@ -131,10 +140,13 @@ def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
         print(f"{key}: dropped (was {p[key]:.1f})")
     for key in sorted(c.keys() - p.keys()):
         print(f"{key}: new ({c[key]:.1f})")
-    # lower-better pools: loss counts (zero is the good value — kept) and
-    # structural work counters (FLOPs / dispatches, stated as constants)
-    pl = {**extract_lost(prev), **extract_work(prev)}
-    cl = {**extract_lost(cur), **extract_work(cur)}
+    # lower-better pools: loss counts (zero is the good value — kept),
+    # structural work counters (FLOPs / dispatches, stated as constants),
+    # and static-analysis finding counts
+    pl = {**extract_lost(prev), **extract_work(prev),
+          **extract_findings(prev)}
+    cl = {**extract_lost(cur), **extract_work(cur),
+          **extract_findings(cur)}
     for key in sorted(pl.keys() & cl.keys()):
         # worse iff the count grew beyond the threshold; any loss where
         # there was none before is always a regression

@@ -1,0 +1,43 @@
+"""``repro.analysis`` — the invariant static-analysis suite.
+
+AST-based, repo-specific checkers that enforce at CI time the source
+disciplines behind the repo's dynamic guarantees (exec-tier bit-parity,
+schema-pinned rows, conservation under concurrency).  See
+``docs/ANALYSIS.md`` for the rule catalog and the waiver workflow, and
+``tools/analyze.py`` for the CLI.
+
+Importing this package registers all built-in checkers:
+
+========================  ==================================================
+``jit-purity``            host side effects / nondeterminism / device syncs
+                          reachable from a jit, vmap, or while_loop boundary
+``recompile-hazard``      unbounded len()/shape axes at jitted call sites in
+                          loops; jit wrappers created per iteration
+``schema-pin``            schema field-set drift across definitions,
+                          docstring-pinned dict returns, member references
+``lock-discipline``       shared-state writes outside the owning lock;
+                          lock-acquisition-order cycles
+``units-suffix``          additive arithmetic mixing _s/_ms/_bytes/_qps
+                          suffixed names in cost-model code
+========================  ==================================================
+
+The dynamic counterpart — the seeded interleaving sanitizer that perturbs
+thread schedules while asserting conservation — lives in
+``repro.serve_async.sanitize`` (enable with ``REPRO_SANITIZE=1``).
+
+Pure stdlib: importing ``repro.analysis`` must never import jax (the CI
+analyze job runs without an accelerator stack warm-up).
+"""
+
+from repro.analysis.base import (          # noqa: F401
+    Baseline, Finding, Project, SEV_ERROR, SEV_WARN, checker_ids,
+    get_checkers, register, run_checkers,
+)
+from repro.analysis import (               # noqa: F401  (register checkers)
+    locks, purity, recompile, schema, units,
+)
+
+__all__ = [
+    "Baseline", "Finding", "Project", "SEV_ERROR", "SEV_WARN",
+    "checker_ids", "get_checkers", "register", "run_checkers",
+]

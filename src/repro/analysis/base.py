@@ -1,0 +1,243 @@
+"""Framework core of the invariant static-analysis suite.
+
+The repo's headline correctness claims (bit-parity of the exec tier vs
+``Engine.search``, schema-pinned figure rows, conservation under
+concurrency) are enforced dynamically by tests — on the configurations the
+tests happen to exercise.  The checkers registered here enforce the *source
+disciplines* behind those claims on every path, at CI time, without running
+anything: no host side effects inside traced code, bounded jit-recompile
+axes, one schema definition consumed consistently, writes to shared state
+under the owning lock, no cross-unit arithmetic in the cost models.
+
+Building blocks:
+
+* :class:`Finding` — one ``file:line`` diagnostic with a stable rule id.
+  Its :meth:`Finding.fingerprint` deliberately excludes the line number so
+  a committed waiver survives unrelated edits above it.
+* :class:`SourceFile` / :class:`Project` — parsed ASTs of every ``.py``
+  under the analyzed roots, plus per-checker options.
+* :func:`register` / :func:`get_checkers` — the checker registry; a
+  checker is a class with ``id``, ``description`` and
+  ``check(project) -> list[Finding]``.
+* :class:`Baseline` — the committed waiver file: grandfathered findings
+  are suppressed by (rule, file, message-substring) with a mandatory
+  one-line justification, so ``tools/analyze.py`` fails only on *new*
+  findings and waivers can only shrink (the trajectory check tracks the
+  total).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+
+SEV_ERROR = "error"
+SEV_WARN = "warn"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic: ``file:line [rule] message``."""
+
+    file: str          # path relative to the repo root (stable across hosts)
+    line: int          # 1-indexed; informative only (not part of identity)
+    rule: str          # registered checker id, e.g. "jit-purity"
+    message: str
+    severity: str = SEV_ERROR
+
+    def fingerprint(self) -> tuple:
+        """Waiver identity: line numbers shift, the shape of the finding
+        doesn't."""
+        return (self.rule, self.file, self.message)
+
+    def to_dict(self) -> dict:
+        return {"file": self.file, "line": self.line, "rule": self.rule,
+                "message": self.message, "severity": self.severity}
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} [{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """One parsed module: path, text, AST, and the repo-relative path that
+    findings report."""
+
+    def __init__(self, path: str, relpath: str):
+        self.path = path
+        self.relpath = relpath
+        with open(path, encoding="utf-8") as f:
+            self.text = f.read()
+        self.tree = ast.parse(self.text, filename=relpath)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"SourceFile({self.relpath})"
+
+
+class Project:
+    """The analyzed file set + per-checker options.
+
+    ``roots`` may be directories (walked recursively for ``.py``) or single
+    files.  ``options`` maps checker id -> dict; checkers read their own
+    scoping knobs from it (e.g. the units checker's path filter) so the
+    self-tests can aim a checker at fixture files outside its default
+    scope.
+    """
+
+    def __init__(self, roots, repo_root: "str | None" = None,
+                 options: "dict | None" = None):
+        self.repo_root = os.path.abspath(repo_root or os.getcwd())
+        self.options = options or {}
+        self.files: list[SourceFile] = []
+        self.errors: list[Finding] = []
+        for root in roots:
+            root = os.path.abspath(root)
+            if os.path.isfile(root):
+                self._add(root)
+                continue
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if not d.startswith(".") and d != "__pycache__")
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        self._add(os.path.join(dirpath, name))
+
+    def _add(self, path: str) -> None:
+        rel = os.path.relpath(path, self.repo_root)
+        try:
+            self.files.append(SourceFile(path, rel))
+        except SyntaxError as e:  # a broken file is itself a finding
+            self.errors.append(Finding(
+                file=rel, line=e.lineno or 1, rule="parse-error",
+                message=f"file does not parse: {e.msg}"))
+
+    def opt(self, checker_id: str, key: str, default):
+        return self.options.get(checker_id, {}).get(key, default)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cls):
+    """Class decorator: add a checker to the registry (id must be unique)."""
+    if cls.id in _REGISTRY:
+        raise ValueError(f"duplicate checker id: {cls.id}")
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def get_checkers(only: "list[str] | None" = None) -> list:
+    """Instantiate registered checkers (all, or the ``only`` subset)."""
+    ids = sorted(_REGISTRY) if only is None else list(only)
+    unknown = [i for i in ids if i not in _REGISTRY]
+    if unknown:
+        raise KeyError(
+            f"unknown checker id(s): {unknown}; known: {sorted(_REGISTRY)}")
+    return [_REGISTRY[i]() for i in ids]
+
+
+def checker_ids() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def run_checkers(project: Project,
+                 only: "list[str] | None" = None) -> list[Finding]:
+    """Run checkers over the project; findings sorted by (file, line)."""
+    findings = list(project.errors)
+    for checker in get_checkers(only):
+        findings.extend(checker.check(project))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.rule, f.message))
+
+
+# --------------------------------------------------------------------------
+# waiver baseline
+# --------------------------------------------------------------------------
+
+class Baseline:
+    """The committed waiver file (``tools/analysis_baseline.json``).
+
+    Each entry waives findings by exact (rule, file) plus a ``match``
+    substring of the message, and carries a mandatory ``why`` — the
+    one-line justification the review reads.  Matching ignores line
+    numbers on purpose: a waiver must survive edits elsewhere in the file,
+    and must *not* survive the finding itself changing shape.
+    """
+
+    def __init__(self, waivers: "list[dict] | None" = None):
+        self.waivers = list(waivers or [])
+        for w in self.waivers:
+            missing = {"rule", "file", "match", "why"} - w.keys()
+            if missing:
+                raise ValueError(
+                    f"baseline entry {w!r} missing key(s): {sorted(missing)}")
+
+    @classmethod
+    def load(cls, path: "str | None") -> "Baseline":
+        if path is None or not os.path.exists(path):
+            return cls([])
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+        return cls(data.get("waivers", []))
+
+    def is_waived(self, finding: Finding) -> bool:
+        return any(
+            w["rule"] == finding.rule and w["file"] == finding.file
+            and w["match"] in finding.message
+            for w in self.waivers
+        )
+
+    def split(self, findings):
+        """-> (active, waived) preserving order."""
+        active, waived = [], []
+        for f in findings:
+            (waived if self.is_waived(f) else active).append(f)
+        return active, waived
+
+
+# --------------------------------------------------------------------------
+# small AST helpers shared by checkers
+# --------------------------------------------------------------------------
+
+def dotted_name(node) -> "str | None":
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_elements(node) -> "list[str] | None":
+    """The string elements of a tuple/list literal of constants, else
+    None (non-literal or mixed content)."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    out = []
+    for el in node.elts:
+        if isinstance(el, ast.Constant) and isinstance(el.value, str):
+            out.append(el.value)
+        else:
+            return None
+    return out
+
+
+def walk_scope(func: ast.AST):
+    """Yield nodes of a function body without descending into nested
+    function/class definitions (their scopes are analyzed separately)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))

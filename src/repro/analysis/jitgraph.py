@@ -1,0 +1,224 @@
+"""Static discovery of jit/trace boundaries and the call graph behind them.
+
+Shared by the ``jit-purity`` and ``recompile-hazard`` checkers: one pass
+over the project finds
+
+* every **traced entry point** — a function decorated with ``jax.jit`` (or
+  ``functools.partial(jax.jit, ...)``), wrapped by a ``name = jax.jit(f)``
+  assignment, or passed inline to a tracing combinator
+  (``jax.lax.while_loop`` / ``scan`` / ``cond`` / ``fori_loop``,
+  ``jax.vmap``, ``jax.checkpoint``, ``shard_map``);
+* the set of **jitted callable names** visible in each module (locally
+  defined or imported), which is what the recompile checker needs to spot
+  hazardous call sites;
+* a name-resolution map good enough to chase calls from traced code into
+  helpers defined in the same module or imported ``from repro...`` modules
+  (the static call graph the purity walk follows).
+
+Resolution is deliberately syntactic: no imports are executed.  A call the
+resolver cannot see (dynamic dispatch, getattr) is simply not followed —
+the checkers err on the side of silence, not noise.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.base import Project, SourceFile, dotted_name
+
+# calls whose function-valued arguments are traced by jax
+TRACING_COMBINATORS = {
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": None,       # every callable arg
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.map": (0,),
+    "jax.vmap": (0,),
+    "vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "shard_map": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.jit": (0,),
+    "jit": (0,),
+}
+
+
+def module_name(sf: SourceFile) -> str:
+    """Repo-relative path -> dotted module name (``src/`` prefix dropped)."""
+    rel = sf.relpath.replace(os.sep, "/")
+    for prefix in ("src/",):
+        if rel.startswith(prefix):
+            rel = rel[len(prefix):]
+    return rel[:-3].replace("/", ".")
+
+
+def is_jit_decorator(dec: ast.AST) -> bool:
+    """``@jax.jit`` / ``@jit`` / ``@(functools.)partial(jax.jit, ...)``."""
+    name = dotted_name(dec)
+    if name in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dotted_name(dec.func)
+        if fn in ("jax.jit", "jit"):
+            return True
+        if fn in ("functools.partial", "partial") and dec.args:
+            return dotted_name(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    """``jax.jit(...)`` or ``(functools.)partial(jax.jit, ...)`` as an
+    expression (wrapping call, not decorator)."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = dotted_name(node.func)
+    if fn in ("jax.jit", "jit"):
+        return True
+    if fn in ("functools.partial", "partial") and node.args:
+        return dotted_name(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+class ModuleInfo:
+    """Per-module symbol tables the checkers resolve against."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.name = module_name(sf)
+        # top-level (and class-scoped) function defs by accessible name
+        self.functions: dict[str, ast.AST] = {}
+        # import alias -> source module dotted name
+        self.import_alias: dict[str, str] = {}
+        # from-import: local name -> (module, original name)
+        self.from_imports: dict[str, tuple] = {}
+        # names bound to jit-wrapped callables (def or assignment)
+        self.jitted_names: set[str] = set()
+        # (funcnode, reason) traced entry points found in this module
+        self.entries: list[tuple] = []
+        # every def in the module by bare name, nested scopes included —
+        # combinator args like while_loop(cond, body, ...) usually name
+        # closures local to the enclosing driver function
+        self.defs_by_name: dict[str, list] = {}
+        self._scan()
+
+    def _scan(self) -> None:
+        tree = self.sf.tree
+        for node in tree.body:
+            if isinstance(node, (ast.Import,)):
+                for alias in node.names:
+                    self.import_alias[alias.asname or alias.name.split(".")[0]] \
+                        = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    self.from_imports[alias.asname or alias.name] = (
+                        node.module, alias.name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+                if any(is_jit_decorator(d) for d in node.decorator_list):
+                    self.jitted_names.add(node.name)
+                    self.entries.append((node, f"@jit def {node.name}"))
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self.functions[f"{node.name}.{sub.name}"] = sub
+                        if any(is_jit_decorator(d)
+                               for d in sub.decorator_list):
+                            self.jitted_names.add(
+                                f"{node.name}.{sub.name}")
+                            self.entries.append(
+                                (sub, f"@jit method {node.name}.{sub.name}"))
+            elif isinstance(node, ast.Assign) and _is_jit_call(node.value):
+                # name = jax.jit(f): name is a jitted callable; f is traced
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.jitted_names.add(tgt.id)
+                inner = node.value.args[0] if node.value.args else None
+                fn = dotted_name(inner) if inner is not None else None
+                if fn and fn in self.functions:
+                    self.entries.append(
+                        (self.functions[fn], f"jax.jit({fn}) wrap"))
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs_by_name.setdefault(node.name, []).append(node)
+
+        # combinator arguments anywhere in the module (incl. inside defs):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            if fn is None:
+                continue
+            spec = TRACING_COMBINATORS.get(fn, "missing")
+            if spec == "missing":
+                continue
+            idxs = range(len(node.args)) if spec is None else spec
+            for i in idxs:
+                if i >= len(node.args):
+                    continue
+                arg = node.args[i]
+                target = dotted_name(arg)
+                if target and target in self.defs_by_name:
+                    for fnode in self.defs_by_name[target]:
+                        self.entries.append((fnode, f"passed to {fn}"))
+                elif isinstance(arg, ast.Lambda):
+                    self.entries.append((arg, f"lambda passed to {fn}"))
+
+
+class JitGraph:
+    """Project-wide view: per-module info + cross-module resolution."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.modules: dict[str, ModuleInfo] = {}
+        self.by_file: dict[str, ModuleInfo] = {}
+        for sf in project.files:
+            info = ModuleInfo(sf)
+            self.modules[info.name] = info
+            self.by_file[sf.relpath] = info
+
+    def resolve_call(self, info: ModuleInfo, call_name: str):
+        """Resolve a dotted call name to (ModuleInfo, funcnode) if it names
+        a function we parsed; else None."""
+        if call_name in info.functions:
+            return info, info.functions[call_name]
+        if call_name in info.from_imports:
+            mod, orig = info.from_imports[call_name]
+            target = self.modules.get(mod)
+            if target and orig in target.functions:
+                return target, target.functions[orig]
+        head, _, rest = call_name.partition(".")
+        if rest:
+            # module-alias attribute: pq.build_lut via `from repro.core
+            # import pq` or `import repro.core.pq as pq`
+            mod = None
+            if head in info.import_alias:
+                mod = info.import_alias[head]
+            elif head in info.from_imports:
+                src, orig = info.from_imports[head]
+                mod = f"{src}.{orig}"
+            if mod:
+                target = self.modules.get(mod)
+                if target and rest in target.functions:
+                    return target, target.functions[rest]
+        return None
+
+    def is_jitted_callable(self, info: ModuleInfo, call_name: str) -> bool:
+        """Does ``call_name`` at a call site in ``info`` denote a
+        jit-wrapped callable (locally defined or imported)?"""
+        if call_name in info.jitted_names:
+            return True
+        resolved = self.resolve_call(info, call_name)
+        if resolved is None:
+            return False
+        target_info, node = resolved
+        for name, fn in target_info.functions.items():
+            if fn is node:
+                return name in target_info.jitted_names
+        return False

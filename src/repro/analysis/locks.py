@@ -1,0 +1,273 @@
+"""``lock-discipline``: shared-state writes under the owning lock, and an
+acyclic lock-acquisition order.
+
+The serve_async tier's conservation claim (every offered arrival ends as
+exactly one of completed/rejected; ``resident`` is an exact baton count)
+only holds if every write to a shared attribute happens inside the owning
+lock's ``with`` block — an unlocked read-modify-write of a counter is the
+precise bug class the interleaving sanitizer
+(``repro.serve_async.sanitize``) is built to flush out dynamically, and
+this checker rejects statically.
+
+Per class in the configured scope (default: ``serve_async/``), the checker
+
+* infers **lock attributes** — ``self._x = threading.Condition()`` /
+  ``Lock()`` / ``RLock()`` / ``Semaphore()`` in ``__init__``;
+* infers **shared mutable attributes** — any ``self.attr`` (or
+  ``self.attr[...]`` / ``self.attr.value``) written outside ``__init__``;
+* requires each such write to sit lexically inside a lock scope: ``with
+  self.<lock-attr>:`` or ``with <expr>.get_lock():`` (the mp.Value
+  idiom);
+* in a class that owns *no* lock but writes shared attributes outside
+  ``__init__`` in a concurrency module, emits a warning — the
+  ``AsyncServingTier._closed`` shape: benign under the GIL until two
+  threads race the check-then-act;
+* builds the **lock-order graph**: a ``with`` on lock B nested inside a
+  ``with`` on lock A adds edge A -> B (one level of self-method calls is
+  followed); any cycle — including the length-1 cycle of re-acquiring a
+  non-reentrant lock — is reported as a potential deadlock.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    Finding, Project, SEV_WARN, dotted_name, register,
+)
+
+LOCK_FACTORIES = ("Condition", "Lock", "RLock", "Semaphore",
+                  "BoundedSemaphore")
+REENTRANT_FACTORIES = ("RLock",)
+DEFAULT_PATHS = ("serve_async",)
+# attribute types that are themselves thread-safe (method calls on them
+# need no external lock)
+SAFE_CALL_ATTRS = {"set", "is_set", "wait", "notify", "notify_all", "put",
+                   "get", "put_nowait", "get_nowait", "append", "popleft",
+                   "join", "start", "clear"}
+
+
+def _self_attr(node) -> "str | None":
+    """``self.x`` -> "x" (the base attribute of a write target)."""
+    # peel subscripts and .value chains: self.c[k], self._n.value
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr == "value":
+        node = node.value
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) \
+            and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _is_lock_ctx(item: ast.withitem, lock_attrs: set) -> "str | None":
+    """Lock key if the with-item acquires a lock, else None."""
+    expr = item.context_expr
+    attr = _self_attr(expr)
+    if attr is not None and attr in lock_attrs:
+        return attr
+    if isinstance(expr, ast.Call):
+        fn = dotted_name(expr.func)
+        if fn is not None and fn.split(".")[-1] == "get_lock":
+            # with self._resident.get_lock(): / with c.get_lock():
+            base = _self_attr(expr.func.value) if isinstance(
+                expr.func, ast.Attribute) else None
+            return base if base is not None else "<get_lock>"
+    return None
+
+
+class _ClassModel:
+    def __init__(self, node: ast.ClassDef):
+        self.node = node
+        self.lock_attrs: set[str] = set()
+        self.reentrant: set[str] = set()
+        self.methods = {
+            m.name: m for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        init = self.methods.get("__init__")
+        if init is not None:
+            for sub in ast.walk(init):
+                if isinstance(sub, ast.Assign):
+                    for tgt in sub.targets:
+                        attr = _self_attr(tgt)
+                        if attr is None:
+                            continue
+                        if isinstance(sub.value, ast.Call):
+                            # see through wrappers: any lock-factory call
+                            # in the RHS (e.g. maybe_wrap(Condition()))
+                            # makes the attribute a lock
+                            for call in ast.walk(sub.value):
+                                if not isinstance(call, ast.Call):
+                                    continue
+                                fn = dotted_name(call.func) or ""
+                                leaf = fn.split(".")[-1]
+                                if leaf in LOCK_FACTORIES:
+                                    self.lock_attrs.add(attr)
+                                    if leaf in REENTRANT_FACTORIES:
+                                        self.reentrant.add(attr)
+
+
+@register
+class LockDisciplineChecker:
+    id = "lock-discipline"
+    description = ("shared-attribute writes outside the owning lock and "
+                   "lock-acquisition-order cycles in concurrency modules")
+
+    def check(self, project: Project) -> list:
+        paths = tuple(project.opt(self.id, "paths", DEFAULT_PATHS))
+        findings: list[Finding] = []
+        for sf in project.files:
+            norm = sf.relpath.replace("\\", "/")
+            if paths and not any(p in norm for p in paths):
+                continue
+            for node in sf.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    findings.extend(self._check_class(sf, node))
+        return findings
+
+    # ------------------------------------------------------------------ ---
+    def _check_class(self, sf, cls: ast.ClassDef) -> list:
+        model = _ClassModel(cls)
+        out = []
+        edges: set[tuple] = set()          # (outer_lock, inner_lock, line)
+        # method -> set of locks it acquires anywhere (for 1-hop call edges)
+        acquired_by_method: dict[str, set] = {}
+
+        for name, meth in model.methods.items():
+            if name == "__init__":
+                continue
+            acquired_by_method[name] = set()
+            self._walk(sf, cls, model, meth, meth.body, held=(),
+                       out=out, edges=edges,
+                       acquired=acquired_by_method[name])
+
+        # one-hop cross-method edges: holding L while calling self.m()
+        # which acquires L' adds L -> L'
+        for name, meth in model.methods.items():
+            if name == "__init__":
+                continue
+            for node in ast.walk(meth):
+                if isinstance(node, ast.With):
+                    held_here = [
+                        k for item in node.items
+                        if (k := _is_lock_ctx(item, model.lock_attrs))
+                        is not None]
+                    if not held_here:
+                        continue
+                    for sub in ast.walk(node):
+                        if isinstance(sub, ast.Call) \
+                                and isinstance(sub.func, ast.Attribute) \
+                                and isinstance(sub.func.value, ast.Name) \
+                                and sub.func.value.id == "self" \
+                                and sub.func.attr in acquired_by_method:
+                            for inner in acquired_by_method[sub.func.attr]:
+                                for outer in held_here:
+                                    edges.add((outer, inner, sub.lineno))
+
+        out.extend(self._cycle_findings(sf, cls, model, edges))
+        return out
+
+    def _walk(self, sf, cls, model, meth, body, held, out, edges,
+              acquired) -> None:
+        for node in body:
+            if isinstance(node, ast.With):
+                locks = [k for item in node.items
+                         if (k := _is_lock_ctx(item, model.lock_attrs))
+                         is not None]
+                for k in locks:
+                    acquired.add(k)
+                    for outer in held:
+                        edges.add((outer, k, node.lineno))
+                self._walk(sf, cls, model, meth, node.body,
+                           held + tuple(locks), out, edges, acquired)
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue               # nested scope: not this method's state
+            self._flag_writes(sf, cls, model, meth, node, held, out)
+            for child in ast.iter_child_nodes(node):
+                self._walk(sf, cls, model, meth, [child], held, out, edges,
+                           acquired)
+
+    def _flag_writes(self, sf, cls, model, meth, node, held, out) -> None:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for tgt in targets:
+            attr = _self_attr(tgt)
+            if attr is None or attr in model.lock_attrs:
+                continue
+            if held:
+                continue
+            if model.lock_attrs:
+                out.append(Finding(
+                    file=sf.relpath, line=node.lineno, rule=self.id,
+                    message=(
+                        f"`{cls.name}.{meth.name}` writes shared "
+                        f"`self.{attr}` outside any `with self.<lock>` "
+                        f"scope (class owns lock(s): "
+                        f"{', '.join(sorted(model.lock_attrs))})"),
+                ))
+            else:
+                out.append(Finding(
+                    file=sf.relpath, line=node.lineno, rule=self.id,
+                    severity=SEV_WARN,
+                    message=(
+                        f"`{cls.name}.{meth.name}` writes `self.{attr}` "
+                        f"but the class owns no lock — check-then-act "
+                        f"races are invisible to tests; guard it or "
+                        f"document single-threaded ownership"),
+                ))
+
+    def _cycle_findings(self, sf, cls, model, edges) -> list:
+        out = []
+        # length-1: re-acquiring a non-reentrant lock under itself
+        for outer, inner, line in sorted(edges):
+            if outer == inner and inner not in model.reentrant \
+                    and inner != "<get_lock>":
+                out.append(Finding(
+                    file=sf.relpath, line=line, rule=self.id,
+                    message=(
+                        f"`{cls.name}` re-acquires non-reentrant lock "
+                        f"`self.{inner}` while holding it — guaranteed "
+                        f"self-deadlock"),
+                ))
+        # longer cycles via DFS over the order graph
+        graph: dict[str, set] = {}
+        lines: dict[tuple, int] = {}
+        for outer, inner, line in edges:
+            if outer != inner:
+                graph.setdefault(outer, set()).add(inner)
+                lines.setdefault((outer, inner), line)
+        seen = set()       # frozenset of members: one finding per cycle,
+        for start in sorted(graph):        # whatever rotation found it
+            stack = [(start, [start])]
+            while stack:
+                cur, path = stack.pop()
+                for nxt in sorted(graph.get(cur, ())):
+                    if nxt == start:
+                        cyc = " -> ".join(path + [start])
+                        key = frozenset(path)
+                        if key not in seen:
+                            seen.add(key)
+                            out.append(Finding(
+                                file=sf.relpath,
+                                line=lines.get((cur, start),
+                                               cls.lineno),
+                                rule=self.id,
+                                message=(
+                                    f"`{cls.name}` lock-order cycle "
+                                    f"{cyc} — potential deadlock; pick "
+                                    f"one acquisition order"),
+                            ))
+                    elif nxt not in path:
+                        stack.append((nxt, path + [nxt]))
+        return out

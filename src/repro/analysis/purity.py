@@ -1,0 +1,129 @@
+"""``jit-purity``: no host side effects or nondeterminism in traced code.
+
+The exec tier's bit-parity claim rests on every jitted region being a pure
+function of its inputs: a ``time.*`` read, an unseeded ``random`` draw, a
+``print``, a ``global`` mutation, or a host sync (``.item()`` /
+``np.asarray`` / ``jax.device_get``) inside traced code either breaks
+determinism outright (the call runs once at trace time with whatever the
+host had, then is baked into the compiled program), silently stalls the
+dispatch pipeline, or raises only on the untested shape that finally
+retraces.  This checker walks every function statically reachable from a
+jit boundary (``@jax.jit`` defs, ``jax.jit(f)`` wraps, callables passed to
+``while_loop``/``scan``/``cond``/``vmap``/``shard_map``) and flags those
+patterns at the call site.
+
+``jax.debug.*`` is exempt (it is the sanctioned way to print from traced
+code), as is anything listed in the checker's ``allow_calls`` option.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import jitgraph
+from repro.analysis.base import (
+    Finding, Project, SEV_ERROR, SEV_WARN, dotted_name, register,
+)
+
+# call-name prefixes that are host effects / nondeterminism inside a trace
+IMPURE_PREFIXES = (
+    "time.", "random.", "np.random.", "numpy.random.", "datetime.",
+    "os.environ", "os.urandom", "secrets.",
+)
+IMPURE_CALLS = {"print", "open", "input", "breakpoint", "eval", "exec"}
+# host-sync calls: force a device round trip inside traced code
+SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+              "jax.device_get", "jax.block_until_ready"}
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+ALLOW_PREFIXES = ("jax.debug.",)
+
+_MAX_DEPTH = 6     # call-chain depth from the jit boundary
+
+
+@register
+class JitPurityChecker:
+    id = "jit-purity"
+    description = ("host side effects, nondeterminism, and device syncs "
+                   "inside jit/vmap/while_loop-traced code")
+
+    def check(self, project: Project) -> list:
+        graph = jitgraph.JitGraph(project)
+        allow = tuple(project.opt(self.id, "allow_calls", ()))
+        findings: list[Finding] = []
+        seen_nodes: set = set()
+
+        def visit(info, func, reason: str, depth: int) -> None:
+            key = (info.sf.relpath, id(func))
+            if key in seen_nodes or depth > _MAX_DEPTH:
+                return
+            seen_nodes.add(key)
+            findings.extend(self._scan_body(info, func, reason, allow))
+            # follow calls into helpers we can resolve statically
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                resolved = graph.resolve_call(info, name)
+                if resolved is not None:
+                    tinfo, tfunc = resolved
+                    visit(tinfo, tfunc,
+                          f"{reason} -> {name}", depth + 1)
+
+        for info in graph.modules.values():
+            for func, reason in info.entries:
+                visit(info, func, reason, 0)
+        # a node can be reachable via several boundaries (a nested while_loop
+        # body is also scanned as part of its enclosing @jit def): keep one
+        # finding per (file, line, defect), first reason wins
+        uniq, out = set(), []
+        for f in findings:
+            key = (f.file, f.line, f.message.split(" inside traced ")[0])
+            if key not in uniq:
+                uniq.add(key)
+                out.append(f)
+        return out
+
+    def _scan_body(self, info, func, reason: str, allow) -> list:
+        out = []
+        rel = info.sf.relpath
+
+        def flag(node, msg, severity=SEV_ERROR):
+            out.append(Finding(
+                file=rel, line=node.lineno, rule=self.id,
+                message=f"{msg} inside traced code ({reason})",
+                severity=severity))
+
+        for node in ast.walk(func):
+            if isinstance(node, ast.Global):
+                flag(node, f"`global {', '.join(node.names)}` mutation")
+            elif isinstance(node, ast.Nonlocal):
+                flag(node, f"`nonlocal {', '.join(node.names)}` mutation",
+                     severity=SEV_WARN)
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is None:
+                    if (isinstance(node.func, ast.Attribute)
+                            and node.func.attr in SYNC_METHODS
+                            and not node.args):
+                        flag(node, f"device sync `.{node.func.attr}()`")
+                    continue
+                if name.startswith(ALLOW_PREFIXES) or name in allow \
+                        or name.startswith(tuple(allow)):
+                    continue
+                if name in IMPURE_CALLS:
+                    flag(node, f"host side effect `{name}(...)`")
+                elif name.startswith(IMPURE_PREFIXES):
+                    kind = ("nondeterministic call"
+                            if name.split(".")[0] in
+                            ("random", "np", "numpy", "secrets")
+                            else "host side effect")
+                    flag(node, f"{kind} `{name}(...)`")
+                elif name in SYNC_CALLS:
+                    flag(node, f"device sync `{name}(...)`")
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in SYNC_METHODS \
+                        and not node.args:
+                    flag(node, f"device sync `.{node.func.attr}()`")
+        return out

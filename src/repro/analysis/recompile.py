@@ -1,0 +1,150 @@
+"""``recompile-hazard``: unbounded shape/static axes at jitted call sites.
+
+jax compiles one executable per (static args x input shapes) combination.
+A call site that feeds a jitted function a value derived from ``len(...)``
+or ``.shape[...]`` *inside a loop* compiles a fresh variant every time the
+length changes — the silent version of the hazard PR 8's pow2 discipline
+exists to bound (``worker.py`` rounds micro-batch group sizes down to
+powers of two precisely so the compile set is enumerable and ``warmup()``
+can cover it).  Two patterns are flagged:
+
+* **jit-in-loop** — ``jax.jit(f)`` (or ``partial(jax.jit, ...)``) created
+  inside a ``for``/``while`` body: each iteration builds a new wrapper
+  with an empty compile cache, so every call retraces.
+* **unbounded-axis** — a call to a known-jitted callable, inside a loop,
+  where an argument (or the one-hop local it was assigned from) contains a
+  raw ``len(...)`` or ``.shape[...]`` expression that does not pass
+  through an enumerable bounding function (``_pow2_floor`` and friends —
+  the ``bounding_calls`` option extends the allowlist).
+
+The checker is deliberately call-site-local: it does not try to prove an
+axis varies, only that nothing bounds it — the same discipline a reviewer
+enforces by eye, made mechanical.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import jitgraph
+from repro.analysis.base import (
+    Finding, Project, dotted_name, register, walk_scope,
+)
+
+# calls that collapse an arbitrary int to an enumerable static set
+DEFAULT_BOUNDING = ("_pow2_floor", "pow2_floor", "_pow2", "min", "max")
+
+
+def _contains_raw_len(node: ast.AST, bounding: tuple) -> "ast.AST | None":
+    """First ``len(...)`` / ``.shape[...]`` subexpression not wrapped by a
+    bounding call, else None."""
+
+    def scan(n, bounded: bool):
+        if isinstance(n, ast.Call):
+            fn = dotted_name(n.func)
+            if fn == "len" and not bounded:
+                return n
+            inner_bounded = bounded or (
+                fn is not None and fn.split(".")[-1] in bounding)
+            for child in ast.iter_child_nodes(n):
+                hit = scan(child, inner_bounded)
+                if hit is not None:
+                    return hit
+            return None
+        if (isinstance(n, ast.Subscript)
+                and isinstance(n.value, ast.Attribute)
+                and n.value.attr == "shape" and not bounded):
+            return n
+        for child in ast.iter_child_nodes(n):
+            hit = scan(child, bounded)
+            if hit is not None:
+                return hit
+        return None
+
+    return scan(node, False)
+
+
+@register
+class RecompileHazardChecker:
+    id = "recompile-hazard"
+    description = ("jitted call sites inside loops fed unbounded "
+                   "len()/shape-derived axes, and jit wrappers created "
+                   "per loop iteration")
+
+    def check(self, project: Project) -> list:
+        graph = jitgraph.JitGraph(project)
+        findings: list[Finding] = []
+        for info in graph.modules.values():
+            bounding = tuple(project.opt(
+                self.id, "bounding_calls", ())) + DEFAULT_BOUNDING
+            findings.extend(self._check_module(graph, info, bounding))
+        return findings
+
+    def _check_module(self, graph, info, bounding) -> list:
+        out = []
+        seen = set()  # module-level walk descends into function bodies too
+        rel = info.sf.relpath
+
+        # every loop body in the module, with its enclosing function (for
+        # one-hop local resolution)
+        for scope_name, func in [("<module>", info.sf.tree)] + [
+                (name, fn) for name, fn in info.functions.items()]:
+            assigns = self._local_assigns(func)
+            for loop in (n for n in ast.walk(func)
+                         if isinstance(n, (ast.For, ast.While))):
+                for node in ast.walk(loop):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if jitgraph._is_jit_call(node):
+                        if ("wrap", node.lineno) not in seen:
+                            seen.add(("wrap", node.lineno))
+                            out.append(Finding(
+                                file=rel, line=node.lineno, rule=self.id,
+                                message=(
+                                    "jit wrapper created inside a loop "
+                                    "(fresh compile cache every "
+                                    "iteration); hoist the jax.jit out "
+                                    "of the loop"),
+                            ))
+                        continue
+                    name = dotted_name(node.func)
+                    if name is None \
+                            or not graph.is_jitted_callable(info, name):
+                        continue
+                    hit = self._unbounded_arg(node, assigns, bounding)
+                    if hit is not None and ("axis", node.lineno) not in seen:
+                        seen.add(("axis", node.lineno))
+                        argsrc = ast.unparse(hit)[:60]
+                        out.append(Finding(
+                            file=rel, line=node.lineno, rule=self.id,
+                            message=(
+                                f"jitted `{name}` called in a loop with "
+                                f"unbounded size expression `{argsrc}` — "
+                                f"every distinct value compiles a new "
+                                f"variant; bound it (pow2 rounding, a "
+                                f"static set, or padding)"),
+                        ))
+        return out
+
+    def _local_assigns(self, func) -> dict:
+        """name -> last assigned RHS expression within this scope."""
+        assigns = {}
+        for node in walk_scope(func):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        assigns[tgt.id] = node.value
+        return assigns
+
+    def _unbounded_arg(self, call: ast.Call, assigns: dict, bounding):
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            hit = _contains_raw_len(arg, bounding)
+            if hit is not None:
+                return hit
+            # one-hop: the argument is a plain local assigned from an
+            # expression containing a raw len()/shape in this scope
+            if isinstance(arg, ast.Name) and arg.id in assigns:
+                hit = _contains_raw_len(assigns[arg.id], bounding)
+                if hit is not None:
+                    return hit
+        return None

@@ -1,0 +1,218 @@
+"""``schema-pin``: every schema field-set has one definition, consumed
+consistently.
+
+Figure rows, ``Report`` dicts, and the exec tier's accounting all ride
+tuple-of-string schemas (``STAT_FIELDS`` / ``SIM_FIELDS`` / ``EXEC_FIELDS``
+/ ``COUNTER_NAMES`` / ``ROW_FORMATS``).  The dynamic tests pin these per
+entry point; this checker pins them *across* the codebase so a key added
+to one copy but not another — or a consumer indexing a field that was
+renamed — fails CI without running a single figure.
+
+Rules (all statically extracted):
+
+* **duplicate-def** — a schema constant defined in several modules must be
+  byte-identical (content *and* order) everywhere.
+* **pinned-equal** — declared equivalences must hold; by default
+  ``STAT_KEYS`` (api/engine) == ``STAT_FIELDS`` (core/state), the two
+  names the engine/state layers use for the same per-query counter row.
+* **docstring-pin** — a function whose docstring cites a schema constant
+  in double backticks (the repo convention: "returns the ``SIM_FIELDS``
+  dict") must return dict literals whose string keys match the constant
+  exactly — missing, extra, and out-of-order keys are each reported.
+* **member-ref** — ``CONST.index("k")`` and schema-guarded subscripts
+  (``<x>.sim["k"]`` -> ``SIM_FIELDS``, ``<x>.counters["k"]`` ->
+  ``STAT_KEYS``/``COUNTER_NAMES``) must name a real member.
+* **to-row-ref** — string arguments of ``.to_row(...)`` calls must be
+  ``ROW_FORMATS`` keys.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.base import (
+    Finding, Project, dotted_name, register, str_elements,
+)
+
+SCHEMA_NAME_RE = re.compile(r"^[A-Z][A-Z0-9_]*(_FIELDS|_KEYS|_NAMES)$")
+# docstring citation: the constant in double backticks
+_CITE_RE = re.compile(r"``([A-Z][A-Z0-9_]*(?:_FIELDS|_KEYS|_NAMES))``")
+
+DEFAULT_PINNED_EQUAL = (("STAT_KEYS", "STAT_FIELDS"),)
+# attribute-name -> schema constants whose members the subscript key must
+# be drawn from (any match passes)
+DEFAULT_ATTR_SCHEMAS = {
+    "sim": ("SIM_FIELDS",),
+    "counters": ("STAT_KEYS", "COUNTER_NAMES", "STAT_FIELDS"),
+}
+
+
+@register
+class SchemaPinChecker:
+    id = "schema-pin"
+    description = ("schema field-set drift: duplicate definitions, "
+                   "docstring-pinned dict returns, stale member "
+                   "references, to_row keys")
+
+    def check(self, project: Project) -> list:
+        findings: list[Finding] = []
+        # ---- pass 1: collect every schema constant definition -------------
+        # name -> list of (relpath, line, tuple(values))
+        defs: dict[str, list] = {}
+        row_formats: dict[str, tuple] = {}   # relpath -> keys, for to_row
+        for sf in project.files:
+            for node in sf.tree.body:
+                if not isinstance(node, ast.Assign):
+                    continue
+                for tgt in node.targets:
+                    if not isinstance(tgt, ast.Name):
+                        continue
+                    if SCHEMA_NAME_RE.match(tgt.id):
+                        vals = str_elements(node.value)
+                        if vals is not None:
+                            defs.setdefault(tgt.id, []).append(
+                                (sf.relpath, node.lineno, tuple(vals)))
+                    elif tgt.id == "ROW_FORMATS" and isinstance(
+                            node.value, ast.Dict):
+                        keys = tuple(
+                            k.value for k in node.value.keys
+                            if isinstance(k, ast.Constant)
+                            and isinstance(k.value, str))
+                        row_formats[sf.relpath] = keys
+
+        known = {name: entries[0][2] for name, entries in defs.items()}
+        all_row_keys = set().union(*row_formats.values()) \
+            if row_formats else None
+
+        # ---- duplicate-def -------------------------------------------------
+        for name, entries in sorted(defs.items()):
+            first_file, first_line, first_vals = entries[0]
+            for relpath, line, vals in entries[1:]:
+                if vals != first_vals:
+                    findings.append(Finding(
+                        file=relpath, line=line, rule=self.id,
+                        message=(
+                            f"`{name}` here disagrees with its definition "
+                            f"at {first_file}:{first_line} "
+                            f"({self._diff(first_vals, vals)})"),
+                    ))
+
+        # ---- pinned-equal --------------------------------------------------
+        pins = tuple(project.opt(self.id, "pinned_equal",
+                                 DEFAULT_PINNED_EQUAL))
+        for a, b in pins:
+            if a in defs and b in defs:
+                fa, la, va = defs[a][0]
+                _, _, vb = defs[b][0]
+                if va != vb:
+                    findings.append(Finding(
+                        file=fa, line=la, rule=self.id,
+                        message=(f"`{a}` must stay identical to `{b}` "
+                                 f"({self._diff(vb, va)})"),
+                    ))
+
+        # ---- per-file consumer passes --------------------------------------
+        attr_schemas = dict(project.opt(self.id, "attr_schemas",
+                                        DEFAULT_ATTR_SCHEMAS))
+        for sf in project.files:
+            findings.extend(self._check_docstring_pins(sf, known))
+            findings.extend(self._check_member_refs(
+                sf, known, attr_schemas, all_row_keys))
+        return findings
+
+    # ------------------------------------------------------------------ ---
+    @staticmethod
+    def _diff(expect, got) -> str:
+        missing = [k for k in expect if k not in got]
+        extra = [k for k in got if k not in expect]
+        if missing or extra:
+            bits = []
+            if missing:
+                bits.append(f"missing: {missing}")
+            if extra:
+                bits.append(f"extra: {extra}")
+            return "; ".join(bits)
+        return f"reordered: {list(got)} vs {list(expect)}"
+
+    def _check_docstring_pins(self, sf, known: dict) -> list:
+        out = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            doc = ast.get_docstring(node) or ""
+            cited = [name for name in _CITE_RE.findall(doc) if name in known]
+            if not cited:
+                continue
+            schema = known[cited[0]]     # first citation is the contract
+            for ret in ast.walk(node):
+                if not isinstance(ret, ast.Return) \
+                        or not isinstance(ret.value, ast.Dict):
+                    continue
+                keys = [k.value for k in ret.value.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)]
+                if len(keys) != len(ret.value.keys) or len(keys) < 3:
+                    continue             # dynamic or trivial dict: skip
+                if tuple(keys) != schema:
+                    out.append(Finding(
+                        file=sf.relpath, line=ret.lineno, rule=self.id,
+                        message=(
+                            f"returned dict drifts from docstring-pinned "
+                            f"`{cited[0]}` ({self._diff(schema, keys)})"),
+                    ))
+        return out
+
+    def _check_member_refs(self, sf, known: dict, attr_schemas: dict,
+                           all_row_keys) -> list:
+        out = []
+        for node in ast.walk(sf.tree):
+            # CONST.index("k")
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "index" \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id in known \
+                    and node.args \
+                    and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, str):
+                name = node.func.value.id
+                key = node.args[0].value
+                if key not in known[name]:
+                    out.append(Finding(
+                        file=sf.relpath, line=node.lineno, rule=self.id,
+                        message=(f"`{name}.index({key!r})`: {key!r} is not "
+                                 f"a member of `{name}`"),
+                    ))
+            # <x>.attr["k"] guarded subscripts
+            elif isinstance(node, ast.Subscript) \
+                    and isinstance(node.value, ast.Attribute) \
+                    and node.value.attr in attr_schemas \
+                    and isinstance(node.slice, ast.Constant) \
+                    and isinstance(node.slice.value, str):
+                key = node.slice.value
+                allowed = [c for c in attr_schemas[node.value.attr]
+                           if c in known]
+                if allowed and not any(key in known[c] for c in allowed):
+                    out.append(Finding(
+                        file=sf.relpath, line=node.lineno, rule=self.id,
+                        message=(
+                            f"`.{node.value.attr}[{key!r}]`: {key!r} is in "
+                            f"none of the pinned schema(s) "
+                            f"{', '.join(allowed)}"),
+                    ))
+            # .to_row("field", ...)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "to_row" \
+                    and all_row_keys is not None:
+                for arg in node.args:
+                    if isinstance(arg, ast.Constant) \
+                            and isinstance(arg.value, str) \
+                            and arg.value not in all_row_keys:
+                        out.append(Finding(
+                            file=sf.relpath, line=node.lineno, rule=self.id,
+                            message=(f"`.to_row({arg.value!r})`: not a "
+                                     f"`ROW_FORMATS` key"),
+                        ))
+        return out

@@ -1,0 +1,107 @@
+"""``units-suffix``: no cross-unit arithmetic between suffixed names.
+
+The cost models (``io_sim/disk.py``) and the event simulator (``cluster/``)
+carry units in identifier suffixes — ``_s`` / ``_ms`` / ``_us`` seconds,
+``_bytes`` / ``_gbps`` sizes and bandwidths, ``_qps`` rates.  The
+convention only protects you if it is enforced: ``t_s + dt_us`` type-checks
+fine and is silently wrong by 10^6, the classic cost-model bug that no
+parity test catches because both sides of the comparison make it.
+
+The checker flags ``+`` / ``-`` and comparisons whose *both* operands have
+a known, different unit suffix.  A multiplied/derived operand (``x_us *
+1e-6``) has unknown unit and is skipped — conversion is exactly a
+multiplication, so the rule never fires on correct conversions; it only
+fires when two raw names of different units meet directly.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Finding, Project, register
+
+# suffix -> unit dimension; names sharing a *suffix* are compatible,
+# names with different suffixes are not (even within a dimension: _s+_ms
+# is exactly the bug)
+UNIT_SUFFIXES = ("_s", "_ms", "_us", "_ns", "_bytes", "_kb", "_mb", "_gb",
+                 "_qps", "_hz", "_gbps")
+DEFAULT_PATHS = ("cluster", "io_sim")
+# names that end in a unit suffix but are not quantities of that unit
+DEFAULT_EXEMPT = ("times_s",)    # an *array* of times; arithmetic is mapped
+
+
+def _unit_of(node) -> "str | None":
+    """Unit suffix of a bare Name/Attribute operand, else None."""
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    else:
+        return None
+    for suffix in UNIT_SUFFIXES:
+        if name.endswith(suffix):
+            return suffix
+    return None
+
+
+@register
+class UnitsSuffixChecker:
+    id = "units-suffix"
+    description = ("additive/comparison arithmetic mixing differently "
+                   "unit-suffixed names (_s/_ms/_us/_bytes/_qps/...) in "
+                   "cost-model code")
+
+    def check(self, project: Project) -> list:
+        paths = tuple(project.opt(self.id, "paths", DEFAULT_PATHS))
+        exempt = set(project.opt(self.id, "exempt", DEFAULT_EXEMPT))
+        findings: list[Finding] = []
+        for sf in project.files:
+            norm = sf.relpath.replace("\\", "/")
+            if paths and not any(p in norm for p in paths):
+                continue
+            findings.extend(self._check_file(sf, exempt))
+        return findings
+
+    def _check_file(self, sf, exempt) -> list:
+        out = []
+
+        def name_of(node):
+            if isinstance(node, ast.Name):
+                return node.id
+            if isinstance(node, ast.Attribute):
+                return node.attr
+            return None
+
+        def unit(node):
+            if name_of(node) in exempt:
+                return None
+            return _unit_of(node)
+
+        def flag(node, left, right, op):
+            out.append(Finding(
+                file=sf.relpath, line=node.lineno, rule=self.id,
+                message=(
+                    f"`{name_of(left)}` ({unit(left)}) {op} "
+                    f"`{name_of(right)}` ({unit(right)}) mixes units — "
+                    f"convert one side explicitly"),
+            ))
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, (ast.Add, ast.Sub)):
+                lu, ru = unit(node.left), unit(node.right)
+                if lu and ru and lu != ru:
+                    op = "+" if isinstance(node.op, ast.Add) else "-"
+                    flag(node, node.left, node.right, op)
+            elif isinstance(node, ast.Compare) \
+                    and len(node.comparators) == 1:
+                lu, ru = unit(node.left), unit(node.comparators[0])
+                if lu and ru and lu != ru:
+                    flag(node, node.left, node.comparators[0], "vs")
+            elif isinstance(node, ast.Assign) \
+                    and len(node.targets) == 1:
+                # direct rebind: x_s = y_ms (no conversion at all)
+                lu, ru = unit(node.targets[0]), unit(node.value)
+                if lu and ru and lu != ru:
+                    flag(node, node.targets[0], node.value, "=")
+        return out

@@ -52,6 +52,8 @@ import queue as _queue
 import threading
 import time
 
+from repro.serve_async import sanitize
+
 _HANDOFF, _ADMIT = "handoff", "admit"
 
 COUNTER_NAMES = ("wire_frames", "wire_batons", "wire_bytes",
@@ -67,7 +69,8 @@ class ThreadInbox:
     """Condition-variable inbox for thread-mode workers."""
 
     def __init__(self, slots: int, admit_headroom: int, queue_cap: int):
-        self._cv = threading.Condition()
+        # under REPRO_SANITIZE=1 every acquire boundary gets seeded jitter
+        self._cv = sanitize.maybe_wrap(threading.Condition())
         self._handoffs: collections.deque = collections.deque()
         self._admits: collections.deque = collections.deque()
         self._usable = _usable(slots, admit_headroom)

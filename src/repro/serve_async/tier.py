@@ -40,7 +40,7 @@ import time
 import numpy as np
 
 from repro.core.state import STAT_FIELDS, envelope_bytes
-from repro.serve_async import queues, runtime, wire
+from repro.serve_async import queues, runtime, sanitize, wire
 from repro.serve_async import worker as worker_mod
 
 INTER_HOPS_COL = STAT_FIELDS.index("inter_hops")
@@ -194,6 +194,10 @@ class AsyncServingTier:
                 )
                 proc.start()
                 self._workers.append(proc)
+        # close() may race between the user thread and __exit__/atexit
+        # paths; the lock makes the closed check-then-act atomic so stop()
+        # and join() run exactly once.
+        self._close_lock = threading.Lock()
         self._closed = False
 
     def _shard_arrays(self, part: int, sector_codes: bool) -> dict:
@@ -350,7 +354,7 @@ class AsyncServingTier:
             after = ib.counter_snapshot()
             for name in totals:
                 totals[name] += after[name] - before[name]
-        return ExecRunResult(
+        result = ExecRunResult(
             ids=ids, dists=dists, stats=stats, latencies_s=latencies,
             arrive_s=arrive, done_s=done_s, trace_idx=trace_idx,
             accepted=accepted, offered=n, completed=target_done,
@@ -364,6 +368,9 @@ class AsyncServingTier:
             wire_batons=totals["wire_batons"],
             wire_bytes=totals["wire_bytes"],
         )
+        if sanitize.enabled():
+            sanitize.check_invariants(result, self._inboxes)
+        return result
 
     def search(self, queries: np.ndarray) -> ExecRunResult:
         """Closed-loop batch search — answers bit-identical to
@@ -393,9 +400,10 @@ class AsyncServingTier:
 
     # -------------------------------------------------------------- admin --
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         for inbox in self._inboxes:
             inbox.stop()
         for w in self._workers:

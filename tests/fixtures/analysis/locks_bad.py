@@ -1,0 +1,35 @@
+"""Planted lock-discipline violations: an unlocked counter increment in a
+lock-owning class, and a lock-order cycle between two locks of one
+class."""
+
+import threading
+
+
+class RacyCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        self.count += 1                    # PLANT: write outside the lock
+
+    def bump_locked(self):
+        with self._lock:
+            self.count += 1
+
+
+class Deadlocker:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.state = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:                  # order: a -> b
+                self.state = 1
+
+    def backward(self):
+        with self._b:
+            with self._a:                  # PLANT: order b -> a (cycle)
+                self.state = 2

@@ -1,0 +1,32 @@
+"""Clean twin of ``locks_bad.py``: every shared write under the owning
+lock, one global acquisition order.  Must produce zero lock-discipline
+findings."""
+
+import threading
+
+
+class SafeCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+
+class Ordered:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.state = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                self.state = 1
+
+    def also_forward(self):
+        with self._a:
+            with self._b:
+                self.state = 2

@@ -1,0 +1,43 @@
+"""Planted jit-purity violations (tests/test_analysis.py pins the lines).
+
+Every hazard lives inside code reachable from a jit boundary: a timestamp
+read and an unseeded draw directly in a ``@jax.jit`` def, a ``print`` in a
+helper the jitted function calls, a ``global`` mutation plus a ``.item()``
+device sync in a ``while_loop`` body.
+"""
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CALLS = 0
+
+
+def _log_progress(x):
+    print("scoring", x)                   # PLANT: print in traced helper
+    return x
+
+
+@jax.jit
+def scores(x):
+    t0 = time.perf_counter()              # PLANT: time.* inside @jax.jit
+    noise = random.random()               # PLANT: unseeded random
+    return _log_progress(x) * noise + t0
+
+
+def drive(x):
+    def cond(c):
+        return c[1] < 3
+
+    def body(c):
+        global _CALLS                     # PLANT: global mutation in body
+        _CALLS += 1
+        s, it = c
+        peek = s[0].item()                # PLANT: device sync in hot loop
+        host = np.asarray(s)              # PLANT: host round trip
+        return s * peek + host.shape[0], it + 1
+
+    return jax.lax.while_loop(cond, body, (x, jnp.int32(0)))

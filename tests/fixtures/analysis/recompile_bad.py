@@ -1,0 +1,24 @@
+"""Planted recompile hazards: a jitted callee fed a raw ``len()``-derived
+axis inside a loop, and a jit wrapper created per iteration."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def score_batch(xs):
+    return jnp.sum(xs, axis=-1)
+
+
+def _double(x):
+    return x * 2
+
+
+def serve(chunks):
+    out = []
+    for chunk in chunks:
+        xs = jnp.zeros((len(chunk), 4))   # PLANT: shape varies per call
+        out.append(score_batch(xs))
+        f = jax.jit(_double)              # PLANT: jit created in loop
+        out.append(f(xs))
+    return out

@@ -1,0 +1,16 @@
+"""Planted schema-pin violations: a docstring-pinned dict return that
+drifted, a stale ``.index`` member reference, and a duplicate definition
+that disagrees with the original."""
+
+DEMO_FIELDS = ("alpha", "beta", "gamma")
+
+STALE_COL = DEMO_FIELDS.index("delta")     # PLANT: not a member
+
+
+def summarize():
+    """Build the row (exactly ``DEMO_FIELDS`` keys)."""
+    return {
+        "alpha": 1,
+        "gamma": 3,                        # PLANT: "beta" missing ...
+        "delta": 4,                        # PLANT: ... "delta" extra
+    }

@@ -1,0 +1,4 @@
+"""Second copy of ``DEMO_FIELDS`` that drifted from ``schema_bad.py`` —
+the duplicate-definition half of the planted schema violations."""
+
+DEMO_FIELDS = ("alpha", "beta")            # PLANT: "gamma" dropped here

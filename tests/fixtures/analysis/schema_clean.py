@@ -1,0 +1,16 @@
+"""Clean twin of ``schema_bad.py``: the docstring-pinned return matches
+the schema exactly (content and order) and every member reference is
+real.  Must produce zero schema-pin findings."""
+
+CLEAN_FIELDS = ("alpha", "beta", "gamma")
+
+BETA_COL = CLEAN_FIELDS.index("beta")
+
+
+def summarize():
+    """Build the row (exactly ``CLEAN_FIELDS`` keys)."""
+    return {
+        "alpha": 1,
+        "beta": 2,
+        "gamma": 3,
+    }

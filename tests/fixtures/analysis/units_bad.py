@@ -1,0 +1,15 @@
+"""Planted units-suffix violations: seconds added to microseconds, bytes
+compared against a rate, a raw cross-unit rebind."""
+
+
+def total_latency(queue_s, service_us):
+    return queue_s + service_us            # PLANT: _s + _us
+
+
+def overloaded(backlog_bytes, rate_qps):
+    return backlog_bytes > rate_qps        # PLANT: _bytes vs _qps
+
+
+def rebind(window_ms):
+    window_s = window_ms                   # PLANT: _s = _ms, no conversion
+    return window_s

@@ -1,0 +1,18 @@
+"""Clean twin of ``units_bad.py``: every cross-unit move goes through an
+explicit multiplicative conversion, so no two differently-suffixed names
+ever meet in a ``+``/``-``/comparison.  Must produce zero units-suffix
+findings."""
+
+
+def total_latency(queue_s, service_us):
+    return queue_s + service_us * 1e-6
+
+
+def backlog_drain_s(backlog_bytes, rate_qps, bytes_per_query):
+    queries = backlog_bytes / bytes_per_query
+    return queries / rate_qps
+
+
+def rebind(window_ms):
+    window_s = window_ms * 1e-3
+    return window_s

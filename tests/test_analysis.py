@@ -1,0 +1,250 @@
+"""Self-tests for the invariant static-analysis suite (repro.analysis).
+
+Each checker must fire on its planted fixture violation at exactly the
+expected lines, and stay silent on the clean twin.  Fixtures live in
+tests/fixtures/analysis/ with ``# PLANT:`` comments marking every
+violation.  Also covers the waiver baseline, the parse-error path, and
+the schema stability of tools/analyze.py's JSON report.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import Baseline, Finding, Project, checker_ids, \
+    run_checkers
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "fixtures", "analysis")
+
+# checkers scoped to concurrency / cost-model modules by default need to
+# be aimed at the fixture directory explicitly
+FIXTURE_OPTS = {
+    "lock-discipline": {"paths": ["fixtures/analysis"]},
+    "units-suffix": {"paths": ["fixtures/analysis"]},
+}
+
+
+def run(names, rules=None, options=FIXTURE_OPTS):
+    paths = [os.path.join(FIXTURES, n) for n in names]
+    project = Project(paths, repo_root=REPO, options=options)
+    return run_checkers(project, only=rules)
+
+
+def lines(findings, rule):
+    return sorted(f.line for f in findings if f.rule == rule)
+
+
+def rel(name):
+    return os.path.join("tests", "fixtures", "analysis", name)
+
+
+# -------------------------------------------------------------------------
+# one test per checker: plants fire at the expected lines, twin is silent
+# -------------------------------------------------------------------------
+
+def test_jit_purity_fires_on_plants():
+    found = run(["purity_bad.py"], rules=["jit-purity"])
+    assert lines(found, "jit-purity") == [20, 26, 27, 36, 39, 40]
+    msgs = "\n".join(f.message for f in found)
+    assert "print" in msgs                 # reachable helper side effect
+    assert "time.perf_counter" in msgs
+    assert "random.random" in msgs
+    assert "global" in msgs
+    assert ".item()" in msgs
+    assert "np.asarray" in msgs
+    assert all(f.file == rel("purity_bad.py") for f in found)
+
+
+def test_jit_purity_silent_on_clean_twin():
+    assert run(["purity_clean.py"], rules=["jit-purity"]) == []
+
+
+def test_recompile_hazard_fires_on_plants():
+    found = run(["recompile_bad.py"], rules=["recompile-hazard"])
+    assert lines(found, "recompile-hazard") == [21, 22]
+    msgs = "\n".join(f.message for f in found)
+    assert "len(chunk)" in msgs            # unbounded axis at the call site
+    assert "hoist the jax.jit" in msgs     # wrapper built per iteration
+
+
+def test_recompile_hazard_silent_on_clean_twin():
+    # the pow2-bounded twin is exactly worker.py's warmup discipline
+    assert run(["recompile_clean.py"], rules=["recompile-hazard"]) == []
+
+
+def test_schema_pin_fires_on_plants():
+    found = run(["schema_bad.py", "schema_bad_dup.py"],
+                rules=["schema-pin"])
+    by_file = {}
+    for f in found:
+        by_file.setdefault(os.path.basename(f.file), []).append(f)
+    assert lines(by_file["schema_bad.py"], "schema-pin") == [7, 12]
+    assert lines(by_file["schema_bad_dup.py"], "schema-pin") == [4]
+    msgs = "\n".join(f.message for f in found)
+    assert "'delta' is not a member" in msgs
+    assert "drifts from docstring-pinned `DEMO_FIELDS`" in msgs
+    assert "disagrees with its definition" in msgs
+
+
+def test_schema_pin_silent_on_clean_twin():
+    assert run(["schema_clean.py"], rules=["schema-pin"]) == []
+
+
+def test_lock_discipline_fires_on_plants():
+    found = run(["locks_bad.py"], rules=["lock-discipline"])
+    assert lines(found, "lock-discipline") == [14, 34]
+    msgs = "\n".join(f.message for f in found)
+    assert "outside any `with self.<lock>` scope" in msgs
+    assert "lock-order cycle" in msgs
+    # one finding per cycle, not one per rotation
+    assert msgs.count("lock-order cycle") == 1
+
+
+def test_lock_discipline_silent_on_clean_twin():
+    assert run(["locks_clean.py"], rules=["lock-discipline"]) == []
+
+
+def test_lock_discipline_respects_path_scope():
+    # without the fixture path option the checker must skip these files
+    assert run(["locks_bad.py"], rules=["lock-discipline"],
+               options={}) == []
+
+
+def test_units_suffix_fires_on_plants():
+    found = run(["units_bad.py"], rules=["units-suffix"])
+    assert lines(found, "units-suffix") == [6, 10, 14]
+    msgs = "\n".join(f.message for f in found)
+    assert "`queue_s` (_s) + `service_us` (_us)" in msgs
+    assert "`backlog_bytes` (_bytes) vs `rate_qps` (_qps)" in msgs
+    assert "`window_s` (_s) = `window_ms` (_ms)" in msgs
+
+
+def test_units_suffix_silent_on_clean_twin():
+    # multiplicative conversions make operands non-bare, so they never
+    # count as unit-suffixed names meeting in an add/compare
+    assert run(["units_clean.py"], rules=["units-suffix"]) == []
+
+
+# -------------------------------------------------------------------------
+# framework: registry, parse errors, waiver baseline
+# -------------------------------------------------------------------------
+
+def test_all_five_checkers_registered():
+    ids = checker_ids()
+    for expected in ("jit-purity", "recompile-hazard", "schema-pin",
+                     "lock-discipline", "units-suffix"):
+        assert expected in ids
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    project = Project([str(bad)], repo_root=str(tmp_path))
+    found = run_checkers(project)
+    assert [f.rule for f in found] == ["parse-error"]
+    assert found[0].file == "broken.py"
+
+
+def test_fingerprint_ignores_line_numbers():
+    a = Finding(file="x.py", line=10, rule="r", message="m")
+    b = Finding(file="x.py", line=99, rule="r", message="m")
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_baseline_waives_by_rule_file_and_match():
+    found = run(["units_bad.py"], rules=["units-suffix"])
+    baseline = Baseline([{
+        "rule": "units-suffix",
+        "file": rel("units_bad.py"),
+        "match": "`queue_s` (_s) + `service_us` (_us)",
+        "why": "fixture plant, waived in this test only",
+    }])
+    active, waived = baseline.split(found)
+    assert len(waived) == 1 and waived[0].line == 6
+    assert lines(active, "units-suffix") == [10, 14]
+
+
+def test_baseline_entry_requires_why():
+    with pytest.raises(ValueError, match="why"):
+        Baseline([{"rule": "r", "file": "f", "match": "m"}])
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    baseline = Baseline.load(str(tmp_path / "nope.json"))
+    assert baseline.waivers == []
+
+
+# -------------------------------------------------------------------------
+# tools/analyze.py CLI: JSON schema stability and exit codes
+# -------------------------------------------------------------------------
+
+def _analyze(*argv):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "analyze.py"), *argv],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_cli_json_schema_and_nonzero_exit_on_findings():
+    proc = _analyze("--json", "--no-baseline",
+                    os.path.join(FIXTURES, "units_bad.py"),
+                    "--rules", "units-suffix",
+                    "--opt", "units-suffix.paths=fixtures/analysis")
+    assert proc.returncode == 1, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["version"] == 1
+    assert report["rules"] == ["units-suffix"]
+    assert report["counts"] == {"total": 3, "waived": 0, "active": 3}
+    for f in report["findings"]:
+        assert set(f) == {"file", "line", "rule", "message", "severity",
+                          "waived"}
+        assert f["waived"] is False
+
+
+def test_cli_exit_zero_on_clean_file():
+    proc = _analyze("--json", "--no-baseline",
+                    os.path.join(FIXTURES, "units_clean.py"),
+                    "--rules", "units-suffix",
+                    "--opt", "units-suffix.paths=fixtures/analysis")
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["counts"]["active"] == 0
+
+
+def test_cli_baseline_waives_and_flips_exit_code(tmp_path):
+    waiver = {"waivers": [
+        {"rule": "units-suffix", "file": rel(n), "match": "mixes units",
+         "why": "fixture plants"} for n in ["units_bad.py"]
+    ]}
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps(waiver))
+    proc = _analyze("--json", "--baseline", str(path),
+                    os.path.join(FIXTURES, "units_bad.py"),
+                    "--rules", "units-suffix",
+                    "--opt", "units-suffix.paths=fixtures/analysis")
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["counts"] == {"total": 3, "waived": 3, "active": 0}
+
+
+def test_cli_list_rules():
+    proc = _analyze("--list-rules")
+    assert proc.returncode == 0
+    for expected in checker_ids():
+        assert expected in proc.stdout
+
+
+# -------------------------------------------------------------------------
+# the real gate: the repo's own src/ tree must analyze clean
+# -------------------------------------------------------------------------
+
+def test_repo_src_has_no_active_findings():
+    proc = _analyze(os.path.join(REPO, "src"))
+    assert proc.returncode == 0, (
+        "tools/analyze.py found non-waived findings in src/ — fix them or "
+        "waive with a justification:\n" + proc.stdout + proc.stderr)

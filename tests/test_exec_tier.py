@@ -526,6 +526,39 @@ def test_exec_spec_batch_validation_and_run_exec(baton_index, dataset):
     assert out["wire_batons"] + out["local_handoffs"] == out["handoffs"]
 
 
+# ---------------------------------------------------------------------------
+# ISSUE-9: close() is atomic under concurrent callers (the lock-discipline
+# finding the static analyzer surfaced: unguarded check-then-act on _closed)
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_close_runs_teardown_once(baton_index, exec_cfg,
+                                             monkeypatch):
+    import threading
+
+    tier = AsyncServingTier(baton_index, exec_cfg, n_workers=2)
+    stops = []
+    orig_stop = ThreadInbox.stop
+
+    def counting_stop(self):
+        stops.append(self)
+        return orig_stop(self)
+
+    monkeypatch.setattr(ThreadInbox, "stop", counting_stop)
+    threads = [threading.Thread(target=tier.close) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # exactly one closer won the race: each inbox stopped once, not 8x
+    assert len(stops) == len(tier._inboxes)
+    assert all(not w.is_alive() for w in tier._workers)
+    tier.close()                               # idempotent afterwards
+    assert len(stops) == len(tier._inboxes)
+    with pytest.raises(RuntimeError, match="closed"):
+        tier.search(np.zeros((1, baton_index.dim), np.float32))
+
+
 def test_fig21_and_advbatch_suites_registered():
     from benchmarks import bench_kernels, figures
     from benchmarks.run import SUITES

@@ -1,0 +1,184 @@
+"""Interleaving sanitizer (repro.serve_async.sanitize).
+
+Three layers:
+
+* unit semantics — env gating, deterministic per-(seed, thread) jitter,
+  the Condition wrapper delegating real locking, invariant checks on
+  synthetic results;
+* a fast sanitized smoke run — one tier run under REPRO_SANITIZE=1 keeps
+  bit-parity with the engine and passes the conservation checks;
+* the slow soak — (workers=4, batch=8, thread) under three seeds, plus
+  the detector test: a deliberately broken inbox (the release lock
+  removed) must make the sanitizer raise.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import baton
+from repro.core.state import STAT_FIELDS
+from repro.serve_async import AsyncServingTier, sanitize
+from repro.serve_async.queues import ThreadInbox
+
+
+@pytest.fixture(scope="module")
+def exec_cfg():
+    return baton.BatonParams(L=32, W=4, k=10, pool=128, slots=8)
+
+
+@pytest.fixture(scope="module")
+def engine_result(baton_index, dataset, exec_cfg):
+    return baton.run_simulated(baton_index, dataset.queries, exec_cfg)
+
+
+@pytest.fixture()
+def sanitized(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_FLAG, "1")
+    monkeypatch.setenv(sanitize.ENV_SEED, "0")
+
+
+# -------------------------------------------------------------------------
+# unit semantics
+# -------------------------------------------------------------------------
+
+def test_disabled_by_default(monkeypatch):
+    monkeypatch.delenv(sanitize.ENV_FLAG, raising=False)
+    assert not sanitize.enabled()
+    cv = threading.Condition()
+    assert sanitize.maybe_wrap(cv) is cv     # zero-cost when off
+    monkeypatch.setenv(sanitize.ENV_FLAG, "0")
+    assert not sanitize.enabled()
+    monkeypatch.setenv(sanitize.ENV_FLAG, "1")
+    assert sanitize.enabled()
+    assert isinstance(sanitize.maybe_wrap(cv), sanitize.SanitizedCondition)
+
+
+def test_jitter_is_deterministic_per_seed_and_thread(sanitized):
+    def draws(seed, name):
+        rng_a = __import__("random").Random(f"{seed}:{name}")
+        return [rng_a.random() for _ in range(4)]
+
+    assert draws(0, "w0") == draws(0, "w0")
+    assert draws(0, "w0") != draws(1, "w0")
+    assert draws(0, "w0") != draws(0, "w1")
+
+
+def test_wrapped_condition_still_locks(sanitized):
+    ib = ThreadInbox(slots=8, admit_headroom=2, queue_cap=16)
+    assert isinstance(ib._cv, sanitize.SanitizedCondition)
+    assert ib.offer_admit("x")
+    assert ib.get_many(4) == [("admit", "x")]
+    ib.release()
+    assert ib.resident == 0
+    ib.stop()
+    assert ib.get_many(4) is None            # stop + wait path works wrapped
+
+
+def _fake_result(offered=10, completed=10, rejected=0, handoffs=6,
+                 wire_batons=4, local_handoffs=2):
+    class R:
+        pass
+
+    r = R()
+    r.offered, r.completed = offered, completed
+    r.rejected = rejected
+    r.handoffs = handoffs
+    r.wire_batons, r.local_handoffs = wire_batons, local_handoffs
+    return r
+
+
+class _FakeInbox:
+    def __init__(self, resident):
+        self.resident = resident
+
+
+def test_check_invariants_passes_on_conserved_run():
+    sanitize.check_invariants(_fake_result(), [_FakeInbox(0), _FakeInbox(0)])
+
+
+def test_check_invariants_catches_lost_arrival():
+    with pytest.raises(RuntimeError, match="arrival conservation"):
+        sanitize.check_invariants(_fake_result(completed=9),
+                                  [_FakeInbox(0)])
+
+
+def test_check_invariants_catches_handoff_drift():
+    with pytest.raises(RuntimeError, match="hand-off conservation"):
+        sanitize.check_invariants(_fake_result(wire_batons=3),
+                                  [_FakeInbox(0)])
+
+
+def test_check_invariants_catches_resident_drift(monkeypatch):
+    monkeypatch.setattr(sanitize, "_QUIESCE_WAIT_S", 0.05)
+    with pytest.raises(RuntimeError, match="quiescence"):
+        sanitize.check_invariants(_fake_result(),
+                                  [_FakeInbox(0), _FakeInbox(2)])
+
+
+# -------------------------------------------------------------------------
+# sanitized tier runs
+# -------------------------------------------------------------------------
+
+def test_sanitized_run_keeps_parity(sanitized, baton_index, dataset,
+                                    exec_cfg, engine_result):
+    ids_e, dists_e, _ = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=2,
+                          batch=4) as tier:
+        assert isinstance(tier._inboxes[0]._cv, sanitize.SanitizedCondition)
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    assert res.offered == res.completed + res.rejected
+    assert res.handoffs == res.wire_batons + res.local_handoffs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sanitizer_soak(monkeypatch, baton_index, dataset, exec_cfg,
+                        engine_result, seed):
+    """The ISSUE-9 soak: (workers=4, batch=8, thread) per seed — bit-parity
+    with the engine plus conservation, on a perturbed schedule."""
+    monkeypatch.setenv(sanitize.ENV_FLAG, "1")
+    monkeypatch.setenv(sanitize.ENV_SEED, str(seed))
+    ids_e, dists_e, stats_e = engine_result
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=4,
+                          batch=8) as tier:
+        res = tier.search(dataset.queries)
+    assert np.array_equal(res.ids, ids_e)
+    assert np.array_equal(res.dists, dists_e)
+    got = res.stats_dict()
+    for f in STAT_FIELDS:
+        assert np.array_equal(got[f], stats_e[f]), f
+    assert res.offered == res.completed + res.rejected
+    assert res.handoffs == res.wire_batons + res.local_handoffs
+    assert res.handoffs > 0
+
+
+# -------------------------------------------------------------------------
+# the detector test: a planted lost-update race must be caught
+# -------------------------------------------------------------------------
+
+def test_sanitizer_catches_unlocked_release(sanitized, monkeypatch,
+                                            baton_index, dataset, exec_cfg):
+    """Strip the lock from ThreadInbox.release — the exact bug class the
+    lock-discipline checker rejects statically.  Concurrent workers then
+    lose resident updates; the run must fail, either as drift the
+    quiescence check catches or as a stall from a wedged admission gate."""
+
+    def racy_release(self):
+        snapshot = self.resident          # unlocked read-modify-write,
+        time.sleep(2e-4)                  # window widened so the race is
+        self.resident = snapshot - 1      # near-certain, not just possible
+
+    monkeypatch.setattr(ThreadInbox, "release", racy_release)
+    monkeypatch.setattr(sanitize, "_QUIESCE_WAIT_S", 0.2)
+    with AsyncServingTier(baton_index, exec_cfg, n_workers=4,
+                          batch=8) as tier:
+        with pytest.raises(RuntimeError,
+                           match="sanitizer|stalled"):
+            tier.run(dataset.queries,
+                     trace_idx=np.arange(200) % len(dataset.queries),
+                     drain_timeout_s=3.0)

@@ -1,0 +1,120 @@
+"""Run the ``repro.analysis`` invariant checkers over the repo.
+
+    PYTHONPATH=src python tools/analyze.py [paths ...]        # default: src/
+    PYTHONPATH=src python tools/analyze.py --json src
+    PYTHONPATH=src python tools/analyze.py --list-rules
+    PYTHONPATH=src python tools/analyze.py --rules schema-pin,units-suffix src
+
+Exit code 1 iff any finding is not waived by the committed baseline
+(``tools/analysis_baseline.json`` — see docs/ANALYSIS.md for the waiver
+workflow: every entry needs a one-line ``why``).  ``--json`` emits the
+schema-stable report (``version`` / ``rules`` / ``findings`` / ``counts``)
+on stdout for CI and tooling; human-readable ``file:line [rule] message``
+lines otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro import analysis  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(ROOT, "tools", "analysis_baseline.json")
+
+# JSON report schema version — pinned by tests/test_analysis.py; bump only
+# with a deliberate consumer migration.
+REPORT_VERSION = 1
+
+
+def build_report(roots, rules=None, baseline_path=DEFAULT_BASELINE,
+                 repo_root=ROOT, options=None) -> dict:
+    """The schema-stable analysis report (also the library entry point the
+    bench row and the self-tests share with the CLI)."""
+    project = analysis.Project(roots, repo_root=repo_root, options=options)
+    findings = analysis.run_checkers(project, only=rules)
+    baseline = analysis.Baseline.load(baseline_path)
+    active, waived = baseline.split(findings)
+    return {
+        "version": REPORT_VERSION,
+        "roots": [os.path.relpath(os.path.abspath(r), repo_root)
+                  for r in roots],
+        "rules": rules if rules is not None else analysis.checker_ids(),
+        "findings": [
+            {**f.to_dict(), "waived": baseline.is_waived(f)}
+            for f in findings
+        ],
+        "counts": {
+            "total": len(findings),
+            "waived": len(waived),
+            "active": len(active),
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="invariant static-analysis suite (docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to analyze (default: src/)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the JSON report instead of text lines")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated checker ids (default: all)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="waiver baseline file (default: "
+                         "tools/analysis_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the waiver baseline (report everything "
+                         "as active)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered checker ids and exit")
+    ap.add_argument("--opt", action="append", default=[],
+                    metavar="RULE.KEY=V1[,V2...]",
+                    help="per-checker option override, e.g. "
+                         "--opt units-suffix.paths=tests/fixtures "
+                         "(repeatable; values are comma-split lists)")
+    args = ap.parse_args()
+
+    options: dict = {}
+    for spec in args.opt:
+        head, _, value = spec.partition("=")
+        rule, _, key = head.partition(".")
+        if not (rule and key and value):
+            ap.error(f"--opt expects RULE.KEY=V1[,V2...], got {spec!r}")
+        options.setdefault(rule, {})[key] = value.split(",")
+
+    if args.list_rules:
+        for checker in analysis.get_checkers():
+            print(f"{checker.id}: {checker.description}")
+        return 0
+
+    roots = args.paths or [os.path.join(ROOT, "src")]
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             or None)
+    baseline_path = None if args.no_baseline else args.baseline
+    report = build_report(roots, rules=rules, baseline_path=baseline_path,
+                          options=options)
+
+    if args.json:
+        json.dump(report, sys.stdout, indent=2, sort_keys=True)
+        sys.stdout.write("\n")
+    else:
+        for f in report["findings"]:
+            tag = " (waived)" if f["waived"] else ""
+            sev = "" if f["severity"] == "error" else f" {f['severity']}:"
+            print(f"{f['file']}:{f['line']} [{f['rule']}]{sev} "
+                  f"{f['message']}{tag}")
+        c = report["counts"]
+        print(f"{c['total']} finding(s): {c['active']} active, "
+              f"{c['waived']} waived")
+    return 1 if report["counts"]["active"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """Docs-as-tests: keep the documentation executable and complete.
 
-Two checks (both run by default; select with flags):
+Three checks (all run by default; select with flags):
 
 * ``--snippet`` — extract the README quickstart's ```python fence and
   ``exec`` it **verbatim**.  The snippet is written at smoke scale, so CI
@@ -9,8 +9,12 @@ Two checks (both run by default; select with flags):
 * ``--paper-map`` — every benchmark suite tag (``benchmarks/run.py
   --list``) must appear in ``docs/PAPER_MAP.md``, so the paper-to-code map
   can never silently fall behind the harness.
+* ``--analysis`` — every registered static-analysis checker id
+  (``tools/analyze.py --list-rules``) must appear as a rule-catalog entry
+  in ``docs/ANALYSIS.md``, so a new checker ships with its documentation.
 
     PYTHONPATH=src python tools/check_docs.py [--snippet] [--paper-map]
+                                              [--analysis]
 
 Exit code 1 on any failure.
 """
@@ -59,16 +63,33 @@ def check_paper_map() -> None:
     print(f"-- PAPER_MAP covers all {len(SUITES)} bench suites --")
 
 
+def check_analysis() -> None:
+    from repro.analysis import checker_ids
+
+    with open(os.path.join(ROOT, "docs", "ANALYSIS.md")) as f:
+        doc = f.read()
+    missing = [cid for cid in checker_ids() if f"`{cid}`" not in doc]
+    if missing:
+        raise SystemExit(
+            f"docs/ANALYSIS.md does not document checker(s): {missing} — "
+            f"add a rule-catalog entry per tools/analyze.py --list-rules id")
+    print(f"-- ANALYSIS.md covers all {len(checker_ids())} checkers --")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--snippet", action="store_true",
                     help="run only the README snippet check")
     ap.add_argument("--paper-map", action="store_true",
                     help="run only the PAPER_MAP coverage check")
+    ap.add_argument("--analysis", action="store_true",
+                    help="run only the ANALYSIS.md rule-catalog check")
     args = ap.parse_args()
-    run_all = not (args.snippet or args.paper_map)
+    run_all = not (args.snippet or args.paper_map or args.analysis)
     if args.paper_map or run_all:
         check_paper_map()
+    if args.analysis or run_all:
+        check_analysis()
     if args.snippet or run_all:
         check_snippet()
     return 0
