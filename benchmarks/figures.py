@@ -979,3 +979,88 @@ def fig21_batch_sweep():
         f"batch={b1} capacity {caps[b1]:.1f} qps not above batch={b0}'s "
         f"{caps[b0]:.1f} qps")
     return rows
+
+
+# fig22 mutation mix, pinned: hold back 10% of the dataset and stream it
+# in as live inserts, tombstone 5% of the base, ingest writes at 1/4 the
+# read rate.  recall_tol is the figure's pinned tolerance — the mutated
+# index must land within it of a from-scratch rebuild on the same live set.
+_FIG22_INSERT_FRAC = 0.10
+_FIG22_DELETE_FRAC = 0.05
+_FIG22_SEND_RATE = 2000.0
+_FIG22_INGEST_RATE = 500.0
+_FIG22_RECALL_TOL = 0.10
+
+
+def fig22_freshness():
+    """Fig. 22: freshness under live mutation (streaming inserts +
+    tombstone deletes + write/read contention).
+
+    ``Deployment.run_mutating`` holds back ``_FIG22_INSERT_FRAC`` of the
+    bench dataset at build time, streams it in through
+    ``core.mutate.MutableIndex`` (in-place Vamana inserts), tombstones
+    ``_FIG22_DELETE_FRAC`` of the base points, consolidates, and serves
+    the mutated index under the event simulator's mixed workload — reads
+    at ``_FIG22_SEND_RATE`` contending with ingest writes at
+    ``_FIG22_INGEST_RATE`` on the same SSD channels and NICs.
+
+    Three correctness pins, asserted hard (not just reported):
+
+    * **Deleted-never-returned**: zero tombstoned ids in any result row.
+    * **Insert quality**: mutated-index recall within the pinned
+      ``_FIG22_RECALL_TOL`` of a from-scratch rebuild on the same live
+      set (exact-oracle ground truth on the live vectors).
+    * **Frozen-path parity**: with mutation off, answers AND simulator
+      event logs are bit-identical to the static engine — the mutation
+      machinery costs the read-only path nothing.
+
+    ``mut_recall`` (higher-better) and ``freshness_lag_s`` (lower-better)
+    join the cross-PR trajectory; ``sim_qps`` (read throughput *under
+    writes*) rides the standard qps pool.
+    """
+    from repro import api
+
+    p = common.BENCH_P
+    dep0 = common.baton_deployment(p, L=L_DEFAULT, W=8)
+    cfg = dep0.config.with_updates(
+        sim={"send_rate": _FIG22_SEND_RATE,
+             "n_arrivals": common.SIM_SAT_ARRIVALS},
+        mutate={"insert_frac": _FIG22_INSERT_FRAC,
+                "delete_frac": _FIG22_DELETE_FRAC,
+                "ingest_rate": _FIG22_INGEST_RATE,
+                "recall_tol": _FIG22_RECALL_TOL, "seed": 0,
+                # insert beam = the serving L, not the (cached-graph)
+                # L_build=0 fallback — tighter in-edges for the streamed
+                # points, comfortably inside recall_tol
+                "l_insert": L_DEFAULT},
+    )
+    dep = api.Deployment.from_parts(cfg, dep0.engine, dep0.dataset)
+    m = dep.run_mutating()
+
+    assert m["parity"], (
+        "mutation-off path diverged from the frozen engine "
+        "(answers or event log)")
+    assert m["deleted_in_results"] == 0, (
+        f"{m['deleted_in_results']} tombstoned ids surfaced in results")
+    assert m["mut_recall"] >= m["rebuilt_recall"] - _FIG22_RECALL_TOL, (
+        f"mutated recall {m['mut_recall']:.3f} fell more than "
+        f"{_FIG22_RECALL_TOL} below rebuilt {m['rebuilt_recall']:.3f}")
+    assert m["ingest_offered"] == (
+        m["ingest_completed"] + m["ingest_rejected"]), m
+
+    return [
+        ("fig22_mutated", 0.0,
+         f"mut_recall={m['mut_recall']:.4f};"
+         f"rebuilt_recall={m['rebuilt_recall']:.4f};"
+         f"recall_gap={m['recall_gap']:.4f};"
+         f"deleted_in_results={m['deleted_in_results']};"
+         f"n_inserted={m['n_inserted']};n_deleted={m['n_deleted']};"
+         f"n_live={m['n_live']};parity={m['parity']}"),
+        ("fig22_ingest", 0.0,
+         f"sim_qps={m['sim_qps']:.1f};"
+         f"ingest_completed={m['ingest_completed']};"
+         f"ingest_offered={m['ingest_offered']};"
+         f"ingest_rejected={m['ingest_rejected']};"
+         f"freshness_lag_s={m['freshness_lag_s']:.6f};"
+         f"freshness_p99_s={m['freshness_p99_s']:.6f}"),
+    ]

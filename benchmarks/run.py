@@ -46,6 +46,7 @@ SUITES = (
     ("fig19fault", "figures.fig19_fault_recovery"),
     ("fig20execsim", "figures.fig20_exec_vs_sim"),
     ("fig21batch", "figures.fig21_batch_sweep"),
+    ("fig22fresh", "figures.fig22_freshness"),
     ("sec8", "figures.sec8_ship_vs_recompute"),
     ("kernels", "bench_kernels.kernel_rows"),
     ("superstep", "bench_kernels.superstep_rows"),

@@ -58,6 +58,14 @@ _WORK_RE = re.compile(
 # waived one, regresses the trajectory
 _FINDINGS_RE = re.compile(
     r"([A-Za-z0-9_.@/]*findings)=([-+0-9.eE]+)")
+# live-mutation trajectory (fig22): mutated-index recall is higher-better
+# like qps; simulated freshness lag (write-arrival -> durable, under
+# read/write contention) is lower-better.  Both deterministic — recall
+# from seeded builds, lag from the event simulator.
+_MUT_RECALL_RE = re.compile(
+    r"([A-Za-z0-9_.@/]*mut_recall)=([-+0-9.eE]+)")
+_FRESH_RE = re.compile(
+    r"([A-Za-z0-9_.@/]*freshness_lag[A-Za-z0-9_.@/]*)=([-+0-9.eE]+)")
 
 
 def _scan(bench: dict, regex, keep_zero: bool = False) -> dict:
@@ -77,9 +85,11 @@ def _scan(bench: dict, regex, keep_zero: bool = False) -> dict:
 
 
 def extract_qps(bench: dict) -> dict:
-    # recovery fractions join the higher-better pool; lost counts are
-    # tracked separately (zero is the good value — keep it)
-    return {**_scan(bench, _QPS_RE), **_scan(bench, _RECOVERY_RE)}
+    # recovery fractions and mutated-index recall join the higher-better
+    # pool; lost counts are tracked separately (zero is the good value —
+    # keep it)
+    return {**_scan(bench, _QPS_RE), **_scan(bench, _RECOVERY_RE),
+            **_scan(bench, _MUT_RECALL_RE)}
 
 
 def extract_lost(bench: dict) -> dict:
@@ -92,6 +102,10 @@ def extract_work(bench: dict) -> dict:
 
 def extract_findings(bench: dict) -> dict:
     return _scan(bench, _FINDINGS_RE, keep_zero=True)
+
+
+def extract_freshness(bench: dict) -> dict:
+    return _scan(bench, _FRESH_RE, keep_zero=True)
 
 
 def _kv(derived) -> dict:
@@ -142,11 +156,11 @@ def compare(prev: dict, cur: dict, threshold: float) -> list[str]:
         print(f"{key}: new ({c[key]:.1f})")
     # lower-better pools: loss counts (zero is the good value — kept),
     # structural work counters (FLOPs / dispatches, stated as constants),
-    # and static-analysis finding counts
+    # static-analysis finding counts, and simulated freshness lag
     pl = {**extract_lost(prev), **extract_work(prev),
-          **extract_findings(prev)}
+          **extract_findings(prev), **extract_freshness(prev)}
     cl = {**extract_lost(cur), **extract_work(cur),
-          **extract_findings(cur)}
+          **extract_findings(cur), **extract_freshness(cur)}
     for key in sorted(pl.keys() & cl.keys()):
         # worse iff the count grew beyond the threshold; any loss where
         # there was none before is always a regression

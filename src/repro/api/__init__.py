@@ -21,9 +21,10 @@ from repro.api.engine import (            # noqa: F401
     ScatterGatherEngine, SearchResult, STAT_KEYS, get_engine,
 )
 from repro.api.deployment import (        # noqa: F401
-    Deployment, EXEC_FIELDS, REPORT_FIELDS, Report, SIM_FIELDS,
-    partition_bytes,
+    Deployment, EXEC_FIELDS, MUTATE_FIELDS, REPORT_FIELDS, Report,
+    SIM_FIELDS, partition_bytes,
 )
 from repro.configs.batann_serve import (  # noqa: F401
-    DataSpec, ExecSpec, IndexSpec, SearchParams, ServeConfig, SimSpec,
+    DataSpec, ExecSpec, IndexSpec, MutateSpec, SearchParams, ServeConfig,
+    SimSpec,
 )

@@ -54,6 +54,16 @@ EXEC_FIELDS = (
     "envelope_bytes", "parity", "batch", "advance_calls", "local_handoffs",
     "wire_frames", "wire_batons", "wire_bytes",
 )
+# Deployment.run_mutating() key schema (same grow-only contract): the live
+# mutation block — freshness lag / mutated recall / deletion safety, plus
+# the frozen-path parity bit (mutation off => bit-identical answers and
+# simulator event logs to the static engine).
+MUTATE_FIELDS = (
+    "enabled", "parity", "n_base", "n_inserted", "n_deleted", "n_live",
+    "mut_recall", "rebuilt_recall", "recall_gap", "deleted_in_results",
+    "ingest_rate", "ingest_offered", "ingest_completed", "ingest_rejected",
+    "freshness_lag_s", "freshness_p99_s", "sim_qps",
+)
 
 # ``Report.to_row`` field formatters: row key -> (getter, format spec).
 # Schema-stable on purpose: benchmark ``derived`` strings are diffed across
@@ -466,6 +476,174 @@ class Deployment:
             "wire_frames": res.wire_frames,
             "wire_batons": res.wire_batons,
             "wire_bytes": res.wire_bytes,
+        }
+
+    # --- live mutation (repro.core.mutate) ---------------------------------
+    def _mutation_workload_sim(self, mi, stats: dict, mc) -> dict:
+        """Event-simulate the mutated index's traces under the config's
+        workload with the ingest write stage enabled — the piece of
+        :meth:`run_mutating` that prices freshness.  Returns throughput +
+        the simulator's ``diag['ingest']`` block (empty when no writes)."""
+        from repro import cluster
+
+        sim = self.config.sim
+        eng_m = get_engine("baton", index=mi.index)
+        traces = eng_m.cluster_traces(stats, self.config.search, self.dim)
+        homes = cluster.trace_homes(traces)
+        wl = cluster.make_workload(len(traces), sim.send_rate,
+                                   sim.n_arrivals, sim.arrival,
+                                   seed=sim.seed, homes=homes)
+        params = dataclasses.replace(
+            self.sim_params(), ingest_rate=mc.ingest_rate,
+            ingest_bytes=mc.ingest_bytes, ingest_sectors=mc.ingest_sectors,
+            ingest_seed=mc.seed)
+        res = cluster.simulate(traces, mi.index.p, wl, params)
+        return {"qps": res.throughput_qps,
+                "ingest": res.diag.get("ingest", {})}
+
+    def _frozen_parity(self, queries) -> bool:
+        """The mutation-off pin: a zero-mutation ``MutableIndex`` must
+        answer bit-identically to ``Engine.search``, and the simulator's
+        event log with ``ingest_rate=0`` must equal the default-params log
+        (no ingest machinery is even constructed when the rate is zero)."""
+        from repro.core import mutate as mutate_mod
+
+        base = self.search(queries)
+        mi0 = mutate_mod.MutableIndex(self.index, copy=True)
+        pids, pdists, _ = mi0.search(
+            queries, self.engine.baton_params(self.config.search))
+        ok = bool(np.array_equal(pids, base.ids)
+                  and np.array_equal(pdists, base.dists))
+        if ok and self.config.sim.send_rate > 0:
+            from repro import cluster
+
+            sim = self.config.sim
+            traces = self.cluster_traces(base.stats)
+            homes = cluster.trace_homes(traces)
+            wl = cluster.make_workload(len(traces), sim.send_rate,
+                                       sim.n_arrivals, sim.arrival,
+                                       seed=sim.seed, homes=homes)
+            p_def = dataclasses.replace(self.sim_params(),
+                                        record_events=True)
+            p_off = dataclasses.replace(
+                p_def, ingest_rate=0.0,
+                ingest_seed=self.config.mutate.seed)
+            r_def = cluster.simulate(traces, self.n_servers, wl, p_def)
+            r_off = cluster.simulate(traces, self.n_servers, wl, p_off)
+            ok = bool(r_def.events == r_off.events)
+        return ok
+
+    def run_mutating(self, queries=None) -> dict:
+        """Run the config's ``mutate`` section: stream inserts, tombstone
+        deletes, consolidate, and measure freshness/recall/QPS.
+
+        Where :meth:`run` serves a frozen index, this makes it a moving
+        target: a fraction of the dataset is held back at build time and
+        streamed in through ``core.mutate.MutableIndex`` (in-place Vamana
+        inserts growing the partition/PQ state), ``mutate.delete_frac`` of
+        the base points are tombstoned, the consolidation pass splices and
+        reclaims their rows, and the mutated index is searched and
+        event-simulated under the mixed read/write workload
+        (``SimParams.ingest_rate`` — writes contend with reads).
+
+        Returns:
+            The ``MUTATE_FIELDS`` dict — mutation counts, mutated-index
+            recall vs a same-size rebuilt-from-scratch index (exact-oracle
+            ground truth on the live set), the count of tombstoned ids
+            surfaced in any result row (must be 0), simulated freshness
+            lag / throughput, and ``parity``: the mutation-off pin
+            (zero-mutation answers and event logs bit-identical to the
+            frozen engine).
+
+        Raises:
+            ValueError: if the engine is not the baton engine, or mutation
+                is enabled without a dataset to stream from.
+        """
+        from repro.core import mutate as mutate_mod
+
+        mc = self.config.mutate
+        sp = self.config.search
+        if self.engine.name != "baton":
+            raise ValueError(
+                f"mutation requires the baton engine: {self.engine.name}")
+        if queries is None:
+            queries = self.dataset.queries
+        queries = np.asarray(queries, np.float32)
+        parity = self._frozen_parity(queries)
+
+        if not mc.enabled:
+            return {
+                "enabled": False, "parity": parity,
+                "n_base": int(self.index.n), "n_inserted": 0,
+                "n_deleted": 0, "n_live": int(self.index.n),
+                "mut_recall": float("nan"),
+                "rebuilt_recall": float("nan"),
+                "recall_gap": float("nan"), "deleted_in_results": 0,
+                "ingest_rate": 0.0, "ingest_offered": 0,
+                "ingest_completed": 0, "ingest_rejected": 0,
+                "freshness_lag_s": float("nan"),
+                "freshness_p99_s": float("nan"),
+                "sim_qps": float("nan"),
+            }
+
+        if self.dataset is None:
+            raise ValueError(
+                "mutation needs the deployment's dataset to stream from")
+        vectors = np.ascontiguousarray(self.dataset.vectors, np.float32)
+        n_total = vectors.shape[0]
+        n_ins = int(n_total * mc.insert_frac)
+        n_base = n_total - n_ins
+        rng = np.random.default_rng(mc.seed)
+
+        # build the base index on the held-back prefix, then stream the
+        # tail in (global id == dataset row id: appends are in order)
+        base_eng = get_engine("baton")
+        base_eng.build(vectors[:n_base], self.config.index)
+        mi = mutate_mod.MutableIndex(base_eng.index, copy=False)
+        for s in range(n_base, n_total, 256):
+            mi.insert(vectors[s:s + 256], l_insert=mc.l_insert or None)
+        n_del = int(n_base * mc.delete_frac)
+        del_ids = (rng.choice(n_base, n_del, replace=False)
+                   if n_del else np.empty(0, np.int64))
+        mi.delete(del_ids)
+        if mc.consolidate:
+            mi.consolidate()
+
+        bp = base_eng.baton_params(sp)
+        ids, dists, stats = mi.search(queries, bp)
+        dead_hits = int(np.count_nonzero(
+            ~mi.live_mask[np.clip(ids, 0, mi.n - 1)] & (ids >= 0)))
+        live = mi.live_ids()
+        gt_local = ref.brute_force_knn(mi.vectors[live], queries, sp.k)
+        mut_recall = float(ref.recall_at_k(ids, live[gt_local], sp.k))
+
+        # the from-scratch yardstick: same spec, built on the live set only
+        reb_eng = get_engine("baton")
+        reb_eng.build(mi.vectors[live], self.config.index)
+        reb = reb_eng.search(queries, sp)
+        rebuilt_recall = float(ref.recall_at_k(reb.ids, gt_local, sp.k))
+
+        ing: dict = {}
+        sim_qps = float("nan")
+        if self.config.sim.send_rate > 0:
+            sim_out = self._mutation_workload_sim(mi, stats, mc)
+            sim_qps = sim_out["qps"]
+            ing = sim_out["ingest"]
+        return {
+            "enabled": True, "parity": parity,
+            "n_base": int(n_base), "n_inserted": int(mi.n_inserted),
+            "n_deleted": int(mi.n_deleted), "n_live": int(mi.n_live),
+            "mut_recall": mut_recall,
+            "rebuilt_recall": rebuilt_recall,
+            "recall_gap": rebuilt_recall - mut_recall,
+            "deleted_in_results": dead_hits,
+            "ingest_rate": float(mc.ingest_rate),
+            "ingest_offered": int(ing.get("offered", 0)),
+            "ingest_completed": int(ing.get("completed", 0)),
+            "ingest_rejected": int(ing.get("rejected", 0)),
+            "freshness_lag_s": float(ing.get("mean_lag_s", float("nan"))),
+            "freshness_p99_s": float(ing.get("p99_lag_s", float("nan"))),
+            "sim_qps": float(sim_qps),
         }
 
     # --- index persistence (checkpoint/ckpt.py) ----------------------------

@@ -109,6 +109,11 @@ class SimParams:
     retry_backoff: float = 2.0           # deadline multiplier per re-issue
     hedge_s: float = 0.0                 # hedged duplicate delay (0 = off)
     fault_seed: int = 0                  # rng stream for flaky-NIC drops
+    # --- ingest: open-loop writes contending with reads (freshness) --------
+    ingest_rate: float = 0.0             # writes/s offered (0 => no machinery)
+    ingest_bytes: int = 4096             # replication/ack bytes per write (NIC)
+    ingest_sectors: int = 1              # SSD sectors per write
+    ingest_seed: int = 0                 # rng stream for write arrivals
 
     def server_config(self, sid: int) -> ServerConfig:
         return ServerConfig(
@@ -823,6 +828,50 @@ def simulate(traces, n_servers: int, workload: Workload,
 
         sched.at(t0, arrive0)
 
+    # --- ingest lifecycle: open-loop writes riding the same stage stacks ---
+    # Only built when ingest_rate > 0: the rng is never even constructed on
+    # the read-only path, so mutation-off event logs stay bit-identical to
+    # the frozen pipeline (the fig22 parity pin).  Each write routes like a
+    # query (same pick(): replicas / dual-homing / fault-aware), occupies
+    # SSD channels (``ServerStack.write`` — contending with reads) and the
+    # egress NIC (replication/ack bytes), but takes no slot: writes are not
+    # resident query states.  Freshness lag = completion − offered time.
+    ingest_on = params.ingest_rate > 0 and n > 0
+    istats = {"offered": 0, "completed": 0, "rejected": 0}
+    ingest_lags: list = []
+    if ingest_on:
+        irng = np.random.default_rng(params.ingest_seed)
+        horizon = float(arrive[-1] - arrive[0])
+        n_writes = max(1, int(round(params.ingest_rate * horizon)))
+        gaps = irng.exponential(1.0 / params.ingest_rate, size=n_writes)
+        w_times = float(arrive[0]) + np.cumsum(gaps)
+        w_times = w_times[w_times <= arrive[-1]]
+        w_parts = irng.integers(0, placement.n_parts, size=w_times.size)
+
+        def launch_write(wid: int, part: int, t_w: float) -> None:
+            def go(t):
+                sid = pick(part)
+                if sid is None:          # every replica down (faults)
+                    istats["rejected"] += 1
+                    log(t, "ingest_reject", wid, -1)
+                    return
+                log(t, "ingest_arrive", wid, sid)
+                sv = servers[sid]
+
+                def landed(t3):
+                    istats["completed"] += 1
+                    ingest_lags.append(t3 - t_w)
+                    log(t3, "ingest_done", wid, sid)
+
+                sv.write(t, params.ingest_sectors,
+                         lambda t2: sv.send(t2, params.ingest_bytes, landed))
+
+            sched.at(t_w, go)
+
+        istats["offered"] = int(w_times.size)
+        for wid, (tw, wp) in enumerate(zip(w_times, w_parts)):
+            launch_write(wid, int(wp), float(tw))
+
     if faults is None:
         for aid in range(n):
             tr = traces[int(workload.trace_idx[aid])]
@@ -851,12 +900,12 @@ def simulate(traces, n_servers: int, workload: Workload,
     sched.run()
 
     # statically-placed runs drain exactly at the last completion; under a
-    # schedule or faults the heap can outlive the workload (a late epoch
-    # event, a migration stream, the final client deadline), so makespan
-    # tracks the last *query* — else a post-drain event would inflate
-    # makespan/deflate throughput_qps
+    # schedule, faults, or ingest the heap can outlive the workload (a late
+    # epoch event, a migration stream, the final client deadline, a trailing
+    # write), so makespan tracks the last *query* — else a post-drain event
+    # would inflate makespan/deflate throughput_qps
     t_end = (sched.now if schedule is None and faults is None
-             else last_done)
+             and not ingest_on else last_done)
     makespan = max(0.0, float(t_end - arrive[0])) if n else 0.0
     diag = {
         "max_ssd_queue": max(s.ssd.max_q for s in servers),
@@ -884,6 +933,19 @@ def simulate(traces, n_servers: int, workload: Workload,
                 f"{fstats['lost']} lost != {n} admitted")
         diag["faults"] = dict(fstats, timeout_s=policy.timeout_s,
                               down_at_end=sorted(router.failed))
+    if ingest_on:
+        if istats["offered"] != istats["completed"] + istats["rejected"]:
+            raise RuntimeError(               # every write ends exactly once
+                f"ingest conservation violated: {istats['completed']} "
+                f"completed + {istats['rejected']} rejected != "
+                f"{istats['offered']} offered")
+        lags = np.asarray(ingest_lags, float)
+        diag["ingest"] = dict(
+            istats,
+            mean_lag_s=float(lags.mean()) if lags.size else float("nan"),
+            p99_lag_s=(float(np.percentile(lags, 99)) if lags.size
+                       else float("nan")),
+        )
     return SimResult(
         latencies_s=lat, arrive_s=arrive,
         trace_idx=np.asarray(workload.trace_idx),

@@ -377,6 +377,17 @@ class ServerStack:
 
         self.ssd.request(t, misses, join)
 
+    def write(self, t: float, sectors: int, cb) -> None:
+        """Queue an ingest write of ``sectors`` sectors on the SSD channel
+        queue — writes contend with *reads* for the same channels (the
+        freshness-pricing point of the ingest scenario).  The cache tier
+        is write-around: ingested sectors are not admitted, so a pure-read
+        workload's cache state is untouched by the write path."""
+        if sectors <= 0:
+            cb(t)
+            return
+        self.ssd.request(t, sectors, cb)
+
     def compute(self, t: float, base_s: float, cb) -> None:
         """Queue one hop's scoring job: ``base_s`` seconds of CPU, scaled
         by this server's straggler ``compute_mult``."""

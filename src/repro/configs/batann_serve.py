@@ -218,6 +218,57 @@ class ExecSpec:
             raise ValueError(f"time_scale must be > 0: {self.time_scale}")
 
 
+@dataclasses.dataclass(frozen=True)
+class MutateSpec:
+    """Live-mutation section (``core.mutate`` — streaming inserts/deletes).
+
+    All-zero defaults disable the tier entirely: ``Deployment.run_mutating``
+    then only runs the frozen-path parity pin (mutation off ⇒ bit-identical
+    answers and simulator event logs to the static engine).  With
+    ``insert_frac > 0`` the deployment holds back that fraction of the
+    dataset at build time and streams it in via ``MutableIndex.insert``;
+    ``delete_frac`` tombstones that fraction of the *base* points;
+    ``consolidate`` runs the background merge pass after the deletes.
+    ``ingest_rate``/``ingest_bytes`` drive the cluster simulator's write
+    stage (``SimParams.ingest_rate`` — writes contend with reads for SSD
+    channels and NICs), pricing freshness lag.  ``recall_tol`` pins the
+    oracle-parity acceptance: mutated-index recall must be within this
+    tolerance of a same-size rebuilt-from-scratch index.
+    """
+
+    insert_frac: float = 0.0     # dataset fraction streamed in post-build
+    delete_frac: float = 0.0     # base fraction tombstoned post-insert
+    consolidate: bool = True     # run the background merge after deletes
+    l_insert: int = 0            # insert beam width (0 = graph L_build)
+    ingest_rate: float = 0.0     # simulator writes/s (0 = no write stage)
+    ingest_bytes: int = 4096     # replication/ack bytes per write
+    ingest_sectors: int = 1      # SSD sectors per write
+    recall_tol: float = 0.05     # mutated vs rebuilt recall tolerance
+    seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.insert_frac > 0 or self.delete_frac > 0
+
+    def __post_init__(self):
+        for name in ("insert_frac", "delete_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1): {v}")
+        if self.l_insert < 0:
+            raise ValueError(f"l_insert must be >= 0: {self.l_insert}")
+        if self.ingest_rate < 0:
+            raise ValueError(f"ingest_rate must be >= 0: {self.ingest_rate}")
+        if self.ingest_bytes < 0:
+            raise ValueError(
+                f"ingest_bytes must be >= 0: {self.ingest_bytes}")
+        if self.ingest_sectors < 0:
+            raise ValueError(
+                f"ingest_sectors must be >= 0: {self.ingest_sectors}")
+        if self.recall_tol < 0:
+            raise ValueError(f"recall_tol must be >= 0: {self.recall_tol}")
+
+
 def parse_straggler(spec: str) -> list[tuple[int, float]]:
     """'0:4.0,2:1.5' -> [(0, 4.0), (2, 1.5)].  The one parser every
     consumer shares: SimSpec format validation, ServeConfig range
@@ -332,7 +383,7 @@ def parse_faults(spec: str) -> list[tuple[float, str, int]]:
 
 
 _SECTIONS = {"data": DataSpec, "index": IndexSpec, "search": SearchParams,
-             "sim": SimSpec, "exec": ExecSpec}
+             "sim": SimSpec, "exec": ExecSpec, "mutate": MutateSpec}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -351,6 +402,7 @@ class ServeConfig:
     search: SearchParams = dataclasses.field(default_factory=SearchParams)
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     exec: ExecSpec = dataclasses.field(default_factory=ExecSpec)
+    mutate: MutateSpec = dataclasses.field(default_factory=MutateSpec)
 
     def __post_init__(self):
         # cross-section check the sections can't do alone: straggler server
@@ -380,6 +432,21 @@ class ServeConfig:
                 raise ValueError(
                     f"exec.workers ({self.exec.workers}) must be <= "
                     f"index.p ({self.index.p})")
+        # live mutation grows the baton index through core.mutate — the
+        # other engines (and the sector codes layout) have no insert path
+        if self.mutate.enabled:
+            if self.index.engine != "baton":
+                raise ValueError(
+                    "mutation requires index.engine == 'baton': "
+                    f"{self.index.engine}")
+            if self.index.codes_mode != "replicated":
+                raise ValueError(
+                    "mutation requires index.codes_mode == 'replicated' "
+                    f"(sector layouts are frozen): {self.index.codes_mode}")
+        if self.mutate.ingest_rate > 0 and self.sim.send_rate <= 0:
+            raise ValueError(
+                "mutate.ingest_rate needs the event simulator: set "
+                "sim.send_rate > 0")
 
     # --- overrides ---------------------------------------------------------
     def with_updates(self, name: str | None = None, **sections

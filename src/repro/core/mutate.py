@@ -1,0 +1,439 @@
+"""Live index mutation: streaming inserts, tombstone deletes, consolidation.
+
+BatANN's index is frozen at build time; this module makes it a moving
+target (ROADMAP item 3).  The design follows DiskANN's streaming merge
+(FreshDiskANN) adapted to the single-global-graph layout:
+
+* **Insert** — ``VamanaGraph.insert_batch`` beam-searches the live graph
+  from the medoid, robust-prunes the visited set into the new row, and
+  adds reverse edges with overflow pruning (the ParlayANN batch-insert
+  loop body on an already navigable graph).  ``MutableIndex.insert``
+  then grows the partition/PQ state through :class:`baton.BatonIndex`:
+  the new point lands in its nearest pruned neighbor's partition (graph
+  locality — the LDG objective, incrementally), gets PQ codes from the
+  *frozen* codebook, and reuses rows reclaimed by consolidation before
+  appending new ones.
+
+* **Delete** — tombstones.  A tombstoned node stays *traversable* (its
+  out-edges still route queries — the FreshDiskANN invariant) but is
+  (a) never returned from :meth:`MutableIndex.search` and (b) never the
+  target of a *new* edge (``insert_batch``'s ``live_mask`` filters it
+  out of every candidate beam).  Deleting the medoid eagerly re-picks a
+  live medoid so entry stays valid.
+
+* **Consolidate** — the background pass: every live node that points at
+  a tombstone splices its neighbors-of-neighbors (candidates = its live
+  neighbors ∪ the tombstones' live neighbors, robust-pruned back to R),
+  tombstoned rows are cleared to ``NO_ID`` and reclaimed onto a free
+  list, and a reachability repair re-inserts any live point the splice
+  orphaned — after consolidation every live point is reachable from the
+  medoid again.
+
+The head index and PQ codebook are frozen at build time (stale entry
+points self-correct during traversal; codebook drift is a quality knob,
+not a correctness one).  All mutation is host-side numpy orchestrating
+the existing jitted primitives (``_robust_prune_batch``,
+``_batched_search``) — nothing here runs under ``jax.jit``.
+
+Search goes through the *unchanged* ``baton.run_simulated`` with an
+over-fetched ``k`` (bounded by ``BatonParams.pool``), then filters
+tombstoned/unallocated ids out of each row — the frozen read path is
+untouched, which is what makes the mutation-off parity pin possible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import baton, pq
+from repro.core.state import NO_ID
+from repro.core.vamana import _exact_dists, _robust_prune_batch
+
+import jax.numpy as jnp
+
+
+def reachable_mask(neighbors: np.ndarray, medoid: int,
+                   traversable: np.ndarray) -> np.ndarray:
+    """BFS over out-edges from ``medoid`` through ``traversable`` rows.
+
+    Returns an (N,) bool mask of reached rows.  Tombstoned rows are
+    traversable until consolidation, so pre-consolidation reachability
+    routes through them; unallocated rows never traverse.
+    """
+    n = neighbors.shape[0]
+    seen = np.zeros(n, bool)
+    if not (0 <= medoid < n and traversable[medoid]):
+        return seen
+    seen[medoid] = True
+    frontier = np.asarray([medoid])
+    while frontier.size:
+        nxt = neighbors[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = nxt[traversable[nxt] & ~seen[nxt]]
+        if nxt.size == 0:
+            break
+        nxt = np.unique(nxt)
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+class MutableIndex:
+    """A :class:`baton.BatonIndex` that accepts inserts and deletes.
+
+    Wraps (and by default deep-copies, so frozen deployments are never
+    aliased) a built index; maintains the flat vector array, a tombstone
+    mask, an allocation mask, and per-partition free-slot bookkeeping.
+    ``search`` delegates to the frozen engine and filters dead ids.
+    """
+
+    def __init__(self, index: baton.BatonIndex, copy: bool = True):
+        if index.part_nbr_codes is not None:
+            raise NotImplementedError(
+                "mutation over sector-mode (AiSAQ) layouts is not supported")
+        if copy:
+            index = dataclasses.replace(
+                index,
+                part_vectors=index.part_vectors.copy(),
+                part_neighbors=index.part_neighbors.copy(),
+                codes=index.codes.copy(),
+                node2part=index.node2part.copy(),
+                node2local=index.node2local.copy(),
+                assign=index.assign.copy(),
+                graph=dataclasses.replace(
+                    index.graph, neighbors=index.graph.neighbors.copy()),
+            )
+        self.index = index
+        ar = np.arange(index.n)
+        self.vectors = np.ascontiguousarray(
+            index.part_vectors[index.node2part[ar], index.node2local[ar]],
+            np.float32,
+        )
+        self.allocated = np.ones(index.n, bool)
+        self.tombstones = np.zeros(index.n, bool)
+        self.free_rows: list[int] = []
+        # per-partition occupancy: next fresh local slot + reclaimed slots
+        counts = np.bincount(index.node2part[ar], minlength=index.p)
+        self.part_count = counts.astype(np.int64)
+        self.part_free: list[list[int]] = [[] for _ in range(index.p)]
+        self.n_inserted = 0
+        self.n_deleted = 0
+        self._navigable = False
+
+    # --- views -------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        return self.allocated & ~self.tombstones
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live_mask.sum())
+
+    def live_ids(self) -> np.ndarray:
+        return np.where(self.live_mask)[0]
+
+    # --- growth helpers ----------------------------------------------------
+    def _grow_rows(self, n_new: int) -> None:
+        """Grow every (N, ...) array to ``n_new`` rows (padding = dead)."""
+        idx = self.index
+        n0 = idx.n
+        if n_new <= n0:
+            return
+        pad = n_new - n0
+
+        def grow(a, fill):
+            out = np.full((n_new,) + a.shape[1:], fill, a.dtype)
+            out[:n0] = a
+            return out
+
+        self.vectors = grow(self.vectors, 0.0)
+        idx.codes = grow(idx.codes, 0)
+        idx.node2part = grow(idx.node2part, -1)
+        idx.node2local = grow(idx.node2local, -1)
+        idx.assign = grow(idx.assign, -1)
+        self.allocated = grow(self.allocated, False)
+        self.tombstones = grow(self.tombstones, False)
+        idx.n = n_new
+        del pad
+
+    def _grow_partition(self, pi: int) -> None:
+        """Grow the per-partition sector arrays when partition ``pi`` fills."""
+        idx = self.index
+        npmax = idx.part_vectors.shape[1]
+        new_npmax = max(npmax + 1, int(npmax * 1.25))
+        pv = np.zeros((idx.p, new_npmax, idx.dim), np.float32)
+        pv[:, :npmax] = idx.part_vectors
+        pn = np.full((idx.p, new_npmax, idx.part_neighbors.shape[2]),
+                     NO_ID, np.int32)
+        pn[:, :npmax] = idx.part_neighbors
+        idx.part_vectors, idx.part_neighbors = pv, pn
+
+    def _place(self, gid: int, pi: int) -> None:
+        """Assign global row ``gid`` a local slot in partition ``pi``."""
+        idx = self.index
+        if self.part_free[pi]:
+            local = self.part_free[pi].pop()
+        else:
+            if self.part_count[pi] >= idx.part_vectors.shape[1]:
+                self._grow_partition(pi)
+            local = int(self.part_count[pi])
+            self.part_count[pi] += 1
+        idx.node2part[gid] = pi
+        idx.node2local[gid] = local
+        idx.assign[gid] = pi
+        idx.part_vectors[pi, local] = self.vectors[gid]
+
+    def _refresh_part_neighbors(self) -> None:
+        """Push graph adjacency into the per-partition sector layout."""
+        idx = self.index
+        ids = np.where(self.allocated)[0]
+        idx.part_neighbors[idx.node2part[ids], idx.node2local[ids]] = (
+            idx.graph.neighbors[ids])
+
+    def _ensure_navigable(self) -> None:
+        """One-time reachability repair at the first mutating op.
+
+        A fresh Vamana build can leave a handful of orphaned points
+        (reverse-edge overflow pruning); the mutation invariant — every
+        live point reachable from the medoid — is established here, NOT
+        at wrap time, so a zero-mutation wrap never touches the graph
+        and stays bit-identical to the frozen engine (the parity pin).
+        """
+        if self._navigable:
+            return
+        self._navigable = True
+        self._repair_reachability()
+        self._refresh_part_neighbors()
+
+    # --- mutation ----------------------------------------------------------
+    def insert(self, new_vectors: np.ndarray,
+               l_insert: int | None = None) -> np.ndarray:
+        """Insert a batch of vectors; returns their global ids."""
+        self._ensure_navigable()
+        new_vectors = np.ascontiguousarray(new_vectors, np.float32)
+        b = new_vectors.shape[0]
+        if b == 0:
+            return np.empty(0, np.int64)
+        idx = self.index
+        # reclaimed rows first, then append
+        reuse = [self.free_rows.pop() for _ in
+                 range(min(b, len(self.free_rows)))]
+        n_append = b - len(reuse)
+        gids = np.asarray(reuse + list(range(idx.n, idx.n + n_append)),
+                          np.int64)
+        if n_append:
+            self._grow_rows(idx.n + n_append)
+        self.vectors[gids] = new_vectors
+        self.allocated[gids] = True
+        self.tombstones[gids] = False
+
+        # link into the graph: new edges may only target live rows (the
+        # inserted batch counts as live; it has no in-edges yet so it
+        # cannot appear in its own candidate beams)
+        idx.graph.insert_batch(self.vectors, gids,
+                               live_mask=self.live_mask, l_insert=l_insert)
+
+        # partition by graph locality: nearest pruned neighbor's partition
+        # (the incremental LDG objective); least-filled partition otherwise
+        nn = idx.graph.neighbors[gids, 0]
+        for gid, q in zip(gids, nn):
+            if q >= 0 and idx.node2part[q] >= 0:
+                pi = int(idx.node2part[q])
+            else:
+                pi = int(np.argmin(self.part_count
+                                   - np.asarray([len(f) for f
+                                                 in self.part_free])))
+            self._place(int(gid), pi)
+
+        # PQ codes from the frozen codebook
+        cb = pq.PQCodebook(centroids=jnp.asarray(idx.codebook))
+        idx.codes[gids] = pq.encode(cb, new_vectors)
+
+        self._repair_reachability()
+        self._refresh_part_neighbors()
+        self.n_inserted += b
+        return gids
+
+    def delete(self, ids: np.ndarray) -> None:
+        """Tombstone global ids (idempotent; rows reclaimed at consolidate)."""
+        self._ensure_navigable()
+        ids = np.asarray(ids, np.int64)
+        ids = ids[(ids >= 0) & (ids < self.index.n)]
+        ids = ids[self.live_mask[ids]]
+        if ids.size == 0:
+            return
+        self.tombstones[ids] = True
+        self.n_deleted += int(ids.size)
+        g = self.index.graph
+        if self.tombstones[g.medoid]:
+            self._repick_medoid()
+            self._repair_reachability()
+            self._refresh_part_neighbors()
+
+    def _repick_medoid(self) -> None:
+        live = self.live_ids()
+        if live.size == 0:
+            raise ValueError("cannot delete every point: no live medoid")
+        lv = self.vectors[live]
+        g = self.index.graph
+        g.medoid = int(live[np.argmin(((lv - lv.mean(0)) ** 2).sum(-1))])
+
+    def consolidate(self) -> int:
+        """Splice out tombstoned rows and reclaim them; returns #reclaimed."""
+        self._ensure_navigable()
+        idx = self.index
+        g = idx.graph
+        tomb = np.where(self.tombstones & self.allocated)[0]
+        if tomb.size == 0:
+            return 0
+        n = idx.n
+        nbrs = g.neighbors
+        is_tomb = np.zeros(n, bool)
+        is_tomb[tomb] = True
+        safe = np.clip(nbrs, 0, n - 1)
+        touches = ((nbrs >= 0) & is_tomb[safe]).any(1)
+        fix = np.where(touches & self.live_mask)[0]
+        if fix.size:
+            r = nbrs.shape[1]
+            fn = nbrs[fix]                                   # (B, R)
+            fs = np.clip(fn, 0, n - 1)
+            tomb_hop = (fn >= 0) & is_tomb[fs]
+            # candidates: live first-hop nbrs + the tombstoned hops' nbrs
+            first = np.where((fn >= 0) & ~tomb_hop, fn, NO_ID)
+            second = nbrs[fs].reshape(fix.size, r * r)
+            second = np.where(np.repeat(tomb_hop, r, axis=1), second, NO_ID)
+            cand = np.concatenate([first, second], 1).astype(np.int32)
+            cs = np.clip(cand, 0, n - 1)
+            dead = (cand < 0) | ~self.live_mask[cs]
+            cand = np.where(dead, NO_ID, cand).astype(np.int32)
+            cd = _exact_dists(self.vectors, self.vectors[fix], cand)
+            # pad the batch to the next power of two so repeated
+            # consolidations hit a handful of jit shapes, not one per
+            # distinct fix-set size (padding rows are all-NO_ID -> all-
+            # NO_ID output, sliced off)
+            bp = 1 << (int(fix.size) - 1).bit_length()
+            pv = np.zeros((bp, self.vectors.shape[1]), np.float32)
+            pv[: fix.size] = self.vectors[fix]
+            pc = np.full((bp, cand.shape[1]), NO_ID, np.int32)
+            pc[: fix.size] = cand
+            pd = np.full((bp, cand.shape[1]), np.inf, np.float32)
+            pd[: fix.size] = cd
+            nbrs[fix] = np.asarray(_robust_prune_batch(
+                jnp.asarray(pv), jnp.asarray(pc), jnp.asarray(pd),
+                jnp.asarray(self.vectors), r=g.R, alpha=g.alpha,
+            ))[: fix.size]
+        # clear + reclaim
+        nbrs[tomb] = NO_ID
+        for gid in tomb:
+            pi, local = int(idx.node2part[gid]), int(idx.node2local[gid])
+            idx.part_neighbors[pi, local] = NO_ID
+            self.part_free[pi].append(local)
+            idx.node2part[gid] = -1
+            idx.node2local[gid] = -1
+            idx.assign[gid] = -1
+        self.allocated[tomb] = False
+        self.tombstones[tomb] = False
+        self.free_rows.extend(int(gid) for gid in tomb)
+        if not (0 <= g.medoid < n) or not self.live_mask[g.medoid]:
+            self._repick_medoid()
+        self._repair_head()
+        self._repair_reachability()
+        self._refresh_part_neighbors()
+        return int(tomb.size)
+
+    def _repair_head(self) -> None:
+        """Repoint head-index entries whose sampled node was reclaimed.
+
+        The replicated head index routes queries to entry points by
+        global id; a reclaimed row has no partition slot anymore, so a
+        dead entry would drop its query into garbage state.  Tombstoned-
+        but-unconsolidated entries are fine (still traversable, filtered
+        from results) — only *unallocated* samples must be remapped, each
+        to its nearest live node (vector and id move together so the
+        head's exact entry distances stay exact).
+        """
+        idx = self.index
+        hs = np.asarray(idx.head_sample_ids).copy()
+        dead = (hs < 0) | ~self.allocated[np.clip(hs, 0, idx.n - 1)]
+        if not dead.any():
+            return
+        live = self.live_ids()
+        hv = np.asarray(idx.head_vectors).copy()
+        d = ((self.vectors[live][None, :, :]
+              - hv[dead][:, None, :]) ** 2).sum(-1)
+        hs[dead] = live[np.argmin(d, 1)].astype(hs.dtype)
+        hv[dead] = self.vectors[hs[dead]]
+        idx.head_sample_ids = hs
+        idx.head_vectors = hv
+
+    # --- reachability repair ------------------------------------------------
+    def _repair_reachability(self, max_rounds: int = 4) -> None:
+        """Re-link any live point the last mutation orphaned.
+
+        Reverse-edge overflow pruning (insert) and neighbor splicing
+        (consolidate) can drop a node's last in-edge; FreshDiskANN
+        re-inserts affected points.  Each round re-inserts unreachable
+        live points; if re-insertion's reverse edges still don't stick,
+        force-link each from its nearest reachable live node (replacing
+        that node's farthest out-edge).
+        """
+        g = self.index.graph
+        for _ in range(max_rounds):
+            trav = self.allocated          # tombstones traverse until merge
+            reach = reachable_mask(g.neighbors, g.medoid, trav)
+            bad = np.where(self.live_mask & ~reach)[0]
+            if bad.size == 0:
+                return
+            g.insert_batch(self.vectors, bad, live_mask=self.live_mask)
+            reach = reachable_mask(g.neighbors, g.medoid, trav)
+            bad = np.where(self.live_mask & ~reach)[0]
+            if bad.size == 0:
+                return
+            anchors = np.where(reach & self.live_mask)[0]
+            for v in bad:
+                d = ((self.vectors[anchors] - self.vectors[v]) ** 2).sum(-1)
+                u = int(anchors[np.argmin(d)])
+                row = g.neighbors[u]
+                if v in row:
+                    continue
+                free = np.where(row < 0)[0]
+                if free.size:
+                    slot = int(free[0])
+                else:
+                    ud = _exact_dists(self.vectors,
+                                      self.vectors[u][None], row[None])[0]
+                    slot = int(np.argmax(ud))
+                g.neighbors[u, slot] = v
+
+    # --- search ------------------------------------------------------------
+    def search(self, queries: np.ndarray, params: baton.BatonParams):
+        """Frozen-engine search + dead-id filtering.
+
+        Over-fetches ``k + n_dead`` results (capped by ``params.pool``)
+        through the *unchanged* ``baton.run_simulated``, then drops
+        tombstoned/unallocated ids from each row and keeps the first
+        ``k`` — a deleted id is never returned, by construction.
+        """
+        n_dead = self.index.n - self.n_live
+        kk = int(min(params.pool, params.k + n_dead))
+        kk = max(kk, params.k)
+        ids, dists, stats = baton.run_simulated(
+            self.index, np.asarray(queries, np.float32),
+            dataclasses.replace(params, k=kk),
+        )
+        live = self.live_mask
+        ok = (ids >= 0) & live[np.clip(ids, 0, live.shape[0] - 1)]
+        b, k = ids.shape[0], params.k
+        out_ids = np.full((b, k), NO_ID, np.int32)
+        out_dists = np.full((b, k), np.inf, np.float32)
+        for row in range(b):
+            sel = np.where(ok[row])[0][:k]
+            out_ids[row, : sel.size] = ids[row, sel]
+            out_dists[row, : sel.size] = dists[row, sel]
+        return out_ids, out_dists, stats

@@ -38,6 +38,66 @@ class VamanaGraph:
         deg = (self.neighbors >= 0).sum(1)
         return {"mean": float(deg.mean()), "max": int(deg.max()), "min": int(deg.min())}
 
+    def insert_batch(
+        self,
+        vectors: np.ndarray,
+        new_ids: np.ndarray,
+        live_mask: np.ndarray | None = None,
+        l_insert: int | None = None,
+        max_hops: int = 128,
+    ) -> None:
+        """In-place streaming insert (the ParlayANN batch-insert loop body).
+
+        ``vectors`` is the full (N', d) array *including* the new points;
+        ``new_ids`` are the rows to link in.  Each new point beam-searches
+        the live graph from the medoid, robust-prunes its visited set into
+        its adjacency row, then reverse edges are added with overflow
+        pruning — exactly the ``build()`` loop body, applied to an already
+        navigable graph.  ``live_mask`` (N',) masks tombstoned rows out of
+        the candidate pool so no new edge ever points at a deleted node.
+        Grows ``self.neighbors`` to ``vectors.shape[0]`` rows on demand.
+        """
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        new_ids = np.asarray(new_ids, np.int64)
+        if new_ids.size == 0:
+            return
+        n_new = vectors.shape[0]
+        if n_new > self.neighbors.shape[0]:
+            grown = np.full((n_new, self.R), NO_ID, np.int32)
+            grown[: self.neighbors.shape[0]] = self.neighbors
+            self.neighbors = grown
+        # rows being (re-)inserted start with a clean slate
+        self.neighbors[new_ids] = NO_ID
+
+        jvec = jnp.asarray(vectors)
+        jn = jnp.asarray(self.neighbors)
+        start_ids = jnp.asarray([self.medoid], jnp.int32)
+        L = int(l_insert) if l_insert else max(self.L_build, self.R)
+        res = _batched_search(jvec, jn, jnp.asarray(vectors[new_ids]),
+                              start_ids, L=L, max_hops=max_hops)
+        cand_ids = np.concatenate(
+            [np.asarray(res.visited_ids), np.asarray(res.beam_ids)], axis=1
+        )
+        cand_dists = np.concatenate(
+            [np.asarray(res.visited_dists), np.asarray(res.beam_dists)], axis=1
+        )
+        if live_mask is not None:
+            live_mask = np.asarray(live_mask, bool)
+            dead = (cand_ids < 0) | ~live_mask[
+                np.clip(cand_ids, 0, live_mask.shape[0] - 1)
+            ]
+            cand_ids = np.where(dead, NO_ID, cand_ids).astype(np.int32)
+            cand_dists = np.where(dead, np.inf, cand_dists)
+        pruned = np.asarray(
+            _robust_prune_batch(
+                jnp.asarray(vectors[new_ids]), jnp.asarray(cand_ids),
+                jnp.asarray(cand_dists), jvec, r=self.R, alpha=self.alpha,
+            )
+        )
+        self.neighbors[new_ids] = pruned
+        _add_reverse_edges(vectors, jvec, self.neighbors, new_ids, pruned,
+                           self.R, self.alpha)
+
 
 @partial(jax.jit, static_argnames=("r", "alpha"))
 def _robust_prune_batch(p_vecs, cand_ids, cand_dists, vectors, r: int, alpha: float):

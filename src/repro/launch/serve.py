@@ -138,6 +138,20 @@ def build_argparser() -> argparse.ArgumentParser:
                          "loop iteration in one jit dispatch (answers "
                          "stay bit-identical at any batch; 1 = the "
                          "one-at-a-time loop)")
+    ap.add_argument("--insert-frac", type=float, default=None,
+                    help="fraction of the dataset held back at build time "
+                         "and streamed in as live Vamana inserts "
+                         "(core.mutate.MutableIndex); reports mutated-index "
+                         "recall vs a from-scratch rebuild (0 = frozen)")
+    ap.add_argument("--delete-frac", type=float, default=None,
+                    help="fraction of the base points tombstoned after the "
+                         "inserts land (never returned; consolidation "
+                         "splices and reclaims their rows)")
+    ap.add_argument("--ingest-rate", type=float, default=None,
+                    help="open-loop write rate (inserts/s) for the event "
+                         "simulator's ingest stage: writes contend with "
+                         "reads for SSD channels and NICs and the report "
+                         "gains freshness lag (needs --send-rate)")
     return ap
 
 
@@ -175,6 +189,11 @@ def config_from_args(args):
             "workers": args.exec_workers, "mode": args.exec_mode,
             "send_rate": args.exec_rate, "arrival": args.arrival,
             "n_arrivals": args.exec_arrivals, "batch": args.exec_batch,
+        },
+        mutate={
+            "insert_frac": args.insert_frac,
+            "delete_frac": args.delete_frac,
+            "ingest_rate": args.ingest_rate,
         },
     )
 
@@ -253,6 +272,23 @@ def main():
               f"{e['wire_batons']} batons in {e['wire_frames']} frames + "
               f"{e['local_handoffs']} same-worker short-circuits, "
               f"parity={'OK' if e['parity'] else 'MISMATCH'}")
+
+    if cfg.mutate.enabled or cfg.mutate.ingest_rate > 0:
+        m = dep.run_mutating()
+        print(f"  mutated ({m['n_inserted']} inserts, {m['n_deleted']} "
+              f"tombstones, {m['n_live']} live of {m['n_base']} base): "
+              f"recall@{cfg.search.k}={m['mut_recall']:.3f} vs "
+              f"rebuilt={m['rebuilt_recall']:.3f} "
+              f"(gap={m['recall_gap']:+.3f}), "
+              f"deleted_in_results={m['deleted_in_results']}, "
+              f"frozen_parity={'OK' if m['parity'] else 'MISMATCH'}")
+        if m["ingest_offered"] > 0:
+            print(f"  ingest @{m['ingest_rate']:.0f} writes/s: "
+                  f"{m['ingest_completed']}/{m['ingest_offered']} landed "
+                  f"({m['ingest_rejected']} rejected), "
+                  f"freshness_lag={m['freshness_lag_s']*1e3:.3f}ms "
+                  f"p99={m['freshness_p99_s']*1e3:.3f}ms, "
+                  f"read QPS under writes={m['sim_qps']:.0f}")
 
 
 if __name__ == "__main__":

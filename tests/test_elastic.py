@@ -206,6 +206,34 @@ def test_conservation_across_rehome_epoch(traced):
         assert src not in gains
 
 
+def test_conservation_with_ingest_across_rehome(traced):
+    """A re-home epoch carrying fresh inserts loses nothing on either
+    class: offered == completed + rejected for queries AND writes, and
+    the mixed run is same-seed deterministic (ISSUE-10 satellite)."""
+    wl = cluster.make_workload(len(traced), 2500.0, 600, "burst", seed=5)
+    t_mid = float(wl.times_s[300])
+    sched = ftel.elastic_schedule([(0.0, 2), (t_mid, 4)], 4)
+    params = cluster.SimParams(schedule=sched, migration_bytes=3e5,
+                               ingest_rate=800.0, ingest_seed=11,
+                               record_events=True)
+    r1 = cluster.simulate(traced, 4, wl, params)
+    r2 = cluster.simulate(traced, 4, wl, params)
+    # queries: every arrival completes exactly once across the epoch
+    assert r1.completed == r1.offered == 600
+    assert not np.isnan(r1.latencies_s).any()
+    # writes: the ingest class conserves too, and some landed mid-rehome
+    ing = r1.diag["ingest"]
+    assert ing["offered"] == ing["completed"] + ing["rejected"] > 0
+    assert ing["completed"] > 0
+    assert ing["mean_lag_s"] > 0
+    # same-seed determinism over the full mixed event log
+    assert r1.events == r2.events
+    assert r1.diag["ingest"] == r2.diag["ingest"]
+    np.testing.assert_array_equal(r1.latencies_s, r2.latencies_s)
+    # the rehomes still happened under write load
+    assert r1.diag["rehome_events"] == len(sched.moves(1)) > 0
+
+
 def test_scale_up_raises_post_event_service_rate(traced):
     """Driving above the 2-server knee: after the 2→4 scale-up the
     windowed completion rate exceeds the pre-event rate (the fig18

@@ -1,0 +1,260 @@
+"""Live-mutation battery (ISSUE-10): graph invariants under seeded
+insert/delete/consolidate interleavings, oracle parity against a
+from-scratch rebuild, deleted-never-returned, and the config surface.
+
+Invariant semantics (FreshDiskANN adapted — see ``core/mutate.py``):
+a tombstoned node stays *traversable* until consolidation, so edges into
+tombstones are legal mid-stream; edges into *unallocated* rows are never
+legal; after a final consolidation no edge may target any dead row.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+from repro.api import Deployment, MUTATE_FIELDS, MutateSpec, ServeConfig
+from repro.configs.batann_serve import IndexSpec, SimSpec
+from repro.core import baton, mutate, ref
+from repro.core.state import NO_ID
+from repro.data import synth
+
+# ---------------------------------------------------------------------------
+# shared small substrate for the property tests (module-level, not a pytest
+# fixture: the hypothesis stub can't mix fixtures into @given)
+# ---------------------------------------------------------------------------
+
+_N_BASE = 320
+_N_POOL = 80
+_SMALL = {}
+
+
+def _small():
+    if not _SMALL:
+        ds = synth.make_dataset("deep", n=_N_BASE + _N_POOL, n_queries=8,
+                                seed=1)
+        idx = baton.build_index(
+            ds.vectors[:_N_BASE], p=3, r=16, l_build=24, pq_m=8, pq_k=64,
+            head_fraction=0.05, seed=0)
+        _SMALL["ds"] = ds
+        _SMALL["idx"] = idx
+        _SMALL["pool"] = np.ascontiguousarray(ds.vectors[_N_BASE:],
+                                              np.float32)
+    return _SMALL["ds"], _SMALL["idx"], _SMALL["pool"]
+
+
+def _check_invariants(mi: mutate.MutableIndex, consolidated: bool = False):
+    idx = mi.index
+    g = idx.graph
+    n = mi.n
+    nbrs = g.neighbors
+    assert nbrs.shape == (n, g.R)                 # degree cap = row width
+    alloc = np.where(mi.allocated)[0]
+    rows = nbrs[alloc]
+    tgt = rows[rows >= 0]
+    assert rows.min(initial=0) >= NO_ID           # -1 is the only sentinel
+    if tgt.size:
+        assert tgt.max() < n                      # in-range targets
+        assert not (rows == alloc[:, None]).any()  # no self-edges
+        assert mi.allocated[tgt].all()            # never into unallocated
+        if consolidated:
+            assert mi.live_mask[tgt].all()        # post-merge: none dead
+    # per-row uniqueness of real neighbors (prune/reverse/force-link all
+    # preserve it)
+    for row in rows:
+        real = row[row >= 0]
+        assert real.size == np.unique(real).size
+    # reclaimed / never-allocated rows carry no state
+    un = np.where(~mi.allocated)[0]
+    assert (nbrs[un] == NO_ID).all()
+    assert (idx.node2part[un] == -1).all()
+    assert (idx.node2local[un] == -1).all()
+    # medoid is a live in-range row
+    assert 0 <= g.medoid < n and mi.live_mask[g.medoid]
+    # every live point reachable from the medoid over traversable rows
+    reach = mutate.reachable_mask(nbrs, g.medoid, mi.allocated)
+    assert (reach | ~mi.live_mask).all()
+    # the partitioned sector layout mirrors the graph for allocated rows
+    pn = idx.part_neighbors[idx.node2part[alloc], idx.node2local[alloc]]
+    np.testing.assert_array_equal(pn, nbrs[alloc])
+    # head entry points always route somewhere traversable
+    hs = np.asarray(idx.head_sample_ids)
+    assert mi.allocated[hs].all()
+
+
+# ---------------------------------------------------------------------------
+# property: seeded interleavings keep every invariant
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_interleaving_invariants(seed):
+    _, idx, pool = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    rng = np.random.default_rng(seed)
+    ops = ("insert", "delete", "consolidate")
+    for _ in range(5):
+        op = ops[int(rng.integers(0, 3))]
+        if op == "insert":
+            # fixed batch size -> a handful of jit shapes across examples
+            mi.insert(pool[rng.choice(len(pool), 8, replace=False)])
+        elif op == "delete":
+            live = mi.live_ids()
+            k = min(int(rng.integers(1, 13)), live.size - 1)
+            mi.delete(rng.choice(live, k, replace=False))
+        else:
+            mi.consolidate()
+        _check_invariants(mi)
+    mi.consolidate()
+    _check_invariants(mi, consolidated=True)
+
+
+def test_medoid_delete_recovers():
+    _, idx, pool = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    for _ in range(3):                 # survive repeated medoid loss
+        mi.delete(np.asarray([mi.index.graph.medoid]))
+        _check_invariants(mi)
+    mi.consolidate()
+    _check_invariants(mi, consolidated=True)
+
+
+def test_free_rows_are_reused():
+    _, idx, pool = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    n0 = mi.n
+    dele = mi.live_ids()[:16]
+    mi.delete(dele)
+    assert mi.consolidate() == 16
+    gids = mi.insert(pool[:16])
+    assert mi.n == n0                         # reclaimed rows, no growth
+    assert set(gids.tolist()) == set(dele.tolist())
+    _check_invariants(mi)
+    # growth path: more inserts than free rows
+    mi.insert(pool[16:40])
+    assert mi.n == n0 + 24
+    _check_invariants(mi)
+
+
+def test_inserted_points_are_findable():
+    """Searching for an inserted vector returns its own id at rank 0."""
+    _, idx, pool = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    gids = mi.insert(pool[:16])
+    params = baton.BatonParams(L=24, W=4, k=4, pool=64, slots=8, n_starts=4)
+    ids, dists, _ = mi.search(pool[:16], params)
+    assert (ids[:, 0] == gids).all()
+    np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deleted-never-returned + oracle parity (exact cross-check)
+# ---------------------------------------------------------------------------
+
+
+def test_deleted_never_returned():
+    ds, idx, _ = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    rng = np.random.default_rng(3)
+    dele = rng.choice(_N_BASE, 60, replace=False)
+    mi.delete(dele)
+    params = baton.BatonParams(L=24, W=4, k=10, pool=64, slots=8, n_starts=4)
+    q = np.asarray(ds.queries, np.float32)
+    for phase in ("tombstoned", "consolidated"):
+        ids, _, _ = mi.search(q, params)
+        returned = ids[ids >= 0]
+        assert not np.isin(returned, dele).any(), phase
+        # exact-oracle cross-check on the live set: results are a subset
+        # of live ids and recall holds up
+        live = mi.live_ids()
+        gt = live[ref.brute_force_knn(mi.vectors[live], q, 10)]
+        assert np.isin(returned, live).all(), phase
+        assert ref.recall_at_k(ids, gt, 10) >= 0.85, phase
+        mi.consolidate()
+
+
+def test_mutated_recall_vs_rebuilt_oracle():
+    """Streamed-in points must serve within a pinned tolerance of a
+    from-scratch rebuild on the same live set (exact ground truth)."""
+    ds, idx, pool = _small()
+    mi = mutate.MutableIndex(idx, copy=True)
+    mi.insert(pool[:40])
+    rng = np.random.default_rng(5)
+    mi.delete(rng.choice(_N_BASE, 30, replace=False))
+    mi.consolidate()
+    params = baton.BatonParams(L=24, W=4, k=10, pool=64, slots=8, n_starts=4)
+    q = np.asarray(ds.queries, np.float32)
+    ids, _, _ = mi.search(q, params)
+    live = mi.live_ids()
+    gt_local = ref.brute_force_knn(mi.vectors[live], q, 10)
+    mut_recall = ref.recall_at_k(ids, live[gt_local], 10)
+    rebuilt = baton.build_index(mi.vectors[live], p=3, r=16, l_build=24,
+                                pq_m=8, pq_k=64, head_fraction=0.05, seed=0)
+    rids, _, _ = baton.run_simulated(rebuilt, q, params)
+    rebuilt_recall = ref.recall_at_k(rids, gt_local, 10)
+    assert mut_recall >= rebuilt_recall - 0.05, (mut_recall, rebuilt_recall)
+
+
+# ---------------------------------------------------------------------------
+# api surface: run_mutating + MutateSpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_run_mutating_report(baton_index, dataset):
+    cfg = ServeConfig(
+        name="mutate-test",
+        index=IndexSpec(p=4, pq_m=16, pq_k=128, head_fraction=0.03),
+        mutate=MutateSpec(insert_frac=0.1, delete_frac=0.05,
+                          recall_tol=0.1))
+    from repro.api.engine import BatonEngine
+    dep = Deployment.from_parts(cfg, BatonEngine(index=baton_index),
+                                dataset=dataset)
+    m = dep.run_mutating()
+    assert tuple(m.keys()) == MUTATE_FIELDS       # pinned schema, in order
+    assert m["enabled"] and m["parity"]
+    assert m["deleted_in_results"] == 0
+    assert m["n_inserted"] == int(len(dataset.vectors) * 0.1)
+    assert m["mut_recall"] >= m["rebuilt_recall"] - cfg.mutate.recall_tol
+    # disabled path: same schema, parity still checked
+    cfg0 = dataclasses.replace(cfg, mutate=MutateSpec())
+    m0 = Deployment.from_parts(cfg0, BatonEngine(index=baton_index),
+                               dataset=dataset).run_mutating()
+    assert tuple(m0.keys()) == MUTATE_FIELDS
+    assert not m0["enabled"] and m0["parity"]
+    assert m0["n_inserted"] == 0 and np.isnan(m0["mut_recall"])
+
+
+def test_mutate_spec_validation():
+    with pytest.raises(ValueError):
+        MutateSpec(insert_frac=1.0)               # frac in [0, 1)
+    with pytest.raises(ValueError):
+        MutateSpec(delete_frac=-0.1)
+    with pytest.raises(ValueError):
+        MutateSpec(ingest_rate=-1.0)
+    with pytest.raises(ValueError):               # ingest needs the sim
+        ServeConfig(mutate=MutateSpec(insert_frac=0.1, ingest_rate=100.0))
+    with pytest.raises(ValueError):               # baton engine only
+        ServeConfig(index=IndexSpec(engine="exact"),
+                    mutate=MutateSpec(insert_frac=0.1))
+    with pytest.raises(ValueError):               # sector layouts frozen
+        ServeConfig(index=IndexSpec(codes_mode="sector"),
+                    mutate=MutateSpec(insert_frac=0.1))
+    # round-trip: the mutate section survives JSON
+    cfg = ServeConfig(
+        sim=SimSpec(send_rate=1000.0),
+        mutate=MutateSpec(insert_frac=0.1, delete_frac=0.05,
+                          ingest_rate=200.0))
+    assert ServeConfig.from_json(cfg.to_json()) == cfg
+    assert cfg.mutate.enabled
+    assert not MutateSpec().enabled
+
+
+def test_sector_mode_index_rejected():
+    ds, _, _ = _small()
+    idx = baton.build_index(ds.vectors[:_N_BASE], p=3, r=16, l_build=24,
+                            pq_m=8, pq_k=64, head_fraction=0.05, seed=0,
+                            codes_mode="sector")
+    with pytest.raises(NotImplementedError):
+        mutate.MutableIndex(idx)
